@@ -1,0 +1,46 @@
+"""Paper Figs 4-6: speedup, S/k and α_eff vs vector length.
+
+Machine-measured points for n ≤ 128 (validated == analytic), analytic
+curve beyond — exactly the paper's saturation story: S_FOR → 30/11,
+S_SUMUP → 30, α_eff → 1 while S/k turns around at 31 cores (Fig 6).
+"""
+import numpy as np
+
+from repro.core import programs, run_program, timing
+
+MACHINE_NS = [1, 2, 4, 6, 12, 24, 48, 96]
+ANALYTIC_NS = [200, 1000, 10_000, 100_000]
+
+
+def run() -> list[str]:
+    rows = ["fig4_6.header,n,mode,source,clocks,speedup,s_over_k,alpha_eff"]
+    for n in MACHINE_NS:
+        vec = np.arange(1, n + 1, dtype=np.int32)
+        for mode in ("NO", "FOR", "SUMUP"):
+            r = run_program(programs.PROGRAMS[mode](n),
+                            programs.mem_image(vec))
+            assert int(r.clocks) == int(timing.exec_clocks(n, mode)), \
+                (n, mode, int(r.clocks))
+            s = float(timing.exec_clocks(n, "NO")) / int(r.clocks)
+            k = int(r.peak_cores)
+            a = float(timing.alpha_eff(k, s))
+            rows.append(f"fig4_6,{n},{mode},machine,{int(r.clocks)},"
+                        f"{s:.3f},{s / k:.3f},{a:.3f}")
+    for n in ANALYTIC_NS:
+        for mode in ("FOR", "SUMUP"):
+            s = float(timing.speedup(n, mode))
+            k = int(timing.cores_used(n, mode))
+            a = float(timing.alpha_eff(k, s))
+            rows.append(f"fig4_6,{n},{mode},analytic,"
+                        f"{int(timing.exec_clocks(n, mode))},"
+                        f"{s:.3f},{s / k:.3f},{a:.3f}")
+    # saturation assertions (paper §6.1)
+    assert abs(timing.speedup(10**7, 'FOR') - 30 / 11) < 1e-3
+    assert abs(timing.speedup(10**7, 'SUMUP') - 30) < 1e-2
+    rows.append("fig4_6.saturation,inf,FOR,analytic,,2.727,,")
+    rows.append("fig4_6.saturation,inf,SUMUP,analytic,,30.000,,")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,116 @@
+"""Perf hillclimbing harness: re-lower one cell with knobs, print terms.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.hillclimb --arch qwen3-moe-30b-a3b \
+      --shape train_4k [--microbatch N] [--gather-once] [--top 10]
+
+Each invocation is one hypothesis→change→measure cycle of EXPERIMENTS.md
+§Perf: it prints the three roofline terms and the top collective
+contributors (op, per-device bytes, trip multiplier) so the next
+hypothesis is grounded in the lowered program, not guesswork.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs import SHAPES, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.runtime.accounting import hlo_collectives, jaxpr_cost
+from repro.runtime.supervisor import ClusterSupervisor
+
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+
+
+def measure(arch, shape_name, *, multi_pod=False, top=10, **sup_kwargs):
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sup = ClusterSupervisor(mesh, cfg, shape, **sup_kwargs)
+    plan = sup.plan()
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(plan.step_fn, in_shardings=plan.in_shardings,
+                          out_shardings=plan.out_shardings,
+                          donate_argnums=plan.donate_argnums) \
+            .lower(*plan.abstract_args)
+        compiled = lowered.compile()
+        jcost = jaxpr_cost(plan.step_fn, *plan.abstract_args)
+    coll = hlo_collectives(compiled.as_text())
+    try:
+        mem = compiled.memory_analysis()
+        temp = int(mem.temp_size_in_bytes)
+        args_b = int(mem.argument_size_in_bytes)
+    except Exception:
+        temp, args_b = -1, -1
+    chips = mesh.devices.size
+    terms = {
+        "compute": jcost["flops"] / (chips * PEAK),
+        "memory": jcost["bytes"] / (chips * HBM),
+        "collective": coll["total_bytes"] / LINK,
+    }
+    dom = max(terms, key=terms.get)
+    out = {
+        "arch": arch, "shape": shape_name, "knobs": sup_kwargs,
+        "terms": terms, "dominant": dom,
+        "bound_s": max(terms.values()),
+        "roofline_fraction": terms["compute"] / max(terms.values()),
+        "flops": jcost["flops"], "coll_bytes": coll["total_bytes"],
+        "mem_temp": temp, "mem_args": args_b,
+        "compile_s": round(time.time() - t0, 1),
+        "top_collectives": coll["top"][:top],
+        "microbatches": sup.n_microbatch,
+    }
+    return out
+
+
+def pretty(r):
+    t = r["terms"]
+    print(f"== {r['arch']} × {r['shape']}  knobs={r['knobs']} "
+          f"(mb={r['microbatches']}) ==")
+    print(f"  compute {t['compute']:9.3f}s | memory {t['memory']:9.3f}s | "
+          f"collective {t['collective']:9.3f}s  -> dominant: {r['dominant']}"
+          f"  roofline_frac={r['roofline_fraction']:.3f}")
+    print(f"  temp/dev {r['mem_temp'] / 1e9:.2f} GB, args/dev "
+          f"{r['mem_args'] / 1e9:.2f} GB, compile {r['compile_s']}s")
+    for e in r["top_collectives"]:
+        print(f"    {e['op']:<20} ×{e['mult']:<8.0f} "
+              f"{e['bytes'] / 1e9:8.2f} GB  {e['shape']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--gather-once", action="store_true")
+    ap.add_argument("--remat",
+                    choices=["full", "none", "moe_save", "block_save"],
+                    default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=10)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+
+    kw = {}
+    if args.microbatch is not None:
+        kw["n_microbatch"] = args.microbatch
+    if args.gather_once:
+        kw["gather_once"] = True
+    if args.remat is not None:
+        kw["remat"] = {"full": True, "none": False, "moe_save": "moe_save",
+                       "block_save": "block_save"}[args.remat]
+    r = measure(args.arch, args.shape, multi_pod=args.multi_pod,
+                top=args.top, **kw)
+    pretty(r)
+    if args.json_out:
+        with open(args.json_out, "a") as f:
+            f.write(json.dumps(r) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Kernel benches: interpret-mode timing + analytic intensity per kernel.
+
+Wall time in interpret mode is a CPU emulation number (the TPU target is
+validated structurally) — the derived column is the kernel's arithmetic
+intensity (FLOPs/byte) against the v5e ridge point (197e12/819e9 ≈ 240),
+which says whether the kernel is compute- or bandwidth-bound at spec.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RIDGE = 197e12 / 819e9
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list[str]:
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.massmap import massmap
+    from repro.kernels.ssd_scan import ssd_chunked_kernel
+    from repro.kernels.sumup import sumup
+
+    rows = ["kernels.header,name,shape,us_per_call_interp,flops,bytes,"
+            "intensity,bound_at_spec"]
+    key = jax.random.PRNGKey(0)
+
+    # sumup: N floats -> 1; intensity ~ 1/4 (stream-bound by design)
+    x = jax.random.normal(key, (8, 8192), jnp.float32)
+    us = _time(sumup, x)
+    fl, by = 8 * 8192, 8 * 8192 * 4
+    rows.append(f"kernels,sumup,(8×8192),{us:.0f},{fl},{by},"
+                f"{fl / by:.3f},{'memory' if fl / by < RIDGE else 'compute'}")
+
+    # massmap: fused scale-bias-act
+    x = jax.random.normal(key, (256, 1024), jnp.float32)
+    sc = jnp.ones((1024,))
+    bi = jnp.zeros((1024,))
+    us = _time(massmap, x, sc, bi)
+    fl, by = 4 * 256 * 1024, 2 * 256 * 1024 * 4
+    rows.append(f"kernels,massmap,(256×1024),{us:.0f},{fl},{by},"
+                f"{fl / by:.3f},{'memory' if fl / by < RIDGE else 'compute'}")
+
+    # flash attention: causal S=512 D=64
+    b, h, s, d = 1, 4, 512, 64
+    q = jax.random.normal(key, (b, h, s, d), jnp.bfloat16)
+    k = jax.random.normal(key, (b, h, s, d), jnp.bfloat16)
+    v = jax.random.normal(key, (b, h, s, d), jnp.bfloat16)
+    us = _time(flash_attention, q, k, v)
+    fl = 4 * b * h * s * s * d / 2
+    by = 4 * b * h * s * d * 2
+    rows.append(f"kernels,flash_attention,(1×4×512×64),{us:.0f},{fl:.0f},"
+                f"{by},{fl / by:.1f},"
+                f"{'memory' if fl / by < RIDGE else 'compute'}")
+
+    # ssd_scan: chunked SSD
+    bs, s, hh, p, n, g = 1, 256, 4, 64, 32, 1
+    ks = jax.random.split(key, 6)
+    xx = jax.random.normal(ks[0], (bs, s, hh, p), jnp.float32)
+    dt = jax.random.normal(ks[1], (bs, s, hh)) * 0.3
+    a_log = jax.random.normal(ks[2], (hh,)) * 0.3
+    bm = jax.random.normal(ks[3], (bs, s, g, n)) * 0.5
+    cm = jax.random.normal(ks[4], (bs, s, g, n)) * 0.5
+    dsk = jax.random.normal(ks[5], (hh,))
+    dtb = jnp.zeros((hh,))
+    us = _time(lambda *a: ssd_chunked_kernel(*a, chunk=64),
+               xx, dt, a_log, bm, cm, dsk, dtb)
+    q_ = 64
+    fl = 2 * bs * hh * s * q_ * (n + p) + 4 * bs * s * hh * p * n
+    by = bs * s * hh * (p + 2 * n) * 4 * 2
+    rows.append(f"kernels,ssd_scan,(1×256×4×64),{us:.0f},{fl:.0f},{by},"
+                f"{fl / by:.1f},{'memory' if fl / by < RIDGE else 'compute'}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

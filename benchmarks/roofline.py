@@ -1,0 +1,115 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape) on the single-pod mesh:
+  compute term    = global_flops            / (chips × 197 TF/s bf16)
+  memory term     = global_bytes_prefusion  / (chips × 819 GB/s HBM)
+  collective term = coll_bytes_per_device   /          (50 GB/s link)
+plus the dominant term, MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE),
+the MODEL_FLOPS / HLO_FLOPs usefulness ratio, and a one-line lever note.
+
+Caveats recorded with the numbers: FLOPs are a loop-aware jaxpr count
+(global, exact for matmuls); bytes are the pre-fusion jaxpr estimate (an
+upper bound on HBM traffic — XLA fusion reduces it); collective bytes are
+per-device HLO result sizes with while-loop multipliers.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import SHAPES, get_arch
+from repro.models import model as model_lib
+
+PEAK_FLOPS = 197e12        # bf16 per chip (TPU v5e)
+HBM_BW = 819e9             # B/s per chip
+LINK_BW = 50e9             # B/s per ICI link
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun.json")
+
+
+def _lever(dom: str, kind: str, cell: dict) -> str:
+    if dom == "collective":
+        return ("cut FSDP re-gathers (remat policy / weight-stationary "
+                "microbatching) and overlap the EP all-to-all"
+                if kind == "train" else
+                "shrink per-step resharding: keep KV/state sharded in place")
+    if dom == "memory":
+        return ("raise arithmetic intensity: fuse elementwise chains, "
+                "widen microbatches" if kind == "train" else
+                "decode is bandwidth-bound by design: batch more requests "
+                "per step to amortize the weight sweep")
+    return ("good place to be: push MXU utilization via larger per-device "
+            "tiles (fewer, bigger matmuls)")
+
+
+def analyze(cells: list[dict]) -> list[dict]:
+    out = []
+    for c in cells:
+        if c.get("status") != "ok" or c.get("mesh") != "pod16x16":
+            continue
+        cfg = get_arch(c["arch"])
+        shape = SHAPES[c["shape"]]
+        chips = c["n_devices"]
+        tokens = shape.global_batch * shape.seq_len \
+            if shape.kind != "decode" else shape.global_batch
+        t_compute = c["global_flops"] / (chips * PEAK_FLOPS)
+        t_memory = c["global_bytes_prefusion"] / (chips * HBM_BW)
+        t_coll = c["collectives"]["total_bytes"] / LINK_BW
+        terms = {"compute": t_compute, "memory": t_memory,
+                 "collective": t_coll}
+        dom = max(terms, key=terms.get)
+        mf = model_lib.model_flops(cfg, tokens, shape.kind)
+        bound = max(terms.values())
+        out.append({
+            "arch": c["arch"], "shape": c["shape"], "kind": shape.kind,
+            "chips": chips,
+            "t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dom,
+            "model_flops": mf,
+            "useful_ratio": mf / max(c["global_flops"], 1.0),
+            # roofline fraction: achievable-compute share of the bound
+            "roofline_fraction": t_compute / bound if bound else 0.0,
+            "lever": _lever(dom, shape.kind, c),
+        })
+    return out
+
+
+def run() -> list[str]:
+    if not os.path.exists(ARTIFACT):
+        return [f"roofline,SKIPPED,no artifact at {ARTIFACT} "
+                "(run python -m repro.launch.dryrun --all first)"]
+    cells = json.load(open(ARTIFACT))
+    rows = ["roofline.header,arch,shape,kind,chips,t_compute_s,t_memory_s,"
+            "t_collective_s,dominant,model_flops,useful_ratio,"
+            "roofline_fraction,lever"]
+    for r in analyze(cells):
+        rows.append(
+            f"roofline,{r['arch']},{r['shape']},{r['kind']},{r['chips']},"
+            f"{r['t_compute_s']:.4g},{r['t_memory_s']:.4g},"
+            f"{r['t_collective_s']:.4g},{r['dominant']},"
+            f"{r['model_flops']:.4g},{r['useful_ratio']:.3f},"
+            f"{r['roofline_fraction']:.3f},\"{r['lever']}\"")
+    return rows
+
+
+def markdown_table(path_out: str | None = None) -> str:
+    cells = json.load(open(ARTIFACT))
+    rs = analyze(cells)
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | MODEL/HLO | roofline frac | lever |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rs:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3g} | "
+            f"{r['t_memory_s']:.3g} | {r['t_collective_s']:.3g} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} | {r['lever']} |")
+    md = "\n".join(lines)
+    if path_out:
+        with open(path_out, "w") as f:
+            f.write(md + "\n")
+    return md
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

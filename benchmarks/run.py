@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure + system benches.
+
+  table1    — paper Table 1 (clock-exact reproduction)
+  fig456    — paper Figs 4/5/6 (speedup, S/k, α_eff vs vector length)
+  roofline  — §Roofline terms per (arch × shape) from the dry-run artifact
+  kernels   — per-kernel timing + arithmetic intensity vs the v5e ridge
+  e2e       — tiny end-to-end train throughput + slot-pool serving
+
+Prints ``name,...`` CSV.  ``python -m benchmarks.run [section ...]``.
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import e2e_bench, fig456, kernels_bench, roofline, table1
+    sections = {
+        "table1": table1.run,
+        "fig456": fig456.run,
+        "roofline": roofline.run,
+        "kernels": kernels_bench.run,
+        "e2e": e2e_bench.run,
+    }
+    want = sys.argv[1:] or list(sections)
+    failures = 0
+    for name in want:
+        try:
+            for line in sections[name]():
+                print(line)
+        except Exception:
+            failures += 1
+            print(f"{name},ERROR")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

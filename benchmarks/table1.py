@@ -1,0 +1,29 @@
+"""Paper Table 1: sumup on the clock-level machine, NO/FOR/SUMUP."""
+import time
+
+import numpy as np
+
+from repro.core import TABLE1, alpha_eff, programs, run_program, timing
+
+VEC = [0xD, 0xC0, 0xB00, 0xA000, 5, 7]
+
+
+def run() -> list[str]:
+    rows = ["table1.header,n,mode,clocks,clocks_paper,cores,cores_paper,"
+            "speedup,s_over_k,alpha_eff,match"]
+    for n, mode, t_exp, k_exp, s_exp, sk_exp, a_exp in TABLE1:
+        t0 = time.perf_counter()
+        r = run_program(programs.PROGRAMS[mode](n), programs.mem_image(VEC[:n]))
+        us = (time.perf_counter() - t0) * 1e6
+        s = timing.exec_clocks(n, "NO") / int(r.clocks)
+        k = int(r.peak_cores)
+        a = float(alpha_eff(k, s))
+        match = int(r.clocks) == t_exp and k == k_exp
+        rows.append(
+            f"table1,{n},{mode},{int(r.clocks)},{t_exp},{k},{k_exp},"
+            f"{s:.2f},{s / k:.2f},{a:.2f},{'OK' if match else 'FAIL'}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

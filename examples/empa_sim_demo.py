@@ -1,0 +1,38 @@
+"""The paper, live: run Listing 1 in NO / FOR / SUMUP on the EMPA machine.
+
+    PYTHONPATH=src python examples/empa_sim_demo.py
+"""
+import numpy as np
+
+from repro.core import alpha_eff, programs, run_program, timing
+
+
+def main():
+    vec = [0xD, 0xC0, 0xB00, 0xA000]
+    print("vector:", [hex(v) for v in vec], "sum:", hex(sum(vec)))
+    print(f"{'mode':>6} {'clocks':>7} {'cores':>6} {'speedup':>8} "
+          f"{'S/k':>6} {'alpha_eff':>9}")
+    base = None
+    for mode in ("NO", "FOR", "SUMUP"):
+        r = run_program(programs.PROGRAMS[mode](len(vec)),
+                        programs.mem_image(vec))
+        assert int(r.result) == sum(vec)
+        clocks, k = int(r.clocks), int(r.peak_cores)
+        base = base or clocks
+        s = base / clocks
+        print(f"{mode:>6} {clocks:>7} {k:>6} {s:>8.2f} {s / k:>6.2f} "
+              f"{float(alpha_eff(k, s)):>9.2f}")
+
+    print("\nsaturation (paper §6.1): S_FOR -> 30/11 = "
+          f"{timing.speedup(10**6, 'FOR'):.3f}, "
+          f"S_SUMUP -> {timing.speedup(10**6, 'SUMUP'):.1f}")
+
+    print("\nnested QTs (§3): 3-level fork tree, fanout 2")
+    r = run_program(programs.qt_tree(3, 2), ())
+    print(f"  leaves counted: {int(r.result)} (expect 8); "
+          f"QTs created: {int(r.created_total)}; "
+          f"peak cores: {int(r.peak_cores)}")
+
+
+if __name__ == "__main__":
+    main()

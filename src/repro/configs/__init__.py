@@ -1,0 +1,3 @@
+from repro.configs.base import (  # noqa: F401
+    ARCH_IDS, SHAPES, ArchConfig, ShapeConfig, get_arch, reduced, registry,
+    shape_applicable)

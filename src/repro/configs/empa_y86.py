@@ -1,0 +1,15 @@
+"""The paper's own workload: EMPA Y86 `sumup` (Listing 1) on the clock-level
+machine simulator — selectable alongside the LM architectures so the
+benchmark harness treats the reproduction as a first-class config."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class EmpaY86Config:
+    name: str = "empa-y86"
+    max_cores: int = 32
+    modes: tuple = ("NO", "FOR", "SUMUP")
+    vector_lengths: tuple = (1, 2, 4, 6)
+
+
+CONFIG = EmpaY86Config()

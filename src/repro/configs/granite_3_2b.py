@@ -1,0 +1,13 @@
+"""granite-3-2b: 40L dense GQA.  [hf:ibm-granite/granite-3.0-2b-base]
+
+vocab=49155 is odd (3×16385): the vocab dimension falls back to
+replication; d_model keeps the FSDP shard.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-3-2b", family="dense",
+    n_layers=40, d_model=2048, n_heads=32, n_kv_heads=8,
+    d_ff=8192, vocab=49155, head_dim=64,
+    rope_theta=10_000.0,
+)

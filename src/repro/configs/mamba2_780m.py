@@ -1,0 +1,17 @@
+"""mamba2-780m: 48L pure SSD (state-space duality), attention-free.
+[arXiv:2405.21060]
+
+d_ff=0 / attention-free: EMPA's attention-agnostic runtime applies
+unchanged; the SSD chunk scan is the SUMUP-mode kernel (children=chunks,
+parent=state carry).  O(1)-state decode makes long_500k runnable.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-780m", family="ssm",
+    n_layers=48, d_model=1536, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab=50280, head_dim=1,
+    ssm_state=128, ssm_headdim=64, ssm_expand=2, ssm_conv=4, ssm_ngroups=1,
+    subquadratic=True,
+    tie_embeddings=True,
+)

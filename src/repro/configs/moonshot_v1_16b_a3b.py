@@ -1,0 +1,13 @@
+"""moonshot-v1-16b-a3b (Moonlight-16B-A3B): 48L MoE, 64 experts top-6.
+
+[hf:moonshotai/Moonlight-16B-A3B; hf]  DeepSeek-style: 2 shared experts.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="moonshot-v1-16b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab=163840, head_dim=128,
+    n_experts=64, top_k=6, n_shared_experts=2,
+    rope_theta=50_000.0,
+)

@@ -1,0 +1,14 @@
+"""pixtral-12b backbone: 40L decoder (mistral-nemo).  [hf:mistralai/Pixtral-12B-2409]
+
+Pixtral-ViT frontend is a STUB per assignment: input_specs() provides
+precomputed patch embeddings projected into the decoder.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="pixtral-12b", family="vlm",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=131072, head_dim=128,
+    frontend="vision", frontend_dim=1024, n_frontend_tokens=256,
+    rope_theta=1_000_000_000.0,
+)

@@ -1,0 +1,10 @@
+"""starcoder2-3b: 30L dense GQA (24 heads kv=2), RoPE. [arXiv:2402.19173]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-3b", family="dense",
+    n_layers=30, d_model=3072, n_heads=24, n_kv_heads=2,
+    d_ff=12288, vocab=49152, head_dim=128,
+    rope_theta=999_999.0,
+    act="gelu",
+)

@@ -1,0 +1,16 @@
+"""starcoder2-7b: 32L dense GQA (36 heads), RoPE.  [arXiv:2402.19173; hf]
+
+36 heads / 4 KV heads are NOT divisible by the 16-wide model axis: the
+sharding rules fall back to replicated attention weights (FSDP-only) while
+the MLP keeps tensor parallelism on d_ff=18432 (divisible).  See
+DESIGN.md §5.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-7b", family="dense",
+    n_layers=32, d_model=4608, n_heads=36, n_kv_heads=4,
+    d_ff=18432, vocab=49152, head_dim=128,
+    rope_theta=1_000_000.0,
+    act="gelu",
+)

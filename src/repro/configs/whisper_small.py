@@ -1,0 +1,15 @@
+"""whisper-small backbone: 12L enc + 12L dec, d=768.  [arXiv:2212.04356]
+
+Conv audio frontend is a STUB per assignment: input_specs() provides
+precomputed frame embeddings (B, S, frontend_dim).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-small", family="encdec",
+    n_layers=24, d_model=768, n_heads=12, n_kv_heads=12,
+    d_ff=3072, vocab=51865, head_dim=64,
+    enc_layers=12, dec_layers=12,
+    frontend="audio", frontend_dim=768,
+    act="gelu", pos_embed="learned", max_position=65536,
+)

@@ -1,0 +1,17 @@
+"""zamba2-1.2b: 38 Mamba2 blocks + ONE shared attention+MLP block applied
+every 6 layers.  [arXiv:2411.15242; hf]
+
+The shared block is EMPA's rented core: one weight set, many QTs.  Shared
+block simplification vs. the HF checkpoint: no per-application LoRA
+deltas (noted in DESIGN.md §Arch-applicability).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-1.2b", family="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab=32000, head_dim=64,
+    ssm_state=64, ssm_headdim=64, ssm_expand=2, ssm_conv=4, ssm_ngroups=1,
+    shared_attn_every=6,
+    subquadratic=True,
+)

@@ -1,0 +1,13 @@
+# The paper's primary contribution: the EMPA model.
+#   isa        — Y86 + EMPA metainstruction encoding
+#   machine    — clock-level jittable multi-core machine + supervisor
+#   supervisor — reusable SV pool semantics (serving slots, elastic pool)
+#   qt         — Quasi-Thread graphs (compile-time parallelization metadata)
+#   timing     — analytic timing model + alpha_eff (Eq. 1)
+#   programs   — the paper's workloads (Listing 1 in NO / FOR / SUMUP)
+from repro.core import isa, machine, programs, qt, supervisor, timing  # noqa: F401
+from repro.core.machine import MachineResult, run_program  # noqa: F401
+from repro.core.supervisor import CorePool  # noqa: F401
+from repro.core.timing import (  # noqa: F401
+    TABLE1, alpha_eff, alpha_eff_mode, cores_used, exec_clocks, s_over_k,
+    speedup)

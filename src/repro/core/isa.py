@@ -1,0 +1,213 @@
+"""Y86 + EMPA metainstruction ISA.
+
+The paper (§5) writes its workloads in Y86 assembly "extended with EMPA
+metainstructions".  We keep the Y86 register model and mnemonics but use a
+fixed-width structured encoding (op, a, b, imm, imm2) instead of the
+variable-length byte encoding — the simulator is clock-level, not
+byte-level, and the paper's own timing is per-instruction.
+
+Normal instructions execute on a core and cost ``COST[op]`` supervisor
+clocks.  Metainstructions are *detected at pre-fetch* and executed by the
+supervisor (paper §4.5): they cost the issuing core ``META_COST[op]``
+clocks (0 for QTERM — the 'Meta' signal is raised during pre-fetch and the
+SV handles termination while the core's last payload clock completes).
+"""
+from __future__ import annotations
+
+import enum
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+NREGS = 8
+# Y86 register file order.
+EAX, ECX, EDX, EBX, ESP, EBP, ESI, EDI = range(8)
+REG_NAMES = ["%eax", "%ecx", "%edx", "%ebx", "%esp", "%ebp", "%esi", "%edi"]
+
+NO_REG = 0xF
+
+
+class Op(enum.IntEnum):
+    # --- normal Y86 subset (executed by a core) ---
+    HALT = 0
+    NOP = 1
+    IRMOVL = 2      # imm -> rb
+    RRMOVL = 3      # ra -> rb
+    MRMOVL = 4      # mem[rb + imm] -> ra
+    RMMOVL = 5      # ra -> mem[rb + imm]
+    ADDL = 6        # rb = rb OP ra ; sets ZF/SF
+    SUBL = 7
+    ANDL = 8
+    XORL = 9
+    JMP = 10        # pc = imm
+    JLE = 11
+    JL = 12
+    JE = 13
+    JNE = 14
+    JGE = 15
+    JG = 16
+    # --- EMPA metainstructions (executed by the supervisor) ---
+    QPREALLOC = 17  # imm = number of cores to preallocate for this core
+    QCREATE = 18    # imm = QT address; rent a core, clone glue, child runs
+    QTERM = 19      # terminate this QT; latch link register (%eax) for parent
+    QWAIT = 20      # block until all children terminated; read back latch
+    QFOR = 21       # a=count_reg b=addr_reg imm=payload_addr imm2=stride
+    QSUMUP = 22     # a=addr_reg b=count_reg imm=stride imm2=alu_op
+    # pseudo-register write (child -> ForParent latch), used in SUMUP payloads
+    PADDL = 23      # ra -> ForParent latch, combining with configured ALU op
+
+    @property
+    def is_meta(self) -> bool:
+        # PADDL is a normal (pseudo-register) instruction, not a meta.
+        return Op.QPREALLOC <= self <= Op.QSUMUP
+
+
+# ALU op selectors for QSUMUP's parent-side adder (imm2 field).
+ALU_ADD, ALU_AND, ALU_XOR = 0, 1, 2
+
+# Per-instruction costs in SV clocks.  "The simulator uses arbitrary, but
+# reasonable execution times" (paper §6).  This table is the unique fit that
+# reproduces every row of Table 1 (see core/timing.py and DESIGN.md §7):
+#   NO-mode loop body mrmovl+addl+irmovl+addl+irmovl+addl+jne = 30 clocks,
+#   setup irmovl+irmovl+xorl+andl+je = 20, halt = 2  =>  T_NO = 22 + 30 n.
+COST = {
+    Op.HALT: 2,
+    Op.NOP: 1,
+    Op.IRMOVL: 4,
+    Op.RRMOVL: 4,
+    Op.MRMOVL: 6,
+    Op.RMMOVL: 6,
+    Op.ADDL: 4,
+    Op.SUBL: 4,
+    Op.ANDL: 4,
+    Op.XORL: 4,
+    Op.JMP: 4,
+    Op.JLE: 4,
+    Op.JL: 4,
+    Op.JE: 4,
+    Op.JNE: 4,
+    Op.JGE: 4,
+    Op.JG: 4,
+    # metas: cost charged to the *issuing core* while the SV acts.
+    Op.QPREALLOC: 1,
+    Op.QCREATE: 1,
+    Op.QTERM: 0,     # absorbed: Meta signal raised at pre-fetch (§4.5)
+    Op.QWAIT: 0,     # waiting consumes no clocks ("no time is used when
+                     #  there is no need to wait", §3.4); unblock latch
+                     #  transfer is charged by the engine.
+    Op.QFOR: 1,      # mode-enter handshake with the SV
+    Op.QSUMUP: 1,
+    Op.PADDL: 4,     # writes the ForParent pseudo-register (register-speed)
+}
+
+MAX_OP = int(max(Op)) + 1
+
+
+def cost_table() -> np.ndarray:
+    t = np.zeros(MAX_OP, dtype=np.int32)
+    for op, c in COST.items():
+        t[int(op)] = c
+    return t
+
+
+class Instr(NamedTuple):
+    op: int
+    a: int = NO_REG
+    b: int = NO_REG
+    imm: int = 0
+    imm2: int = 0
+    imm3: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Tiny assembler: list of (mnemonic, operands...) or ("label", name) entries.
+# ---------------------------------------------------------------------------
+
+_REG_IDX = {name: i for i, name in enumerate(REG_NAMES)}
+
+
+def _reg(r) -> int:
+    if isinstance(r, str):
+        return _REG_IDX[r]
+    return int(r)
+
+
+def assemble(source: Sequence[tuple]) -> np.ndarray:
+    """Assemble to an (P, 5) int32 program image.
+
+    ``source`` entries::
+
+        ("label", "Loop")
+        ("irmovl", imm_or_label, "%edx")
+        ("mrmovl", offset, "%ecx", "%esi")     # mem[%ecx+offset] -> %esi
+        ("rmmovl", "%esi", offset, "%ecx")     # %esi -> mem[%ecx+offset]
+        ("addl", "%esi", "%eax")               # %eax += %esi
+        ("jne", "Loop")
+        ("qfor", count_reg, addr_reg, payload_label, stride)
+        ("qsumup", addr_reg, count_reg, payload_label, stride, alu_op)
+        ...
+
+    Labels may be used wherever an immediate address is expected; they
+    resolve to instruction indices (the machine is word-addressed at the
+    instruction level).
+    """
+    # pass 1: labels
+    labels: dict[str, int] = {}
+    pc = 0
+    for entry in source:
+        if entry[0] == "label":
+            labels[entry[1]] = pc
+        else:
+            pc += 1
+
+    def imm_of(v) -> int:
+        if isinstance(v, str):
+            return labels[v]
+        return int(v)
+
+    out: list[Instr] = []
+    for entry in source:
+        m, *ops = entry
+        if m == "label":
+            continue
+        if m == "halt":
+            out.append(Instr(Op.HALT))
+        elif m == "nop":
+            out.append(Instr(Op.NOP))
+        elif m == "irmovl":
+            out.append(Instr(Op.IRMOVL, b=_reg(ops[1]), imm=imm_of(ops[0])))
+        elif m == "rrmovl":
+            out.append(Instr(Op.RRMOVL, a=_reg(ops[0]), b=_reg(ops[1])))
+        elif m == "mrmovl":
+            out.append(Instr(Op.MRMOVL, a=_reg(ops[2]), b=_reg(ops[1]), imm=imm_of(ops[0])))
+        elif m == "rmmovl":
+            out.append(Instr(Op.RMMOVL, a=_reg(ops[0]), b=_reg(ops[2]), imm=imm_of(ops[1])))
+        elif m in ("addl", "subl", "andl", "xorl"):
+            op = {"addl": Op.ADDL, "subl": Op.SUBL, "andl": Op.ANDL, "xorl": Op.XORL}[m]
+            out.append(Instr(op, a=_reg(ops[0]), b=_reg(ops[1])))
+        elif m in ("jmp", "jle", "jl", "je", "jne", "jge", "jg"):
+            op = {"jmp": Op.JMP, "jle": Op.JLE, "jl": Op.JL, "je": Op.JE,
+                  "jne": Op.JNE, "jge": Op.JGE, "jg": Op.JG}[m]
+            out.append(Instr(op, imm=imm_of(ops[0])))
+        elif m == "qprealloc":
+            out.append(Instr(Op.QPREALLOC, imm=imm_of(ops[0])))
+        elif m == "qcreate":
+            out.append(Instr(Op.QCREATE, imm=imm_of(ops[0])))
+        elif m == "qterm":
+            out.append(Instr(Op.QTERM))
+        elif m == "qwait":
+            out.append(Instr(Op.QWAIT))
+        elif m == "qfor":
+            out.append(Instr(Op.QFOR, a=_reg(ops[0]), b=_reg(ops[1]),
+                             imm=imm_of(ops[2]), imm2=imm_of(ops[3])))
+        elif m == "qsumup":
+            out.append(Instr(Op.QSUMUP, a=_reg(ops[0]), b=_reg(ops[1]),
+                             imm=imm_of(ops[2]), imm2=imm_of(ops[3]),
+                             imm3=imm_of(ops[4])))
+        elif m == "paddl":
+            out.append(Instr(Op.PADDL, a=_reg(ops[0])))
+        else:
+            raise ValueError(f"unknown mnemonic {m!r}")
+    arr = np.array([[i.op, i.a, i.b, i.imm, i.imm2, i.imm3] for i in out],
+                   dtype=np.int32)
+    return arr

@@ -1,0 +1,627 @@
+"""Clock-level, jittable EMPA machine: a pool of Y86 cores under a supervisor.
+
+Faithful model of the paper's architecture (§3–§5):
+
+* A **pool of uniform cores** (``MAX_CORES``), each a small Y86 machine
+  (register file, PC, ZF/SF flags) — "the cores are mostly similar to the
+  present single-core processor, with some extra functionality" (§4.1.2).
+* A **supervisor (SV)** above the cores that owns every shared resource:
+  rent/return of cores, parent/children bookkeeping, latched data transfer,
+  mass-processing engines.  The SV dispatches **one core-visible action per
+  clock** (§4.1.3: "it can only be used in a sequential way, one operation
+  at a time"); its internal bookkeeping (address advance, counter
+  decrement) is free — it "can be operated at a frequency ... much higher
+  than the clock frequency needed for the cores".
+* **Metainstructions** are detected at pre-fetch and executed at the SV
+  level (§4.5).  ``QTERM`` is fully absorbed into the final payload clock
+  (the 'Meta' signal is raised while the last instruction completes).
+* **Latched transfers**: a child's result is latched at termination,
+  transferred to the parent's ``FromChild`` latch on the next clock, and
+  consumed by the parent the clock after — the two-stage latched protocol
+  of §3.5/§4.4.
+* **Mass-processing engines** (§5.1, §5.2):
+  - ``QFOR``  — the SV runs the loop: it re-creates the (preallocated)
+    child once per iteration with the SV-advanced address and the chained
+    partial result; control instructions vanish from the instruction
+    stream.
+  - ``QSUMUP`` — the SV staggers one child creation per clock; children
+    stream their loads through the ForParent latch into a parent-side
+    combining unit (add/and/xor).  The partial sum is never written back
+    to an architectural register: one element per clock at steady state.
+    A child core's full turnaround (rent → payload → terminate → pool
+    maintenance → rentable) is ``SUMUP_TURNAROUND`` = 30 clocks, so at
+    most 30 children + 1 parent are ever in use (§6.2), yet creation
+    never stalls: by the time the 31st child is needed, the 1st core is
+    back in the pool.
+
+With the per-instruction costs in ``isa.COST`` this machine reproduces
+**every row of Table 1 exactly** (see tests/core/test_table1.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import isa
+from repro.core.isa import Op
+
+MAX_CORES = 32
+MEM_WORDS = 4096
+RING = 32               # SUMUP inbox ring (>= max in-flight children)
+SUMUP_TURNAROUND = 30   # clocks from rent until the core is rentable again
+LINK_REG = isa.EAX      # the link register cloned back at termination (§5.1)
+
+# Core status codes.
+POOL, RUN, ENGINE, WAITQ, HALTWAIT, HALTED = range(6)
+
+
+class MachineState(NamedTuple):
+    # memory + per-core architectural state
+    mem: jnp.ndarray            # (MEM_WORDS,) i32
+    regs: jnp.ndarray           # (C, 8) i32
+    pc: jnp.ndarray             # (C,) i32
+    zf: jnp.ndarray             # (C,) i32
+    sf: jnp.ndarray             # (C,) i32
+    # supervisor-visible core state
+    status: jnp.ndarray         # (C,) i32
+    busy: jnp.ndarray           # (C,) i32  remaining clocks of current instr
+    parent: jnp.ndarray         # (C,) i32  parent core id (-1)
+    children: jnp.ndarray       # (C,) i32  live child count
+    childmask: jnp.ndarray      # (C,) u32  'Children' bitmask (§4.1.2)
+    prealloc: jnp.ndarray       # (C,) i32  cores preallocated for this core
+    pool_release: jnp.ndarray   # (C,) i32  clock at which core is rentable
+    rent_clock: jnp.ndarray     # (C,) i32  clock at which core was rented
+    # latched transfer paths (§4.6)
+    latch_fromchild: jnp.ndarray    # (C,) i32  parent-side FromChild latch
+    latch_valid: jnp.ndarray        # (C,) i32
+    latch_forparent: jnp.ndarray    # (C,) i32  child-side ForParent latch
+    unblock_after: jnp.ndarray      # (C,) i32  earliest unblock clock (QWAIT)
+    # mass-processing engine state (per core, in role 'parent')
+    mode: jnp.ndarray           # (C,) i32  0 none / 1 FOR / 2 SUMUP
+    e_remaining: jnp.ndarray    # (C,) i32  creations left
+    e_total: jnp.ndarray        # (C,) i32  total iterations
+    e_consumed: jnp.ndarray     # (C,) i32  SUMUP: elements combined
+    e_inflight: jnp.ndarray     # (C,) i32  live engine children
+    e_addr: jnp.ndarray         # (C,) i32  SV-maintained address
+    e_stride: jnp.ndarray       # (C,) i32
+    e_payload: jnp.ndarray      # (C,) i32  payload QT address
+    e_addr_reg: jnp.ndarray     # (C,) i32
+    e_count_reg: jnp.ndarray    # (C,) i32
+    e_aluop: jnp.ndarray        # (C,) i32  SUMUP combiner op
+    e_acc: jnp.ndarray          # (C,) i32  FOR chained value / SUMUP adder
+    e_exit_at: jnp.ndarray      # (C,) i32  engine exit clock (0 = not set)
+    # SUMUP inbox: two-stage latched stream child -> parent
+    inbox_val: jnp.ndarray      # (C, RING) i32
+    inbox_tick: jnp.ndarray     # (C, RING) i32  QTERM clock of each entry
+    inbox_head: jnp.ndarray     # (C,) i32  consumed count
+    inbox_tail: jnp.ndarray     # (C,) i32  arrived count
+    # transient (within-tick) requests from the exec phase to the SV phase
+    term_req: jnp.ndarray       # (C,) i32
+    meta_op: jnp.ndarray        # (C,) i32  0 = none
+    meta_a: jnp.ndarray         # (C,) i32
+    meta_b: jnp.ndarray
+    meta_imm: jnp.ndarray
+    meta_imm2: jnp.ndarray
+    meta_imm3: jnp.ndarray
+    # global
+    clock: jnp.ndarray          # () i32
+    peak_used: jnp.ndarray      # () i32
+    created_total: jnp.ndarray  # () i32
+
+
+class MachineResult(NamedTuple):
+    clocks: jnp.ndarray         # () i32   total execution time
+    result: jnp.ndarray         # () i32   %eax of core 0 at halt
+    regs0: jnp.ndarray          # (8,) i32
+    mem: jnp.ndarray            # (MEM_WORDS,) i32
+    peak_cores: jnp.ndarray     # () i32   max cores simultaneously in use
+    created_total: jnp.ndarray  # () i32   total QT creations
+    halted: jnp.ndarray         # () bool  clean halt (not clock-limit)
+
+
+def _u32bit(i):
+    return jnp.left_shift(jnp.uint32(1), jnp.asarray(i).astype(jnp.uint32))
+
+
+def init_state(mem_init: np.ndarray | jnp.ndarray) -> MachineState:
+    C = MAX_CORES
+    mem = jnp.zeros((MEM_WORDS,), jnp.int32)
+    mem_init = jnp.asarray(mem_init, jnp.int32)
+    mem = mem.at[: mem_init.shape[0]].set(mem_init)
+    z = lambda *s: jnp.zeros(s, jnp.int32)
+    status = z(C).at[0].set(RUN)   # SV "creates" the cores, enables core 0 (§4.5)
+    return MachineState(
+        mem=mem, regs=z(C, isa.NREGS), pc=z(C), zf=z(C), sf=z(C),
+        status=status, busy=z(C), parent=z(C) - 1, children=z(C),
+        childmask=jnp.zeros((C,), jnp.uint32), prealloc=z(C),
+        pool_release=z(C), rent_clock=z(C),
+        latch_fromchild=z(C), latch_valid=z(C), latch_forparent=z(C),
+        unblock_after=z(C),
+        mode=z(C), e_remaining=z(C), e_total=z(C), e_consumed=z(C),
+        e_inflight=z(C), e_addr=z(C), e_stride=z(C), e_payload=z(C),
+        e_addr_reg=z(C), e_count_reg=z(C), e_aluop=z(C), e_acc=z(C),
+        e_exit_at=z(C),
+        inbox_val=z(C, RING), inbox_tick=z(C, RING),
+        inbox_head=z(C), inbox_tail=z(C),
+        term_req=z(C), meta_op=z(C), meta_a=z(C), meta_b=z(C),
+        meta_imm=z(C), meta_imm2=z(C), meta_imm3=z(C),
+        clock=jnp.int32(0), peak_used=jnp.int32(0),
+        created_total=jnp.int32(0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Phase 1+2: vectorized core execution (fetch/execute/complete).
+# ---------------------------------------------------------------------------
+
+def _exec_phase(s: MachineState, prog: jnp.ndarray, cost: jnp.ndarray) -> MachineState:
+    C = MAX_CORES
+    run = s.status == RUN
+
+    # Stage A: cores mid-instruction burn one clock.
+    burning = run & (s.busy > 0)
+    busy = jnp.where(burning, s.busy - 1, s.busy)
+    completed_a = burning & (busy == 0)
+
+    # Stage B: cores with busy==0 fetch and execute.  A core with a pending
+    # (retrying) metainstruction is blocked until the SV satisfies it.
+    fetch = run & (s.busy == 0) & (s.meta_op == 0)
+    pcs = jnp.clip(s.pc, 0, prog.shape[0] - 1)
+    op = prog[pcs, 0]
+    a = prog[pcs, 1]
+    b = prog[pcs, 2]
+    imm = prog[pcs, 3]
+    imm2 = prog[pcs, 4]
+    imm3 = prog[pcs, 5]
+
+    rows = jnp.arange(C)
+    aval = s.regs[rows, jnp.clip(a, 0, isa.NREGS - 1)]
+    bval = s.regs[rows, jnp.clip(b, 0, isa.NREGS - 1)]
+
+    regs, mem, pc, zf, sf, status = s.regs, s.mem, s.pc, s.zf, s.sf, s.status
+    latch_forparent = s.latch_forparent
+
+    def owrite(dst_reg, val, m):
+        # masked register write
+        cur = regs[rows, jnp.clip(dst_reg, 0, isa.NREGS - 1)]
+        new = jnp.where(m, val, cur)
+        return regs.at[rows, jnp.clip(dst_reg, 0, isa.NREGS - 1)].set(new)
+
+    # IRMOVL / RRMOVL
+    m = fetch & (op == Op.IRMOVL)
+    regs = owrite(b, imm, m)
+    m = fetch & (op == Op.RRMOVL)
+    regs = owrite(b, aval, m)
+    # MRMOVL: regs[a] = mem[(bval+imm)>>2]
+    m = fetch & (op == Op.MRMOVL)
+    addr_w = jnp.clip((bval + imm) >> 2, 0, MEM_WORDS - 1)
+    regs = owrite(a, mem[addr_w], m)
+    # RMMOVL: mem[(bval+imm)>>2] = aval   (EMPA coordination excludes
+    # simultaneous conflicting access, §4.1.4 — last writer wins here)
+    # (word MEM_WORDS-1 is a reserved scratch word: masked-off lanes land
+    # there so duplicate-index scatter never clobbers live data)
+    m = fetch & (op == Op.RMMOVL)
+    mem = mem.at[jnp.where(m, addr_w, MEM_WORDS - 1)].set(
+        jnp.where(m, aval, mem[MEM_WORDS - 1]))
+    # ALU ops
+    is_alu = (op == Op.ADDL) | (op == Op.SUBL) | (op == Op.ANDL) | (op == Op.XORL)
+    res = jnp.where(op == Op.ADDL, bval + aval,
+          jnp.where(op == Op.SUBL, bval - aval,
+          jnp.where(op == Op.ANDL, bval & aval, bval ^ aval)))
+    m = fetch & is_alu
+    regs = owrite(b, res, m)
+    zf = jnp.where(m, (res == 0).astype(jnp.int32), zf)
+    sf = jnp.where(m, (res < 0).astype(jnp.int32), sf)
+    # PADDL: write the ForParent latch (child-side pseudo-register, §4.6)
+    m = fetch & (op == Op.PADDL)
+    latch_forparent = jnp.where(m, aval, latch_forparent)
+
+    # Jumps
+    is_jmp = (op >= Op.JMP) & (op <= Op.JG)
+    taken = jnp.where(op == Op.JMP, True,
+            jnp.where(op == Op.JLE, (sf == 1) | (zf == 1),
+            jnp.where(op == Op.JL, sf == 1,
+            jnp.where(op == Op.JE, zf == 1,
+            jnp.where(op == Op.JNE, zf == 0,
+            jnp.where(op == Op.JGE, sf == 0,
+                      (sf == 0) & (zf == 0)))))))
+    new_pc = jnp.where(fetch & is_jmp & taken, imm, pc + 1)
+    pc = jnp.where(fetch, new_pc, pc)
+
+    # HALT: request SV attention (handled like a termination of core 0 /
+    # any core running plain code).
+    halt_req = fetch & (op == Op.HALT)
+
+    # Meta fetched directly (cost table; QTERM cost 0 handled as term req).
+    # PADDL is NOT a meta: it is a normal instruction that writes the
+    # ForParent pseudo-register (§4.6) at register speed.
+    is_meta = (op >= Op.QPREALLOC) & (op <= Op.QSUMUP)
+    meta_fetch = fetch & is_meta & (op != Op.QTERM)
+    term_fetch = fetch & (op == Op.QTERM)
+
+    # busy bookkeeping for fetched instructions
+    op_cost = cost[jnp.clip(op, 0, isa.MAX_OP - 1)]
+    busy = jnp.where(fetch, jnp.maximum(op_cost - 1, 0), busy)
+    completed_b = fetch & (busy == 0) & ~is_meta & ~halt_req
+    completed = completed_a | completed_b
+
+    # QTERM absorption: completed instructions pre-fetch; if the next op is
+    # QTERM the SV handles termination in this same clock (§4.5).
+    pcs2 = jnp.clip(pc, 0, prog.shape[0] - 1)
+    peek = prog[pcs2, 0]
+    term_peek = completed & (peek == Op.QTERM)
+    pc = jnp.where(term_peek, pc + 1, pc)
+
+    term_req = (term_fetch | term_peek).astype(jnp.int32)
+    # halts: mark HALTWAIT; SV phase finalizes (blocks on live children §4.3)
+    status = jnp.where(halt_req, HALTWAIT, status)
+    # halt occupies the core for its cost
+    busy = jnp.where(halt_req, jnp.maximum(cost[int(Op.HALT)] - 1, 0), busy)
+
+    # preserve pending (retrying) meta requests from earlier clocks
+    meta_op = jnp.where(meta_fetch, op, s.meta_op)
+    return s._replace(
+        mem=mem, regs=regs, pc=pc, zf=zf, sf=sf, status=status, busy=busy,
+        latch_forparent=latch_forparent, term_req=term_req,
+        meta_op=meta_op,
+        meta_a=jnp.where(meta_fetch, a, s.meta_a),
+        meta_b=jnp.where(meta_fetch, b, s.meta_b),
+        meta_imm=jnp.where(meta_fetch, imm, s.meta_imm),
+        meta_imm2=jnp.where(meta_fetch, imm2, s.meta_imm2),
+        meta_imm3=jnp.where(meta_fetch, imm3, s.meta_imm3),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Phase 3: supervisor — sequential over cores ("one operation at a time").
+# ---------------------------------------------------------------------------
+
+def _rent_core(s: MachineState):
+    """Index of the first rentable core, or -1."""
+    free = (s.status == POOL) & (s.pool_release <= s.clock)
+    idx = jnp.argmax(free)
+    return jnp.where(jnp.any(free), idx.astype(jnp.int32), jnp.int32(-1))
+
+
+def _clone_to(s: MachineState, parent_i, child_i, qt_addr,
+              override_reg, override_val, override2_reg, override2_val,
+              is_engine_child):
+    """Rent ``child_i`` for ``parent_i``: clone the glue, set the QT address.
+
+    The SV "clones the complete internal state (including the register file
+    and the PC) of the parent to the new child" (§4.6); engine children get
+    the SV-maintained address / chained value written over the clone.
+    """
+    base = s.regs[parent_i]
+    r1 = jnp.clip(override_reg, 0, isa.NREGS - 1)
+    base = base.at[r1].set(jnp.where(override_reg >= 0, override_val, base[r1]))
+    r2 = jnp.clip(override2_reg, 0, isa.NREGS - 1)
+    base = base.at[r2].set(jnp.where(override2_reg >= 0, override2_val, base[r2]))
+    regs = s.regs.at[child_i].set(base)
+    return s._replace(
+        regs=regs,
+        pc=s.pc.at[child_i].set(qt_addr),
+        zf=s.zf.at[child_i].set(s.zf[parent_i]),
+        sf=s.sf.at[child_i].set(s.sf[parent_i]),
+        status=s.status.at[child_i].set(RUN),
+        busy=s.busy.at[child_i].set(0),
+        parent=s.parent.at[child_i].set(parent_i),
+        children=s.children.at[parent_i].add(1),
+        childmask=s.childmask.at[parent_i].set(
+            s.childmask[parent_i] | _u32bit(child_i)),
+        rent_clock=s.rent_clock.at[child_i].set(s.clock),
+        # fresh life: no transient requests carry over from a prior QT
+        meta_op=s.meta_op.at[child_i].set(0),
+        term_req=s.term_req.at[child_i].set(0),
+        e_inflight=jnp.where(is_engine_child,
+                             s.e_inflight.at[parent_i].add(1), s.e_inflight),
+        created_total=s.created_total + 1,
+    )
+
+
+def _sv_handle_term(s: MachineState, i) -> MachineState:
+    """Child core ``i`` raised its Meta/termination signal this clock."""
+    p = s.parent[i]
+    has_parent = p >= 0
+    pm = jnp.maximum(p, 0)
+    pmode = jnp.where(has_parent, s.mode[pm], 0)
+
+    # FOR engine: clone back the link register into the SV-chained value.
+    e_acc = jnp.where(has_parent & (pmode == 1),
+                      s.e_acc.at[pm].set(s.regs[i, LINK_REG]), s.e_acc)
+    # SUMUP engine: enqueue the ForParent latch into the parent's inbox.
+    slot = s.inbox_tail[pm] % RING
+    do_inbox = has_parent & (pmode == 2)
+    inbox_val = jnp.where(do_inbox,
+                          s.inbox_val.at[pm, slot].set(s.latch_forparent[i]),
+                          s.inbox_val)
+    inbox_tick = jnp.where(do_inbox,
+                           s.inbox_tick.at[pm, slot].set(s.clock),
+                           s.inbox_tick)
+    inbox_tail = jnp.where(do_inbox, s.inbox_tail.at[pm].add(1), s.inbox_tail)
+    # plain QT: latch the link register for the parent (two-stage transfer)
+    plain = has_parent & (pmode == 0)
+    latch_fromchild = jnp.where(plain,
+                                s.latch_fromchild.at[pm].set(s.regs[i, LINK_REG]),
+                                s.latch_fromchild)
+    latch_valid = jnp.where(plain, s.latch_valid.at[pm].set(1), s.latch_valid)
+    unblock_after = jnp.where(has_parent,
+                              s.unblock_after.at[pm].set(s.clock + 1),
+                              s.unblock_after)
+
+    # core returns to the pool; SUMUP turnaround holds it out for 30 clocks
+    release = jnp.where(pmode == 2, s.rent_clock[i] + SUMUP_TURNAROUND,
+                        s.clock + 1)
+    return s._replace(
+        status=s.status.at[i].set(POOL),
+        busy=s.busy.at[i].set(0),
+        pool_release=s.pool_release.at[i].set(release),
+        parent=s.parent.at[i].set(-1),
+        children=jnp.where(has_parent, s.children.at[pm].add(-1), s.children),
+        childmask=jnp.where(has_parent,
+                            s.childmask.at[pm].set(
+                                s.childmask[pm] & ~_u32bit(i)),
+                            s.childmask),
+        e_inflight=jnp.where(has_parent & (pmode > 0),
+                             s.e_inflight.at[pm].add(-1), s.e_inflight),
+        e_acc=e_acc, inbox_val=inbox_val, inbox_tick=inbox_tick,
+        inbox_tail=inbox_tail, latch_fromchild=latch_fromchild,
+        latch_valid=latch_valid, unblock_after=unblock_after,
+        term_req=s.term_req.at[i].set(0),
+    )
+
+
+def _sv_handle_meta(s: MachineState, i) -> MachineState:
+    """Execute core ``i``'s fetched metainstruction at the SV level."""
+    mop = s.meta_op[i]
+
+    # QPREALLOC: reserve capacity (bookkeeping only; guarantees §5.1)
+    s = s._replace(prealloc=jnp.where(mop == Op.QPREALLOC,
+                                      s.prealloc.at[i].set(s.meta_imm[i]),
+                                      s.prealloc))
+
+    # QCREATE: rent + clone; child begins next clock.
+    def do_create(st):
+        c = _rent_core(st)
+        ok = c >= 0
+        cm = jnp.maximum(c, 0)
+        st2 = _clone_to(st, i, cm, st.meta_imm[i],
+                        jnp.int32(-1), jnp.int32(0), jnp.int32(-1), jnp.int32(0),
+                        jnp.bool_(False))
+        st2 = jax.tree_util.tree_map(lambda a, b: jnp.where(ok, a, b), st2, st)
+        # out of cores: the issuing core blocks until one frees (§4.5);
+        # model: retry by not advancing (keep meta pending)
+        st2 = st2._replace(meta_op=st2.meta_op.at[i].set(
+            jnp.where(ok, 0, Op.QCREATE)))
+        return st2
+
+    s = jax.lax.cond(mop == Op.QCREATE, do_create, lambda st: st, s)
+
+    # QWAIT: block until children==0 (unblock handled in engine phase)
+    s = s._replace(status=jnp.where(mop == Op.QWAIT,
+                                    s.status.at[i].set(WAITQ), s.status),
+                   meta_op=jnp.where(mop == Op.QWAIT,
+                                     s.meta_op.at[i].set(0), s.meta_op))
+
+    # QFOR / QSUMUP: configure and arm the engine; parent blocks.
+    def arm(st, which):
+        is_for = which == 1
+        addr_reg = jnp.where(is_for, st.meta_b[i], st.meta_a[i])
+        count_reg = jnp.where(is_for, st.meta_a[i], st.meta_b[i])
+        count = st.regs[i, count_reg]
+        return st._replace(
+            status=st.status.at[i].set(ENGINE),
+            mode=st.mode.at[i].set(which),
+            e_remaining=st.e_remaining.at[i].set(count),
+            e_total=st.e_total.at[i].set(count),
+            e_consumed=st.e_consumed.at[i].set(0),
+            e_inflight=st.e_inflight.at[i].set(0),
+            e_addr=st.e_addr.at[i].set(st.regs[i, addr_reg]),
+            e_stride=st.e_stride.at[i].set(st.meta_imm2[i]),
+            e_payload=st.e_payload.at[i].set(st.meta_imm[i]),
+            e_addr_reg=st.e_addr_reg.at[i].set(addr_reg),
+            e_count_reg=st.e_count_reg.at[i].set(count_reg),
+            e_aluop=st.e_aluop.at[i].set(st.meta_imm3[i]),
+            # FOR chains the parent's link register through the children;
+            # SUMUP's combining unit starts from it (cleared by the code).
+            e_acc=st.e_acc.at[i].set(st.regs[i, LINK_REG]),
+            e_exit_at=st.e_exit_at.at[i].set(0),
+            inbox_head=st.inbox_head.at[i].set(0),
+            inbox_tail=st.inbox_tail.at[i].set(0),
+            meta_op=st.meta_op.at[i].set(0),
+        )
+
+    s = jax.lax.cond(mop == Op.QFOR, lambda st: arm(st, jnp.int32(1)),
+                     lambda st: st, s)
+    s = jax.lax.cond(mop == Op.QSUMUP, lambda st: arm(st, jnp.int32(2)),
+                     lambda st: st, s)
+    s = s._replace(meta_op=jnp.where(mop == Op.QPREALLOC,
+                                     s.meta_op.at[i].set(0), s.meta_op))
+    return s
+
+
+def _sv_engine_step(s: MachineState, i) -> MachineState:
+    """Advance core ``i``'s mass-processing engine by one SV clock."""
+    mode = s.mode[i]
+
+    # ---- FOR: one child at a time; re-create one clock after termination.
+    def for_step(st):
+        can_create = (st.e_remaining[i] > 0) & (st.e_inflight[i] == 0) & \
+                     (st.unblock_after[i] <= st.clock)
+        def create(st2):
+            c = _rent_core(st2)
+            ok = c >= 0
+            cm = jnp.maximum(c, 0)
+            st3 = _clone_to(st2, jnp.int32(i), cm, st2.e_payload[i],
+                            st2.e_addr_reg[i], st2.e_addr[i],
+                            jnp.int32(LINK_REG), st2.e_acc[i],
+                            jnp.bool_(True))
+            st3 = st3._replace(
+                e_remaining=st3.e_remaining.at[i].add(-1),
+                e_addr=st3.e_addr.at[i].add(st3.e_stride[i]),
+            )
+            return jax.tree_util.tree_map(
+                lambda a_, b_: jnp.where(ok, a_, b_), st3, st2)
+        st = jax.lax.cond(can_create, create, lambda x: x, st)
+        # completion: all created and none in flight -> exit transfer one
+        # clock after the last SV action (the final child's termination)
+        done = (st.e_remaining[i] == 0) & (st.e_inflight[i] == 0)
+        st = st._replace(e_exit_at=jnp.where(
+            done & (st.e_exit_at[i] == 0),
+            st.e_exit_at.at[i].set(jnp.maximum(st.clock, st.unblock_after[i])),
+            st.e_exit_at))
+        def exit_(st2):
+            # SV transfers the final chained value into the parent's link
+            # register and unblocks it (one clock: the exit transfer).
+            regs = st2.regs.at[i, LINK_REG].set(st2.e_acc[i])
+            regs = regs.at[i, st2.e_addr_reg[i]].set(st2.e_addr[i])
+            regs = regs.at[i, st2.e_count_reg[i]].set(0)
+            return st2._replace(
+                regs=regs,
+                zf=st2.zf.at[i].set(1),  # count reached zero
+                status=st2.status.at[i].set(RUN),
+                mode=st2.mode.at[i].set(0),
+                e_exit_at=st2.e_exit_at.at[i].set(0))
+        do_exit = (st.e_exit_at[i] > 0) & (st.clock >= st.e_exit_at[i])
+        return jax.lax.cond(do_exit, exit_, lambda x: x, st)
+
+    # ---- SUMUP: stagger one creation per clock; combine one value per clock.
+    def sumup_step(st):
+        # 1 creation per SV clock while elements remain and a core is free
+        def create(st2):
+            c = _rent_core(st2)
+            ok = c >= 0
+            cm = jnp.maximum(c, 0)
+            st3 = _clone_to(st2, jnp.int32(i), cm, st2.e_payload[i],
+                            st2.e_addr_reg[i], st2.e_addr[i],
+                            jnp.int32(-1), jnp.int32(0), jnp.bool_(True))
+            st3 = st3._replace(
+                e_remaining=st3.e_remaining.at[i].add(-1),
+                e_addr=st3.e_addr.at[i].add(st3.e_stride[i]),
+            )
+            return jax.tree_util.tree_map(
+                lambda a_, b_: jnp.where(ok, a_, b_), st3, st2)
+        st = jax.lax.cond(st.e_remaining[i] > 0, create, lambda x: x, st)
+
+        # parent-side combining unit: consume one latched value per clock,
+        # two clocks after the child's termination (two-stage transfer).
+        def consume(st2):
+            slot = st2.inbox_head[i] % RING
+            v = st2.inbox_val[i, slot]
+            acc = st2.e_acc[i]
+            aluop = st2.e_aluop[i]
+            acc = jnp.where(aluop == isa.ALU_ADD, acc + v,
+                  jnp.where(aluop == isa.ALU_AND, acc & v, acc ^ v))
+            return st2._replace(e_acc=st2.e_acc.at[i].set(acc),
+                                inbox_head=st2.inbox_head.at[i].add(1),
+                                e_consumed=st2.e_consumed.at[i].add(1),
+                                unblock_after=st2.unblock_after.at[i].set(
+                                    st2.clock + 1))
+        slot = st.inbox_head[i] % RING
+        can_consume = (st.inbox_tail[i] > st.inbox_head[i]) & \
+                      (st.clock >= st.inbox_tick[i, slot] + 2)
+        st = jax.lax.cond(can_consume, consume, lambda x: x, st)
+
+        # completion: everything combined -> readout one clock after the
+        # last combine (the final latch -> link-register transfer)
+        done = (st.e_consumed[i] == st.e_total[i]) & (st.e_remaining[i] == 0)
+        st = st._replace(e_exit_at=jnp.where(
+            done & (st.e_exit_at[i] == 0),
+            st.e_exit_at.at[i].set(jnp.maximum(st.clock, st.unblock_after[i])),
+            st.e_exit_at))
+        def exit_(st2):
+            regs = st2.regs.at[i, LINK_REG].set(st2.e_acc[i])
+            regs = regs.at[i, st2.e_addr_reg[i]].set(st2.e_addr[i])
+            return st2._replace(
+                regs=regs,
+                status=st2.status.at[i].set(RUN),
+                mode=st2.mode.at[i].set(0),
+                e_exit_at=st2.e_exit_at.at[i].set(0))
+        do_exit = (st.e_exit_at[i] > 0) & (st.clock >= st.e_exit_at[i])
+        return jax.lax.cond(do_exit, exit_, lambda x: x, st)
+
+    s = jax.lax.cond((s.status[i] == ENGINE) & (mode == 1), for_step,
+                     lambda x: x, s)
+    s = jax.lax.cond((s.status[i] == ENGINE) & (mode == 2), sumup_step,
+                     lambda x: x, s)
+
+    # QWAIT unblock: children gone, latch transferred (one clock after the
+    # last termination), latched value written back on request (§4.6).
+    def unwait(st):
+        regs = jnp.where(st.latch_valid[i] == 1,
+                         st.regs.at[i, LINK_REG].set(st.latch_fromchild[i]),
+                         st.regs)
+        return st._replace(regs=regs,
+                           latch_valid=st.latch_valid.at[i].set(0),
+                           status=st.status.at[i].set(RUN))
+    can_unwait = (s.status[i] == WAITQ) & (s.children[i] == 0) & \
+                 (s.clock >= s.unblock_after[i])
+    s = jax.lax.cond(can_unwait, unwait, lambda x: x, s)
+
+    # HALTWAIT -> HALTED once children cleared (§4.3: SV blocks termination
+    # of a parent until its children mask gets cleared).
+    can_halt = (s.status[i] == HALTWAIT) & (s.children[i] == 0) & \
+               (s.busy[i] == 0)
+    s = s._replace(status=jnp.where(can_halt, s.status.at[i].set(HALTED),
+                                    s.status))
+    return s
+
+
+def _tick(s: MachineState, prog: jnp.ndarray, cost: jnp.ndarray) -> MachineState:
+    s = s._replace(clock=s.clock + 1)
+    s = _exec_phase(s, prog, cost)
+
+    # SV phase — strictly sequential over cores (§4.1.3).
+    def body(i, st):
+        st = jax.lax.cond(st.term_req[i] == 1,
+                          lambda x: _sv_handle_term(x, i), lambda x: x, st)
+        st = jax.lax.cond(st.meta_op[i] > 0,
+                          lambda x: _sv_handle_meta(x, i), lambda x: x, st)
+        st = _sv_engine_step(st, i)
+        return st
+    s = jax.lax.fori_loop(0, MAX_CORES, body, s)
+
+    # HALT burns its cost like any instruction
+    s = s._replace(busy=jnp.where((s.status == HALTWAIT) & (s.busy > 0),
+                                  s.busy - 1, s.busy))
+
+    used = jnp.sum(((s.status != POOL) | (s.pool_release > s.clock)).astype(jnp.int32))
+    return s._replace(peak_used=jnp.maximum(s.peak_used, used))
+
+
+def _all_done(s: MachineState) -> jnp.ndarray:
+    idle = (s.status == POOL) | (s.status == HALTED)
+    return jnp.all(idle) & (s.status[0] == HALTED)
+
+
+@functools.partial(jax.jit, static_argnames=("max_clocks",))
+def _run(prog: jnp.ndarray, mem_init: jnp.ndarray, max_clocks: int) -> MachineResult:
+    cost = jnp.asarray(isa.cost_table())
+    s0 = init_state(mem_init)
+
+    def cond(s):
+        return (~_all_done(s)) & (s.clock < max_clocks)
+
+    def step(s):
+        return _tick(s, prog, cost)
+
+    s = jax.lax.while_loop(cond, step, s0)
+    return MachineResult(
+        clocks=s.clock, result=s.regs[0, LINK_REG], regs0=s.regs[0],
+        mem=s.mem, peak_cores=s.peak_used, created_total=s.created_total,
+        halted=_all_done(s))
+
+
+def run_program(prog: np.ndarray, mem_init=(), max_clocks: int = 100_000) -> MachineResult:
+    """Assemble-and-run entry point.  ``prog`` is an (P, 6) int32 image."""
+    prog = np.asarray(prog, np.int32)
+    if prog.shape[1] == 5:  # pad legacy 5-field encodings
+        prog = np.concatenate([prog, np.zeros((prog.shape[0], 1), np.int32)], 1)
+    mem = np.zeros((MEM_WORDS,), np.int32)
+    mem_init = np.asarray(list(mem_init) + [0], np.int32)
+    mem[: mem_init.shape[0]] = mem_init
+    return _run(jnp.asarray(prog), jnp.asarray(mem), max_clocks)

@@ -1,0 +1,109 @@
+"""The paper's workloads: `sumup` (Listing 1) in NO / FOR / SUMUP coding.
+
+The NO-mode program is the paper's Listing 1 verbatim (modulo the structured
+encoding).  The FOR and SUMUP variants follow §5.1 / §5.2: the payload QT is
+``mrmovl (%ecx),%esi ; addl %esi,%eax ; qterm`` — the two payload lines of
+the loop kernel — while loop organization moves to the supervisor.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import isa
+
+ARRAY_BASE = 0x100  # byte address of the vector in simulator memory
+
+
+def mem_image(vector) -> np.ndarray:
+    """Memory image with the vector at ARRAY_BASE (word-addressed image)."""
+    v = np.asarray(vector, np.int32)
+    mem = np.zeros(ARRAY_BASE // 4 + len(v), np.int32)
+    mem[ARRAY_BASE // 4:] = v
+    return mem
+
+
+def sumup_no(n: int) -> np.ndarray:
+    """Listing 1: conventional coding.  T = 22 + 30 n."""
+    return isa.assemble([
+        ("irmovl", n, "%edx"),              # No of items to sum
+        ("irmovl", ARRAY_BASE, "%ecx"),     # Array address
+        ("xorl", "%eax", "%eax"),           # sum = 0
+        ("andl", "%edx", "%edx"),           # Set condition codes
+        ("je", "End"),
+        ("label", "Loop"),
+        ("mrmovl", 0, "%ecx", "%esi"),      # get *Start
+        ("addl", "%esi", "%eax"),           # add to sum
+        ("irmovl", 4, "%ebx"),
+        ("addl", "%ebx", "%ecx"),           # Start++
+        ("irmovl", -1, "%ebx"),
+        ("addl", "%ebx", "%edx"),           # Count--
+        ("jne", "Loop"),                    # Stop when 0
+        ("label", "End"),
+        ("halt",),
+    ])
+
+
+def sumup_for(n: int) -> np.ndarray:
+    """§5.1: SV takes over loop organization.  T = 20 + 11 n, k = 2."""
+    return isa.assemble([
+        ("irmovl", n, "%edx"),
+        ("irmovl", ARRAY_BASE, "%ecx"),
+        ("xorl", "%eax", "%eax"),
+        ("andl", "%edx", "%edx"),
+        ("qprealloc", 1),                   # guarantee a core for the loop
+        ("qfor", "%edx", "%ecx", "Payload", 4),
+        ("halt",),
+        ("label", "Payload"),               # the QT: payload lines 9-10
+        ("mrmovl", 0, "%ecx", "%esi"),
+        ("addl", "%esi", "%eax"),           # partial sum chained via %eax
+        ("qterm",),
+    ])
+
+
+def sumup_sumup(n: int) -> np.ndarray:
+    """§5.2: eliminate obsolete stages.  T = 32 + n, k = min(n,30) + 1."""
+    return isa.assemble([
+        ("irmovl", n, "%edx"),
+        ("irmovl", ARRAY_BASE, "%ecx"),
+        ("xorl", "%eax", "%eax"),
+        ("andl", "%edx", "%edx"),
+        ("qprealloc", 30),                  # preallocate the helper pool
+        ("qsumup", "%ecx", "%edx", "Payload", 4, isa.ALU_ADD),
+        ("halt",),
+        ("label", "Payload"),               # child: load, stream to parent
+        ("mrmovl", 0, "%ecx", "%esi"),
+        ("paddl", "%esi"),                  # write ForParent pseudo-register
+        ("qterm",),
+    ])
+
+
+PROGRAMS = {"NO": sumup_no, "FOR": sumup_for, "SUMUP": sumup_sumup}
+
+
+def qt_tree(depth: int, fanout: int) -> np.ndarray:
+    """A nested-QT test program: each QT spawns `fanout` children down to
+    `depth`, each leaf contributes 1; result = number of leaves.
+
+    Exercises generic QCREATE/QWAIT/QTERM (embedded QTs, §3: "QTs can be
+    embedded into each other").  Built iteratively — each level's QT code
+    is laid out after its parent's.
+    """
+    src: list[tuple] = []
+    # level 0 (root) runs like a parent QT and halts
+    for lvl in range(depth + 1):
+        src.append(("label", f"L{lvl}"))
+        if lvl == depth:
+            src.append(("irmovl", 1, "%eax"))
+        else:
+            src.append(("xorl", "%ebx", "%ebx"))
+            for _ in range(fanout):
+                src.append(("qcreate", f"L{lvl + 1}"))
+                src.append(("qwait",))
+                # accumulate the child's clone-back (%eax latch) into %ebx
+                src.append(("addl", "%eax", "%ebx"))
+            src.append(("rrmovl", "%ebx", "%eax"))
+        if lvl == 0:
+            src.append(("halt",))
+        else:
+            src.append(("qterm",))
+    return isa.assemble(src)

@@ -1,0 +1,96 @@
+"""Quasi-Thread graphs: compile-time parallelization metadata.
+
+"The information about the possible outsourcing must be prepared at compile
+time rather than at runtime, the code must be cut to optimally sized, partly
+independent QTs, the processor must be notified about the pre-calculated
+parallelization possibilities" (§3).
+
+At cluster scale the "code" is a training/serving step and the "cores" are
+mesh devices.  A :class:`QTGraph` records the step's fragments (QTs), their
+parent-child ("glue"/clone) edges with byte sizes, and the mass-processing
+mode each fragment uses.  The cluster supervisor (`runtime/supervisor.py`)
+maps the graph onto mesh axes and plans the collective schedule — the
+cluster-level analogue of the SV translating compile-time QT addresses to
+runtime physical core numbers (§3.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+
+class MassMode(enum.Enum):
+    NONE = "NO"        # plain sequential fragment
+    FOR = "FOR"        # SV-owned loop: lax.scan / Pallas grid owns control
+    SUMUP = "SUMUP"    # fused streaming reduction: no partial writeback
+
+
+@dataclasses.dataclass(frozen=True)
+class QT:
+    """One compile-time fragment of the step."""
+    name: str
+    flops: float = 0.0           # payload compute
+    param_bytes: float = 0.0     # weights touched ("glue" cloned in)
+    act_bytes: float = 0.0       # activations produced ("glue" cloned back)
+    mode: MassMode = MassMode.NONE
+    # preferred partitioning of the fragment's parallel dimension
+    shard_axis: Optional[str] = None
+
+
+@dataclasses.dataclass
+class QTGraph:
+    qts: list[QT] = dataclasses.field(default_factory=list)
+    edges: list[tuple[str, str, float]] = dataclasses.field(default_factory=list)
+
+    def add(self, qt: QT, parent: Optional[str] = None,
+            glue_bytes: float = 0.0) -> QT:
+        if any(q.name == qt.name for q in self.qts):
+            raise ValueError(f"duplicate QT {qt.name}")
+        self.qts.append(qt)
+        if parent is not None:
+            if not any(q.name == parent for q in self.qts):
+                raise ValueError(f"unknown parent {parent}")
+            self.edges.append((parent, qt.name, glue_bytes))
+        return qt
+
+    def get(self, name: str) -> QT:
+        for q in self.qts:
+            if q.name == name:
+                return q
+        raise KeyError(name)
+
+    def children(self, name: str) -> list[str]:
+        return [c for p, c, _ in self.edges if p == name]
+
+    def parent(self, name: str) -> Optional[str]:
+        ps = [p for p, c, _ in self.edges if c == name]
+        if len(ps) > 1:
+            raise ValueError(f"QT {name} has multiple parents")  # §4.2
+        return ps[0] if ps else None
+
+    def roots(self) -> list[str]:
+        have_parent = {c for _, c, _ in self.edges}
+        return [q.name for q in self.qts if q.name not in have_parent]
+
+    # -- aggregate accounting (drives the roofline napkin math) -----------
+    def total_flops(self) -> float:
+        return sum(q.flops for q in self.qts)
+
+    def total_glue_bytes(self) -> float:
+        return sum(b for _, _, b in self.edges)
+
+    def check_invariants(self) -> None:
+        names = [q.name for q in self.qts]
+        assert len(set(names)) == len(names)
+        for p, c, b in self.edges:
+            assert p in names and c in names and b >= 0
+            assert p != c
+        # acyclic (it's a fork tree: every QT has ≤1 parent)
+        for q in self.qts:
+            seen = set()
+            cur: Optional[str] = q.name
+            while cur is not None:
+                assert cur not in seen, "cycle in QT graph"
+                seen.add(cur)
+                cur = self.parent(cur)

@@ -1,0 +1,138 @@
+"""Supervisor resource semantics, reusable outside the clock-level machine.
+
+The paper's SV "handles all resources of the processor" (§3.5) through
+simple bitmask state: a pool of uniform units, rent/return, preallocation,
+parent/children masks.  The clock-level machine (machine.py) embeds these
+semantics; this module exposes them as a small, pure, framework-level
+component so the *same* pool discipline drives:
+
+* the serving slot pool (`runtime/serve.py`: KV-cache slots are cores,
+  requests are QTs — rent on admission, return on EOS),
+* the elastic device-pool manager (`runtime/elastic.py`: pods/hosts are
+  cores; a failed host is a core "disabled for some reason (like
+  overheating)" §4.1.2 — the pool shrinks, work continues),
+* property tests of the invariants the paper relies on (a core has at most
+  one parent; children masks are consistent; pool conservation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CorePool:
+    """Bitmask pool of uniform units with EMPA rent/return semantics."""
+
+    n: int
+    # status per unit: True = in pool (available)
+    _free: np.ndarray = dataclasses.field(init=False)
+    _parent: np.ndarray = dataclasses.field(init=False)
+    # bitmasks per unit as Python ints — arbitrary pool sizes (a cluster
+    # fleet has many more units than the paper's 32 cores)
+    _children: list = dataclasses.field(init=False)
+    _prealloc: list = dataclasses.field(init=False)
+    _disabled: np.ndarray = dataclasses.field(init=False)
+    created_total: int = dataclasses.field(init=False, default=0)
+    peak_used: int = dataclasses.field(init=False, default=0)
+
+    def __post_init__(self):
+        self._free = np.ones(self.n, bool)
+        self._parent = np.full(self.n, -1, np.int64)
+        self._children = [0] * self.n
+        self._prealloc = [0] * self.n
+        self._disabled = np.zeros(self.n, bool)
+
+    # -- queries ----------------------------------------------------------
+    @property
+    def available(self) -> int:
+        return int(np.sum(self._free & ~self._disabled))
+
+    @property
+    def used(self) -> int:
+        return int(np.sum(~self._free))
+
+    def children_of(self, unit: int) -> list[int]:
+        mask = self._children[unit]
+        return [i for i in range(self.n) if mask >> i & 1]
+
+    def parent_of(self, unit: int) -> int:
+        return int(self._parent[unit])
+
+    def ready(self) -> bool:
+        """The SV's 'ALU avail' signal: ready while ≥1 core is free (§3.1)."""
+        return self.available > 0
+
+    # -- transitions -------------------------------------------------------
+    def rent(self, parent: Optional[int] = None,
+             prefer_preallocated: bool = True) -> Optional[int]:
+        """Rent the first available unit; administer parent/child masks."""
+        cand = self._free & ~self._disabled
+        if parent is not None and prefer_preallocated:
+            pre = np.array([bool(self._prealloc[parent] >> i & 1)
+                            for i in range(self.n)])
+            if np.any(cand & pre):
+                cand = cand & pre
+        idx = np.flatnonzero(cand)
+        if idx.size == 0:
+            return None
+        u = int(idx[0])
+        self._free[u] = False
+        if parent is not None:
+            self._parent[u] = parent
+            self._children[parent] |= 1 << u
+        self.created_total += 1
+        self.peak_used = max(self.peak_used, self.used)
+        return u
+
+    def preallocate(self, parent: int, k: int) -> list[int]:
+        """Mark k free units as preallocated for `parent` (§5.1: guarantees
+        a core is always available for the iterations)."""
+        got = []
+        for u in np.flatnonzero(self._free & ~self._disabled)[:k]:
+            self._prealloc[parent] |= 1 << int(u)
+            got.append(int(u))
+        return got
+
+    def release(self, unit: int) -> None:
+        """Terminate the QT on `unit`: clear masks, return to pool (§4.3)."""
+        if self._free[unit]:
+            raise ValueError(f"unit {unit} is not rented")
+        if self._children[unit] != 0:
+            # §4.3: the SV blocks termination of a parent until its
+            # children mask gets cleared.
+            raise RuntimeError(
+                f"unit {unit} has live children; termination blocked")
+        p = int(self._parent[unit])
+        if p >= 0:
+            self._children[p] &= ~(1 << unit)
+        self._parent[unit] = -1
+        # clear any prealloc claims on this unit
+        for i in range(self.n):
+            self._prealloc[i] &= ~(1 << unit)
+        self._free[unit] = True
+
+    def disable(self, unit: int) -> None:
+        """A unit becomes unavailable ('overheating' / failed host)."""
+        self._disabled[unit] = True
+
+    def enable(self, unit: int) -> None:
+        self._disabled[unit] = False
+
+    # -- invariants (property-tested) --------------------------------------
+    def check_invariants(self) -> None:
+        assert self._parent.shape == (self.n,)
+        for u in range(self.n):
+            p = int(self._parent[u])
+            if p >= 0:
+                assert not self._free[u], f"{u} has parent but is free"
+                assert (self._children[p] >> u) & 1, \
+                    f"{u}'s parent {p} does not list it"
+        for p in range(self.n):
+            for c in self.children_of(p):
+                assert int(self._parent[c]) == p
+        # pool conservation
+        assert self.used + self.available + int(
+            np.sum(self._disabled & self._free)) == self.n

@@ -1,0 +1,110 @@
+"""Analytic timing model of the EMPA processor + the paper's figure of merit.
+
+Table 1 of the paper implies (and the clock-level machine reproduces) the
+exact execution-time model::
+
+    T_NO(n)    = 22 + 30 n      k = 1
+    T_FOR(n)   = 20 + 11 n      k = 2
+    T_SUMUP(n) = 32 +  1 n      k = min(n, 30) + 1
+
+Derivation (isa.COST): the conventional loop body is
+mrmovl(6)+addl(4)+irmovl(4)+addl(4)+irmovl(4)+addl(4)+jne(4) = 30 clocks and
+setup+halt = 22.  FOR replaces the computed control instructions by SV
+functionality: one create clock + the 10-clock payload per iteration, with a
+2-clock prologue difference (no 'je' guard; +prealloc +mode-enter +exit
+transfer -wait elision) — net 20 + 11 n.  SUMUP staggers one child per clock
+into a parent-side combining unit: after a 12-clock pipeline fill, one
+element per clock, +readout: 32 + n.  Speedups saturate at 30/11 and 30
+(paper §6.1), and at most 31 cores are ever in use because a child core's
+full turnaround is 30 clocks (§6.2).
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import numpy as np
+
+Mode = Literal["NO", "FOR", "SUMUP"]
+
+# EMPA child-core turnaround in SUMUP mode (rent -> ... -> rentable), clocks.
+SUMUP_TURNAROUND = 30
+MAX_SUMUP_CORES = SUMUP_TURNAROUND + 1  # 30 children + 1 parent (§6.2)
+
+
+def exec_clocks(n, mode: Mode):
+    """Execution time of the `sumup` workload on an n-element vector."""
+    n = np.asarray(n)
+    if mode == "NO":
+        return 22 + 30 * n
+    if mode == "FOR":
+        return 20 + 11 * n
+    if mode == "SUMUP":
+        return 32 + n
+    raise ValueError(mode)
+
+
+def cores_used(n, mode: Mode):
+    n = np.asarray(n)
+    if mode == "NO":
+        return np.ones_like(n)
+    if mode == "FOR":
+        return np.full_like(n, 2)
+    if mode == "SUMUP":
+        return np.minimum(n, SUMUP_TURNAROUND) + 1
+    raise ValueError(mode)
+
+
+def speedup(n, mode: Mode):
+    return exec_clocks(n, "NO") / exec_clocks(n, mode)
+
+
+def s_over_k(n, mode: Mode):
+    """The traditional merit S/k (paper Fig. 5/6)."""
+    return speedup(n, mode) / cores_used(n, mode)
+
+
+def alpha_eff(k, s):
+    """Effective parallelization, Eq. (1):  α_eff = k/(k−1) · (S−1)/S.
+
+    For k == 1 the merit is defined as 1 (perfectly 'parallelized' single
+    core, matching Table 1's NO rows).
+    """
+    k = np.asarray(k, dtype=np.float64)
+    s = np.asarray(s, dtype=np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        a = k / (k - 1.0) * (s - 1.0) / s
+    return np.where(k <= 1, 1.0, a)
+
+
+def alpha_eff_mode(n, mode: Mode):
+    """α_eff for the sumup workload; uses k_eff = min(n,30)+1 per §6.2."""
+    return alpha_eff(cores_used(n, mode), speedup(n, mode))
+
+
+def saturation_speedup(mode: Mode) -> float:
+    """lim n→∞ of the speedup (paper §6.1: 30/11 and 30)."""
+    if mode == "NO":
+        return 1.0
+    if mode == "FOR":
+        return 30.0 / 11.0
+    if mode == "SUMUP":
+        return 30.0
+    raise ValueError(mode)
+
+
+# Table 1 of the paper, verbatim (vector length, mode, clocks, cores,
+# speedup, S/k, alpha_eff) — the oracle for tests and benchmarks.
+TABLE1 = [
+    (1, "NO", 52, 1, 1.0, 1.0, 1.0),
+    (1, "FOR", 31, 2, 1.68, 0.84, 0.81),
+    (1, "SUMUP", 33, 2, 1.58, 0.79, 0.73),
+    (2, "NO", 82, 1, 1.0, 1.0, 1.0),
+    (2, "FOR", 42, 2, 1.95, 0.98, 0.97),
+    (2, "SUMUP", 34, 3, 2.41, 0.80, 0.87),
+    (4, "NO", 142, 1, 1.0, 1.0, 1.0),
+    (4, "FOR", 64, 2, 2.22, 1.11, 1.10),
+    (4, "SUMUP", 36, 5, 3.94, 0.79, 0.93),
+    (6, "NO", 202, 1, 1.0, 1.0, 1.0),
+    (6, "FOR", 86, 2, 2.34, 1.17, 1.15),
+    (6, "SUMUP", 38, 7, 5.31, 0.76, 0.95),
+]

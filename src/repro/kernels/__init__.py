@@ -1,0 +1,12 @@
+# EMPA-adapted TPU kernels (Pallas).  Each subpackage:
+#   kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling
+#   ops.py    — jit'd public wrapper (interpret=True off-TPU)
+#   ref.py    — pure-jnp oracle used by the allclose tests
+#
+#   sumup           — SUMUP mass mode: streaming reduction, partials never
+#                     leave VMEM (no read/write-back of the running sum)
+#   massmap         — FOR mass mode: the grid owns loop control/addressing,
+#                     the body is pure payload
+#   flash_attention — SUMUP applied to softmax: online (m, l, acc) stream
+#   ssd_scan        — Mamba2 SSD: chunk children + sequential-grid parent
+#                     state carry (the latched parent-child chain)

@@ -1,0 +1,100 @@
+"""Flash attention (causal GQA) — SUMUP mode applied to softmax.
+
+The (Sq × Skv) score matrix is the "partial sum" of §5.2: it is never
+needed as a whole, only the normalized PV product is.  So the running
+(max m, denominator l, accumulator acc) live in VMEM scratch across the
+sequential KV grid dimension — children (KV tiles) stream their scores
+into the parent's combining unit, and HBM sees only the final output.
+
+Grid: (batch, q_heads, q_blocks, kv_blocks); the last dimension iterates
+sequentially on TPU, which is what makes the scratch carry legal.
+BlockSpec index maps give GQA for free: the KV block index maps head h to
+kv-head h // group.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc, m, l, *,
+                  sm_scale: float, causal: bool, block_q: int, block_k: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m[...] = jnp.full_like(m, NEG_INF)
+        l[...] = jnp.zeros_like(l)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)            # (bk, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * sm_scale
+    if causal:
+        qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (block_q, block_k), 0)
+        kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (block_q, block_k), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+    m_prev = m[...]                                 # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)                 # renormalize the parent
+    p = jnp.exp(s - m_new)                          # (bq, bk)
+    l[...] = l[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc[...] = acc[...] * alpha + jax.lax.dot(p, v)
+    m[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _readout():
+        o_ref[0, 0] = (acc[...] /
+                       jnp.maximum(l[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_call(q, k, v, *, causal: bool = True,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool = True):
+    """q: (B, H, Sq, D); k, v: (B, Hkv, Skv, D) -> (B, H, Sq, D)."""
+    b, h, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert h % hkv == 0
+    group = h // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    assert sq % block_q == 0 and skv % block_k == 0
+    sm_scale = 1.0 / (d ** 0.5)
+
+    kern = functools.partial(_flash_kernel, sm_scale=sm_scale, causal=causal,
+                             block_q=block_q, block_k=block_k)
+    grid = (b, h, sq // block_q, skv // block_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # denominator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,20 @@
+"""Public jit'd wrapper for flash attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_call
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    """Causal GQA flash attention.  (B,H,Sq,D) × (B,Hkv,Skv,D) layout."""
+    return flash_attention_call(q, k, v, causal=causal, block_q=block_q,
+                                block_k=block_k, interpret=_interpret())

@@ -1,0 +1,2 @@
+from repro.kernels.massmap.ops import massmap  # noqa: F401
+from repro.kernels.massmap.ref import massmap_ref  # noqa: F401

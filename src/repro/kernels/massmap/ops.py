@@ -1,0 +1,20 @@
+"""Public jit'd wrapper for the massmap kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.massmap.kernel import massmap_call
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("act", "block_m", "block_n"))
+def massmap(x, scale, bias, act: str = "silu", block_m: int = 256,
+            block_n: int = 512):
+    """Fused scale-bias-activation: act(x * scale + bias), columnwise."""
+    return massmap_call(x, scale, bias, act=act, block_m=block_m,
+                        block_n=block_n, interpret=_interpret())

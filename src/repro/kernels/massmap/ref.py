@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the massmap kernel."""
+import jax
+import jax.numpy as jnp
+
+_ACTS = {
+    "silu": lambda x: x * jax.nn.sigmoid(x),
+    "gelu": jax.nn.gelu,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "none": lambda x: x,
+}
+
+
+def massmap_ref(x, scale, bias, act: str = "silu"):
+    y = _ACTS[act](x.astype(jnp.float32) * scale.astype(jnp.float32)
+                   + bias.astype(jnp.float32))
+    return y.astype(x.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.ssd_scan.ops import ssd_chunked_kernel  # noqa: F401
+from repro.kernels.ssd_scan.ref import ssd_scan_ref  # noqa: F401

@@ -1,0 +1,96 @@
+"""Mamba2 SSD chunk scan — parent-child QT chain as a TPU kernel.
+
+Each sequence chunk is a child QT: it computes its intra-chunk
+(quadratic, MXU-friendly) contribution locally.  The (P × N) SSM state is
+the parent's latched register: carried in VMEM scratch across the
+sequential chunk grid dimension, updated once per chunk (the clone-back),
+never written to HBM until the final read-out.  This is the §5.2 insight
+— eliminate the obsolete state write-back between iterations — applied to
+the SSD recurrence.
+
+Grid: (batch, heads, n_chunks); last dim sequential.  ops.py does the
+cheap elementwise prep (dt softplus, cumsum, head broadcast) in jnp and
+calls this kernel for the O(S·Q·(N+P)) heavy part.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xdt_ref, cum_ref, b_ref, c_ref, y_ref, state_out_ref, state):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)      # fresh parent latch
+
+    xdt = xdt_ref[0, 0, 0].astype(jnp.float32)   # (Q, P)
+    cum = cum_ref[0, 0, 0].astype(jnp.float32)   # (Q, 1) within-chunk cumsum
+    bmat = b_ref[0, 0, 0].astype(jnp.float32)    # (Q, N)
+    cmat = c_ref[0, 0, 0].astype(jnp.float32)    # (Q, N)
+
+    # --- child's local work: intra-chunk (semiseparable) product ---
+    seg = cum - cum.T                           # (Q, Q) cum_q - cum_t
+    q = cum.shape[0]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    l_mat = jnp.where(tri, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())))  # (Q, Q)
+    y = jax.lax.dot(cb * l_mat, xdt)            # (Q, P)
+
+    # --- parent contribution: state from previous chunks ---
+    y += jnp.exp(cum) * jax.lax.dot(cmat, state[...])          # (Q,N)@(N,P)
+
+    # --- clone-back: update the latched state for the next child ---
+    cum_last = cum[-1:, :]                       # (1, 1)
+    decay_to_end = jnp.exp(cum_last - cum)       # (Q, 1)
+    state[...] = jnp.exp(cum_last) * state[...] + \
+        jax.lax.dot_general(bmat * decay_to_end, xdt,
+                            (((0,), (0,)), ((), ())))          # (N, P)
+
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == pl.num_programs(2) - 1)
+    def _readout():
+        state_out_ref[0, 0] = state[...].astype(state_out_ref.dtype)
+
+
+def ssd_scan_call(xdt, cum, b_mat, c_mat, *, interpret: bool = True):
+    """Chunked SSD core.
+
+    xdt:   (B, H, NC, Q, P)  x · dt, f32
+    cum:   (B, H, NC, Q, 1)  within-chunk cumsum of dt·A
+    b_mat: (B, H, NC, Q, N)
+    c_mat: (B, H, NC, Q, N)
+    Returns (y (B, H, NC, Q, P), final_state (B, H, N, P)).
+    """
+    bsz, h, nc, q, p = xdt.shape
+    n = b_mat.shape[-1]
+    grid = (bsz, h, nc)
+    kern = _ssd_kernel
+    y, state = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda ib, ih, ic: (ib, ih, ic, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q, 1), lambda ib, ih, ic: (ib, ih, ic, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q, n), lambda ib, ih, ic: (ib, ih, ic, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q, n), lambda ib, ih, ic: (ib, ih, ic, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda ib, ih, ic: (ib, ih, ic, 0, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, nc, q, p), xdt.dtype),
+            jax.ShapeDtypeStruct((bsz, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xdt, cum, b_mat, c_mat)
+    return y, state

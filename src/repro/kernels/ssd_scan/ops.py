@@ -1,0 +1,59 @@
+"""Public wrapper: full Mamba2-SSD signature around the chunk-scan kernel.
+
+Accepts the same arguments as models/ssm.ssd_chunked and returns the same
+(y, final_state) pair, so the kernel can swap in for the jnp path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_call
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_heads(bc, nheads: int):
+    b, s, g, n = bc.shape
+    rep = nheads // g
+    return jnp.broadcast_to(bc[:, :, :, None, :], (b, s, g, rep, n)) \
+              .reshape(b, s, nheads, n)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_chunked_kernel(x, dt, a_log, b_mat, c_mat, d_skip, dt_bias,
+                       chunk: int = 64, init_state=None):
+    """Kernel-backed drop-in for models/ssm.ssd_chunked (init_state=None)."""
+    assert init_state is None, "kernel path starts from a fresh state"
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    f32 = jnp.float32
+
+    dt = jax.nn.softplus(dt.astype(f32) + dt_bias.astype(f32))       # (B,S,H)
+    a = -jnp.exp(a_log.astype(f32))
+    da = dt * a
+    xdt = x.astype(f32) * dt[..., None]                               # (B,S,H,P)
+    bh = _to_heads(b_mat, h).astype(f32)
+    ch = _to_heads(c_mat, h).astype(f32)
+
+    def chunked(t, feat):                       # (B,S,H,F) -> (B,H,NC,Q,F)
+        return t.transpose(0, 2, 1, 3).reshape(bsz, h, nc, chunk, feat)
+
+    cum = jnp.cumsum(da.reshape(bsz, nc, chunk, h), axis=2) \
+             .reshape(bsz, s, h)
+    y, state = ssd_scan_call(
+        chunked(xdt, p),
+        chunked(cum[..., None].reshape(bsz, s, h, 1), 1),
+        chunked(bh, n), chunked(ch, n),
+        interpret=_interpret())
+
+    y = y.reshape(bsz, h, s, p).transpose(0, 2, 1, 3)                # (B,S,H,P)
+    y = y + x.astype(f32) * d_skip.astype(f32)[None, None, :, None]
+    return y.astype(x.dtype), state.transpose(0, 1, 3, 2)            # (B,H,P,N)

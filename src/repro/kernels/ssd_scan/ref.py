@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the SSD chunk-scan kernel (kernel-layout inputs)."""
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(xdt, cum, b_mat, c_mat):
+    """Same contract as kernel.ssd_scan_call, sequential-scan reference."""
+    bsz, h, nc, q, p = xdt.shape
+    n = b_mat.shape[-1]
+    f32 = jnp.float32
+    xdt, cum = xdt.astype(f32), cum.astype(f32)
+    b_mat, c_mat = b_mat.astype(f32), c_mat.astype(f32)
+
+    tri = jnp.tril(jnp.ones((q, q), f32))
+
+    def chunk(state, inp):
+        xd, cm, bm, cmt = inp                     # (Q,P),(Q,1),(Q,N),(Q,N)
+        seg = cm - cm.T
+        l_mat = jnp.where(tri > 0, jnp.exp(seg), 0.0)
+        y = ((cmt @ bm.T) * l_mat) @ xd
+        y = y + jnp.exp(cm) * (cmt @ state)
+        state = jnp.exp(cm[-1:]) * state + (bm * jnp.exp(cm[-1:] - cm)).T @ xd
+        return state, y
+
+    def per_bh(args):
+        xd, cm, bm, cmt = args
+        state0 = jnp.zeros((n, p), f32)
+        state, ys = jax.lax.scan(chunk, state0, (xd, cm, bm, cmt))
+        return ys, state
+
+    flat = (xdt.reshape(bsz * h, nc, q, p), cum.reshape(bsz * h, nc, q, 1),
+            b_mat.reshape(bsz * h, nc, q, n), c_mat.reshape(bsz * h, nc, q, n))
+    ys, states = jax.vmap(per_bh)((flat))
+    return (ys.reshape(bsz, h, nc, q, p).astype(xdt.dtype),
+            states.reshape(bsz, h, n, p))

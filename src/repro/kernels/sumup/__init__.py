@@ -1,0 +1,2 @@
+from repro.kernels.sumup.ops import sumup  # noqa: F401
+from repro.kernels.sumup.ref import sumup_ref  # noqa: F401

@@ -1,0 +1,59 @@
+"""SUMUP mass-processing mode as a TPU kernel.
+
+Paper §5.2: the partial sum "is never used, we are only interested in the
+final sum" — so the read-out/write-back stages of the accumulator are
+obsolete.  TPU adaptation: the running sum lives in a VMEM scratch
+accumulator across sequential grid steps; only the final value is written
+to HBM.  The Pallas grid machinery is the supervisor: it streams one
+`block`-wide stripe per step (the staggered children), the f32 accumulator
+is the parent-side adder.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sumup_kernel(x_ref, o_ref, acc, *, op: str):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        if op == "max":
+            acc[...] = jnp.full_like(acc, -jnp.inf)
+        else:
+            acc[...] = jnp.zeros_like(acc)
+
+    x = x_ref[...].astype(jnp.float32)
+    part = jnp.max(x, axis=-1, keepdims=True) if op == "max" \
+        else jnp.sum(x, axis=-1, keepdims=True)
+    if op == "max":
+        acc[...] = jnp.maximum(acc[...], part)
+    else:
+        acc[...] += part                      # parent adder, stays in VMEM
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _readout():                           # the single read-out clock
+        o_ref[...] = acc[...]
+
+
+def sumup_call(x, *, block: int = 2048, op: str = "sum",
+               interpret: bool = True):
+    """x: (rows, N) -> (rows, 1) f32 reduction along the last axis."""
+    rows, n = x.shape
+    block = min(block, n)
+    assert n % block == 0, (n, block)
+    kern = functools.partial(_sumup_kernel, op=op)
+    return pl.pallas_call(
+        kern,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((rows, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((rows, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((rows, 1), jnp.float32)],
+        interpret=interpret,
+    )(x)

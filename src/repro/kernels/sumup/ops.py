@@ -1,0 +1,21 @@
+"""Public jit'd wrapper for the sumup kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sumup.kernel import sumup_call
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block", "op"))
+def sumup(x, block: int = 2048, op: str = "sum"):
+    """Streaming reduction over the last axis of (rows, N) -> (rows, 1)."""
+    if x.ndim == 1:
+        x = x[None]
+    return sumup_call(x, block=block, op=op, interpret=_interpret())

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the sumup kernel."""
+import jax.numpy as jnp
+
+
+def sumup_ref(x, op: str = "sum"):
+    x = x.astype(jnp.float32)
+    if op == "max":
+        return jnp.max(x, axis=-1, keepdims=True)
+    return jnp.sum(x, axis=-1, keepdims=True)

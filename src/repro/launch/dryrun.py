@@ -1,0 +1,160 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves the distribution config is coherent without real
+hardware: sharding propagates, the collectives exist, memory fits.  The
+compiled artifact's cost analysis + HLO collective inventory are dumped as
+JSON for EXPERIMENTS.md §Dry-run and the §Roofline analysis.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod/--single-pod]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST precede every other import (jax locks the device
+# count at first initialization).
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_arch, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.runtime.accounting import hlo_collectives, jaxpr_cost
+from repro.runtime.supervisor import ClusterSupervisor
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> dict:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if not ok:
+        cell["status"] = "skipped"
+        cell["reason"] = why
+        if verbose:
+            print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: SKIP ({why})")
+        return cell
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sup = ClusterSupervisor(mesh, cfg, shape)
+    plan = sup.plan()
+    with mesh:
+        lowered = jax.jit(plan.step_fn,
+                          in_shardings=plan.in_shardings,
+                          out_shardings=plan.out_shardings,
+                          donate_argnums=plan.donate_argnums) \
+            .lower(*plan.abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_stats = {k: int(getattr(mem, k)) for k in
+                     ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+                     if hasattr(mem, k)}
+    except Exception as e:  # pragma: no cover - backend dependent
+        mem_stats = {"error": str(e)}
+
+    # loop-aware accounting (see runtime/accounting.py): jaxpr cost is
+    # GLOBAL; HLO collectives are PER-DEVICE wire bytes
+    t1 = time.time()
+    with mesh:
+        jcost = jaxpr_cost(plan.step_fn, *plan.abstract_args)
+    coll = hlo_collectives(compiled.as_text())
+    t_account = time.time() - t1
+
+    n_dev = mesh.devices.size
+    cell.update(
+        status="ok",
+        n_devices=int(n_dev),
+        kind=shape.kind,
+        microbatches=sup.n_microbatch,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        account_s=round(t_account, 1),
+        # global, loop-aware (jaxpr walk)
+        global_flops=jcost["flops"],
+        global_matmul_flops=jcost["matmul_flops"],
+        global_bytes_prefusion=jcost["bytes"],
+        # raw XLA numbers (loop bodies counted once — kept for reference)
+        xla_flops_per_device_bodyonce=float(cost.get("flops", -1.0)),
+        xla_bytes_per_device_bodyonce=float(cost.get("bytes accessed", -1.0)),
+        memory=mem_stats,
+        collectives=coll,
+        sharding_fallbacks=plan.rules.report(),
+        notes=plan.notes,
+    )
+    if verbose:
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: OK "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s, "
+              f"{jcost['flops']:.3g} global flops, "
+              f"{coll['total_bytes']:.3g} coll B/dev)")
+        print(f"  memory_analysis: {mem_stats}")
+        print(f"  cost_analysis(body-once): flops={cost.get('flops')} "
+              f"bytes={cost.get('bytes accessed')}")
+    return cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun.json")
+    ap.add_argument("--append", action="store_true")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.multi_pod or not args.single_pod:
+        meshes.append(True)
+    if args.single_pod or not args.multi_pod:
+        meshes.insert(0, False)
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    cells.append(run_cell(arch, shape, mp))
+                except Exception:
+                    traceback.print_exc()
+                    cells.append({"arch": arch, "shape": shape,
+                                  "mesh": "pod2x16x16" if mp else "pod16x16",
+                                  "status": "error",
+                                  "error": traceback.format_exc()[-2000:]})
+                # persist incrementally — a crash keeps prior results
+                os.makedirs(os.path.dirname(args.out), exist_ok=True)
+                prior = []
+                if args.append and os.path.exists(args.out):
+                    with open(args.out) as f:
+                        prior = json.load(f)
+                    args.append = False
+                with open(args.out, "w") as f:
+                    json.dump(prior + cells, f, indent=1)
+                if prior:
+                    cells = prior + cells
+
+    n_ok = sum(1 for c in cells if c.get("status") == "ok")
+    n_skip = sum(1 for c in cells if c.get("status") == "skipped")
+    n_err = sum(1 for c in cells if c.get("status") == "error")
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"-> {args.out}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,1 @@
+from repro.models import attention, layers, model, moe, params, ssm  # noqa: F401

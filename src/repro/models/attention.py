@@ -1,0 +1,141 @@
+"""Attention: GQA with RoPE; full / blockwise (online-softmax) / decode.
+
+The blockwise path is the SUMUP-mode adaptation at the XLA level: the
+(S × S) score matrix is never materialized — a ``lax.scan`` over KV chunks
+streams partial scores into running (max, denominator, accumulator) state,
+exactly the paper's "children stream summands into a parent-side adder;
+the partial sum is never written back" (§5.2), applied to softmax
+normalization.  The Pallas kernel (kernels/flash_attention) is the VMEM
+realization of the same schedule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _sh(x, axes):
+    from repro.runtime.sharding import shard
+    return shard(x, axes)
+
+
+def _repeat_kv(k, n_rep: int):
+    """(B, S, Hkv, D) -> (B, S, Hkv * n_rep, D)."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)) \
+              .reshape(b, s, h * n_rep, d)
+
+
+def full_attention(q, k, v, *, causal: bool, q_offset=0):
+    """q: (B, Sq, H, D); k,v: (B, Skv, Hkv, D).  Returns (B, Sq, H, D).
+
+    Reference path (materializes scores) — used for short sequences and as
+    the oracle for the blockwise path and the Pallas kernel.
+    """
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    k = _repeat_kv(k, h // hkv)
+    v = _repeat_kv(v, h // hkv)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(k.shape[1])[None, :]
+        scores = jnp.where(kpos <= qpos, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, chunk: int = 1024,
+                        q_offset=0):
+    """Online-softmax attention, O(S·chunk) memory (SUMUP-mode schedule).
+
+    Scans over KV chunks carrying (acc, running max m, denominator l).
+    """
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    skv = k.shape[1]
+    n_rep = h // hkv
+    chunk = min(chunk, skv)
+    assert skv % chunk == 0, (skv, chunk)
+    nkc = skv // chunk
+
+    # carry sharding: heads over "model" when divisible, else sequence
+    # parallelism over Sq ("attn_sq") — without a stable constraint the
+    # f32 carry bounces between layouts on every KV chunk, which showed up
+    # as the dominant collective term for the 36/24/12-head archs (§Perf).
+    # Always on: it looks like a collective regression for starcoder2 at
+    # train length (bound 5.3 -> 9.0 s) — but the unconstrained layout
+    # needs 23.9 GB/dev of transients (whisper: 56 GB), i.e. it does not
+    # fit v5e HBM at all.  The constrained layout is the deployable one
+    # (§Perf notes).
+    _c = _sh
+    CARRY4 = ("batch", "heads_act", "attn_sq", None)
+    CARRY3 = ("batch", "heads_act", "attn_sq")
+
+    qf = (q.astype(jnp.float32) / jnp.sqrt(jnp.float32(d)))
+    qf = _c(qf, ("batch", "attn_sq", "heads_act", None))
+    kc = k.reshape(b, nkc, chunk, hkv, d)
+    vc = v.reshape(b, nkc, chunk, hkv, d)
+    qpos = jnp.arange(sq) + q_offset
+
+    def step(carry, inputs):
+        acc, m, l = carry
+        kb, vb, ci = inputs
+        kb = _repeat_kv(kb, n_rep)          # (B, chunk, H, D)
+        vb = _repeat_kv(vb, n_rep)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(jnp.float32))
+        if causal:
+            kpos = ci * chunk + jnp.arange(chunk)
+            s = jnp.where(kpos[None, :] <= qpos[:, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # renormalize the running accumulator; stream in this chunk
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+        return (_c(acc_new, CARRY4), _c(m_new, CARRY3),
+                _c(l_new, CARRY3)), None
+
+    acc0 = _c(jnp.zeros((b, h, sq, d), jnp.float32), CARRY4)
+    m0 = _c(jnp.full((b, h, sq), NEG_INF, jnp.float32), CARRY3)
+    l0 = _c(jnp.zeros((b, h, sq), jnp.float32), CARRY3)
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.arange(nkc)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out, 1, 2).astype(q.dtype)      # (B, Sq, H, D)
+    # one-time reshard OUT of the carry layout: without this the Sq shard
+    # leaks into the residual stream and the loss contracts against
+    # d-partial activations (measured: a (B, chunk, V) f32 all-reduce per
+    # loss chunk on whisper — §Perf notes)
+    return _c(out, ("batch", None, "heads_act", None))
+
+
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """Single-token decode: q (B, 1, H, D) against a (B, Smax, Hkv, D) cache.
+
+    ``cache_len`` masks the still-empty tail of the cache.
+    """
+    b, _, h, d = q.shape
+    hkv = k_cache.shape[2]
+    k = _repeat_kv(k_cache, h // hkv)
+    v = _repeat_kv(v_cache, h // hkv)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(d))
+    kpos = jnp.arange(k.shape[1])
+    s = jnp.where(kpos[None, None, None, :] < cache_len[:, None, None, None],
+                  s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+
+
+def attention_flops(batch: int, sq: int, skv: int, heads: int, head_dim: int,
+                    causal: bool) -> float:
+    f = 4.0 * batch * heads * sq * skv * head_dim  # QK^T + PV
+    return f / 2 if causal and sq == skv else f

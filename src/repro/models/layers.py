@@ -1,0 +1,105 @@
+"""Shared neural-net layers (pure functions over param subtrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def gated_rms_norm(x, gate, weight, eps: float = 1e-5):
+    """Mamba2's RMSNorm(x * silu(z)) fused gate-norm."""
+    return rms_norm(x * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype),
+                    weight, eps)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                        # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def learned_pos_embed(table, positions):
+    return jnp.take(table, jnp.clip(positions, 0, table.shape[0] - 1), axis=0)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp(x, p, act: str = "silu"):
+    """SwiGLU (silu) or plain two-layer (gelu/relu) MLP.
+
+    p: {"w_gate": (d, f)?, "w_up": (d, f), "w_down": (f, d)}
+    """
+    a = act_fn(act)
+    up = jnp.einsum("...d,df->...f", x, p["w_up"])
+    if "w_gate" in p:
+        up = a(jnp.einsum("...d,df->...f", x, p["w_gate"])) * up
+    else:
+        up = a(up)
+    return jnp.einsum("...f,fd->...d", up, p["w_down"])
+
+
+def mlp_flops(tokens: int, d: int, f: int, gated: bool) -> float:
+    n_mats = 3 if gated else 2
+    return 2.0 * tokens * d * f * n_mats
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed(table, tokens):
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed_logits(x, table, true_vocab=None):
+    """x: (..., d); table: (Vp, d) -> logits (..., Vp).
+
+    With `true_vocab` < Vp (TP-padded tables), pad logits are masked to
+    -inf so softmax/argmax never select them."""
+    logits = jnp.einsum("...d,vd->...v", x, table)
+    vp = table.shape[0]
+    if true_vocab is not None and true_vocab < vp:
+        mask = jnp.arange(vp) < true_vocab
+        logits = jnp.where(mask, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+def cross_entropy(logits, labels, z_loss: float = 0.0):
+    """Mean next-token CE in f32.  labels < 0 are masked out."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.clip(labels, 0, logits.shape[-1] - 1)[..., None], axis=-1
+    )[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * lse**2
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

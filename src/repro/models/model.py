@@ -1,0 +1,736 @@
+"""Unified LM covering all assigned architecture families.
+
+One parameter-definition table (`param_defs`) drives initialization,
+abstract (dry-run) parameters and partition specs.  One set of step
+functions (`loss_fn`, `prefill`, `decode_step`) covers:
+
+* dense / MoE / VLM decoder-only transformers (GQA + RoPE + SwiGLU),
+* Mamba2 SSD stacks (attention-free),
+* zamba2-style hybrids (SSD stack + ONE shared attention block applied
+  every k layers — the shared block is a rented core: one weight set,
+  many QTs),
+* whisper-style encoder-decoder (stub audio frontend per assignment).
+
+Layers are stacked (leading L axis) and scanned — the FOR-mode discipline:
+the loop lives in one compiled `lax.scan`, layer weights are all-gathered
+(FSDP) right before use, exactly EMPA's clone-the-glue-on-rent.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_lib
+from repro.models import layers, moe, ssm
+from repro.models.params import ParamDef, abstract_params, axes_tree, init_params
+
+BLOCKWISE_THRESHOLD = 2048   # use online-softmax attention above this S
+AUX_LOSS_WEIGHT = 0.01
+LOSS_CHUNK = 1024            # FOR-mode chunked CE (never materialize B,S,V)
+
+
+# ===========================================================================
+# Parameter definitions
+# ===========================================================================
+
+def _attn_defs(prefix, cfg: ArchConfig, n_layers: Optional[int],
+               cross: bool = False) -> list[ParamDef]:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    lead = () if n_layers is None else (n_layers,)
+    la = () if n_layers is None else ("layers",)
+    sfx = "x" if cross else ""
+    return [
+        ParamDef(prefix + (f"w{sfx}q",), lead + (d, h, dh),
+                 la + ("w_embed", "heads", None)),
+        ParamDef(prefix + (f"w{sfx}k",), lead + (d, hkv, dh),
+                 la + ("w_embed", "kv_heads", None)),
+        ParamDef(prefix + (f"w{sfx}v",), lead + (d, hkv, dh),
+                 la + ("w_embed", "kv_heads", None)),
+        ParamDef(prefix + (f"w{sfx}o",), lead + (h, dh, d),
+                 la + ("heads", None, "w_embed"),
+                 scale=1.0 / (h * dh) ** 0.5),
+    ]
+
+
+def _mlp_defs(prefix, cfg: ArchConfig, n_layers: Optional[int]) -> list[ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    lead = () if n_layers is None else (n_layers,)
+    la = () if n_layers is None else ("layers",)
+    out = []
+    if cfg.act == "silu":
+        out.append(ParamDef(prefix + ("w_gate",), lead + (d, f),
+                            la + ("w_embed", "ffn")))
+    out += [
+        ParamDef(prefix + ("w_up",), lead + (d, f), la + ("w_embed", "ffn")),
+        ParamDef(prefix + ("w_down",), lead + (f, d), la + ("ffn", "w_embed")),
+    ]
+    return out
+
+
+def _moe_defs(prefix, cfg: ArchConfig, n_layers: int) -> list[ParamDef]:
+    d, fe, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ll, la = (n_layers,), ("layers",)
+    out = [
+        ParamDef(prefix + ("router",), ll + (d, e), la + (None, None)),
+        ParamDef(prefix + ("w_gate",), ll + (e, d, fe),
+                 la + ("experts", "w_embed", "ffn")),
+        ParamDef(prefix + ("w_up",), ll + (e, d, fe),
+                 la + ("experts", "w_embed", "ffn")),
+        ParamDef(prefix + ("w_down",), ll + (e, fe, d),
+                 la + ("experts", "ffn", "w_embed")),
+    ]
+    if cfg.n_shared_experts:
+        fs = fe * cfg.n_shared_experts
+        out += [
+            ParamDef(prefix + ("sh_gate",), ll + (d, fs), la + ("w_embed", "ffn")),
+            ParamDef(prefix + ("sh_up",), ll + (d, fs), la + ("w_embed", "ffn")),
+            ParamDef(prefix + ("sh_down",), ll + (fs, d), la + ("ffn", "w_embed")),
+        ]
+    return out
+
+
+def _mamba_defs(prefix, cfg: ArchConfig, n_layers: int) -> list[ParamDef]:
+    d, di = cfg.d_model, cfg.d_inner
+    k, cdim, h = ssm.proj_dim(cfg), ssm.conv_dim(cfg), cfg.ssm_nheads
+    ll, la = (n_layers,), ("layers",)
+    return [
+        ParamDef(prefix + ("ln",), ll + (d,), la + (None,), init="ones"),
+        ParamDef(prefix + ("w_in",), ll + (d, k), la + ("w_embed", "conv_dim")),
+        ParamDef(prefix + ("conv_w",), ll + (cfg.ssm_conv, cdim),
+                 la + (None, "conv_dim"), scale=0.1),
+        ParamDef(prefix + ("conv_b",), ll + (cdim,), la + ("conv_dim",),
+                 init="zeros"),
+        ParamDef(prefix + ("a_log",), ll + (h,), la + ("ssm_heads",),
+                 init="zeros"),
+        ParamDef(prefix + ("d_skip",), ll + (h,), la + ("ssm_heads",),
+                 init="ones"),
+        ParamDef(prefix + ("dt_bias",), ll + (h,), la + ("ssm_heads",),
+                 init="zeros"),
+        ParamDef(prefix + ("norm_w",), ll + (di,), la + ("conv_dim",),
+                 init="ones"),
+        ParamDef(prefix + ("w_out",), ll + (di, d), la + ("conv_dim", "w_embed"),
+                 scale=1.0 / di**0.5),
+    ]
+
+
+def _norm(prefix, cfg, n_layers, name) -> ParamDef:
+    lead = () if n_layers is None else (n_layers,)
+    la = () if n_layers is None else ("layers",)
+    return ParamDef(prefix + (name,), lead + (cfg.d_model,), la + (None,),
+                    init="ones")
+
+
+def param_defs(cfg: ArchConfig) -> list[ParamDef]:
+    # embedding tables use the TP-padded vocab; logits beyond cfg.vocab are
+    # masked at the loss/decode boundary (layers.unembed_logits)
+    d, v = cfg.d_model, cfg.vocab_padded
+    defs: list[ParamDef] = [
+        ParamDef(("embed", "tok"), (v, d), ("vocab", "w_embed"), init="embed"),
+        ParamDef(("final_norm",), (d,), (None,), init="ones"),
+    ]
+    if not cfg.tie_embeddings:
+        defs.append(ParamDef(("unembed",), (v, d), ("vocab", "w_embed"),
+                             init="embed"))
+    if cfg.pos_embed == "learned":
+        defs.append(ParamDef(("embed", "pos"), (cfg.max_position, d),
+                             (None, "w_embed"), init="embed"))
+    if cfg.frontend:
+        defs.append(ParamDef(("frontend", "proj"), (cfg.frontend_dim, d),
+                             (None, "w_embed")))
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        L = cfg.n_layers
+        defs += [_norm(("layers",), cfg, L, "ln1"), _norm(("layers",), cfg, L, "ln2")]
+        defs += _attn_defs(("layers",), cfg, L)
+        if cfg.is_moe:
+            defs += _moe_defs(("layers",), cfg, L)
+        else:
+            defs += _mlp_defs(("layers",), cfg, L)
+    elif fam == "ssm":
+        defs += _mamba_defs(("layers",), cfg, cfg.n_layers)
+    elif fam == "hybrid":
+        defs += _mamba_defs(("layers",), cfg, cfg.n_layers)
+        defs += [_norm(("shared",), cfg, None, "ln1"),
+                 _norm(("shared",), cfg, None, "ln2")]
+        defs += _attn_defs(("shared",), cfg, None)
+        defs += _mlp_defs(("shared",), cfg, None)
+    elif fam == "encdec":
+        Le, Ld = cfg.enc_layers, cfg.dec_layers
+        defs += [_norm(("encoder",), cfg, Le, "ln1"),
+                 _norm(("encoder",), cfg, Le, "ln2")]
+        defs += _attn_defs(("encoder",), cfg, Le)
+        defs += _mlp_defs(("encoder",), cfg, Le)
+        defs.append(ParamDef(("enc_norm",), (d,), (None,), init="ones"))
+        defs += [_norm(("decoder",), cfg, Ld, "ln1"),
+                 _norm(("decoder",), cfg, Ld, "lnx"),
+                 _norm(("decoder",), cfg, Ld, "ln2")]
+        defs += _attn_defs(("decoder",), cfg, Ld)
+        defs += _attn_defs(("decoder",), cfg, Ld, cross=True)
+        defs += _mlp_defs(("decoder",), cfg, Ld)
+    else:
+        raise ValueError(fam)
+    return defs
+
+
+def init(key, cfg: ArchConfig, dtype=jnp.bfloat16):
+    return init_params(param_defs(cfg), key, dtype)
+
+
+def abstract(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return abstract_params(param_defs(cfg), dtype)
+
+
+def logical_axes(cfg: ArchConfig):
+    return axes_tree(param_defs(cfg))
+
+
+# ===========================================================================
+# Blocks
+# ===========================================================================
+
+def _sh(x, axes):
+    from repro.runtime.sharding import shard
+    return shard(x, axes)
+
+
+def _attention(x_q, x_kv, p, cfg: ArchConfig, q_pos, kv_pos, *, causal,
+               sfx="", cache_kv=None, cache_len=None):
+    """Projections + RoPE + attention.  Returns (out, (k, v))."""
+    q = jnp.einsum("bsd,dhk->bshk", x_q, p[f"w{sfx}q"])
+    k = jnp.einsum("bsd,dhk->bshk", x_kv, p[f"w{sfx}k"])
+    v = jnp.einsum("bsd,dhk->bshk", x_kv, p[f"w{sfx}v"])
+    if cfg.pos_embed == "rope":
+        q = layers.apply_rope(q, q_pos, cfg.rope_theta)
+        k = layers.apply_rope(k, kv_pos, cfg.rope_theta)
+    q = _sh(q, ("batch", None, "heads_act", None))
+    if cache_kv is not None:
+        # decode: attend over the cache (k/v already written by caller)
+        ck, cv = cache_kv
+        o = attn_lib.decode_attention(q, ck, cv, cache_len)
+    elif x_q.shape[1] > BLOCKWISE_THRESHOLD:
+        o = attn_lib.blockwise_attention(q, k, v, causal=causal)
+    else:
+        o = attn_lib.full_attention(q, k, v, causal=causal)
+    out = jnp.einsum("bshk,hkd->bsd", o, p[f"w{sfx}o"])
+    return out, (k, v)
+
+
+def _ffn(x, p, cfg: ArchConfig):
+    """MLP or MoE.  Returns (y, aux_loss)."""
+    if cfg.is_moe:
+        from repro.runtime.sharding import current_rules
+        rules = current_rules()
+        if rules is not None and _moe_shardable(x, cfg, rules.mesh):
+            return moe.moe_ffn_sharded(x, p, cfg, cfg.act, rules.mesh)
+        return moe.moe_ffn(x, p, cfg, cfg.act)
+    return layers.mlp(x, p, cfg.act), jnp.float32(0.0)
+
+
+def _moe_shardable(x, cfg, mesh) -> bool:
+    """The explicit-locality EP path needs clean divisibility (see moe.py)."""
+    if "model" not in mesh.shape or "data" not in mesh.shape:
+        return False
+    dp = 1
+    for a in ("pod", "data"):
+        dp *= mesh.shape.get(a, 1)
+    return (cfg.n_experts % mesh.shape["model"] == 0
+            and cfg.d_model % mesh.shape["data"] == 0
+            and x.shape[0] % dp == 0)
+
+
+def _decoder_layer(x, lp, cfg: ArchConfig, positions):
+    # NOTE (§Perf, granite-8b E3 — REFUTED): constraining the residual to
+    # S-sharded-over-model here (Megatron sequence parallelism) made the
+    # collective term 4× WORSE under GSPMD: the blockwise-attention KV
+    # chunk path hits involuntary remat and the per-microbatch weight
+    # grads get all-reduced over data.  Proper SP needs a manual
+    # shard_map attention block; left as future work.
+    h, _ = _attention(layers.rms_norm(x, lp["ln1"], cfg.norm_eps),
+                      layers.rms_norm(x, lp["ln1"], cfg.norm_eps),
+                      lp, cfg, positions, positions, causal=True)
+    # named so the "block_save" remat policy can keep the TP-psum'd block
+    # outputs: backward then never replays the psums (§Perf E4)
+    x = x + checkpoint_name(h, "attn_out")
+    y, aux = _ffn(layers.rms_norm(x, lp["ln2"], cfg.norm_eps), lp, cfg)
+    return x + checkpoint_name(y, "mlp_out"), aux
+
+
+def _mamba_layer(x, lp, cfg: ArchConfig):
+    h, _ = ssm.mamba2_block(layers.rms_norm(x, lp["ln"], cfg.norm_eps), lp, cfg)
+    return x + h
+
+
+def _shared_attn_block(x, sp, cfg: ArchConfig, positions):
+    h, kv = _attention(layers.rms_norm(x, sp["ln1"], cfg.norm_eps),
+                       layers.rms_norm(x, sp["ln1"], cfg.norm_eps),
+                       sp, cfg, positions, positions, causal=True)
+    x = x + h
+    y = layers.mlp(layers.rms_norm(x, sp["ln2"], cfg.norm_eps), sp, cfg.act)
+    return x + y, kv
+
+
+# ===========================================================================
+# Forward (training / full-sequence)
+# ===========================================================================
+
+def _embed_inputs(params, batch, cfg: ArchConfig):
+    """Token (+frontend) embedding.  Returns (x (B,S,d), positions (S,))."""
+    tok = batch["tokens"]
+    x = layers.embed(params["embed"]["tok"], tok)
+    if cfg.frontend == "vision":
+        vis = jnp.einsum("bnf,fd->bnd",
+                         batch["vision_embeds"].astype(x.dtype),
+                         params["frontend"]["proj"])
+        x = jnp.concatenate([vis, x], axis=1)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    if cfg.pos_embed == "learned":
+        x = x + layers.learned_pos_embed(params["embed"]["pos"], positions)
+    return _sh(x, ("batch", None, None)), positions
+
+
+def _maybe_remat(body, remat, policy):
+    if not remat:
+        return body
+    return jax.checkpoint(body, policy=policy)
+
+
+def _run_stack(params, x, cfg: ArchConfig, positions, *, remat,
+               remat_policy=None):
+    """Scan the decoder stack. Returns (x, aux_loss)."""
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(carry, lp):
+            y, aux = _decoder_layer(carry, lp, cfg, positions)
+            return y, aux
+        f = _maybe_remat(body, remat, remat_policy)
+        x, auxs = jax.lax.scan(f, x, params["layers"])
+        return x, jnp.sum(auxs)
+
+    if fam == "ssm":
+        def body(carry, lp):
+            return _mamba_layer(carry, lp, cfg), jnp.float32(0.0)
+        f = _maybe_remat(body, remat, remat_policy)
+        x, _ = jax.lax.scan(f, x, params["layers"])
+        return x, jnp.float32(0.0)
+
+    if fam == "hybrid":
+        every = cfg.shared_attn_every
+        sp = params["shared"]
+
+        def body(carry, inp):
+            lp, idx = inp
+            y = _mamba_layer(carry, lp, cfg)
+            y = jax.lax.cond(
+                (idx % every) == every - 1,
+                lambda z: _shared_attn_block(z, sp, cfg, positions)[0],
+                lambda z: z, y)
+            return y, jnp.float32(0.0)
+        f = _maybe_remat(body, remat, remat_policy)
+        x, _ = jax.lax.scan(f, x, (params["layers"],
+                                   jnp.arange(cfg.n_layers)))
+        return x, jnp.float32(0.0)
+
+    raise ValueError(fam)
+
+
+def _encoder(params, batch, cfg: ArchConfig):
+    """Whisper-style encoder over precomputed frame embeddings (stub)."""
+    frames = batch["enc_embeds"]
+    x = jnp.einsum("bsf,fd->bsd",
+                   frames.astype(params["frontend"]["proj"].dtype),
+                   params["frontend"]["proj"])
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+    if cfg.pos_embed == "learned":
+        x = x + layers.learned_pos_embed(params["embed"]["pos"], pos)
+
+    def body(carry, lp):
+        h, _ = _attention(layers.rms_norm(carry, lp["ln1"], cfg.norm_eps),
+                          layers.rms_norm(carry, lp["ln1"], cfg.norm_eps),
+                          lp, cfg, pos, pos, causal=False)
+        y = carry + h
+        m = layers.mlp(layers.rms_norm(y, lp["ln2"], cfg.norm_eps), lp, cfg.act)
+        return y + m, None
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return layers.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _decoder_encdec(params, x, enc_out, cfg: ArchConfig, positions,
+                    remat, remat_policy=None):
+    enc_pos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+
+    def body(carry, lp):
+        h, _ = _attention(layers.rms_norm(carry, lp["ln1"], cfg.norm_eps),
+                          layers.rms_norm(carry, lp["ln1"], cfg.norm_eps),
+                          lp, cfg, positions, positions, causal=True)
+        y = carry + h
+        hx, _ = _attention(layers.rms_norm(y, lp["lnx"], cfg.norm_eps),
+                           enc_out, lp, cfg, positions, enc_pos,
+                           causal=False, sfx="x")
+        y = y + hx
+        m = layers.mlp(layers.rms_norm(y, lp["ln2"], cfg.norm_eps), lp, cfg.act)
+        return y + m, None
+    f = _maybe_remat(body, remat, remat_policy)
+    x, _ = jax.lax.scan(f, x, params["decoder"])
+    return x
+
+
+def forward(params, batch, cfg: ArchConfig, *, remat=False,
+            remat_policy=None):
+    """Full-sequence forward.  Returns (hidden (B,S,d), aux_loss)."""
+    if cfg.family == "encdec":
+        enc_out = _encoder(params, batch, cfg)
+        x = layers.embed(params["embed"]["tok"], batch["tokens"])
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        if cfg.pos_embed == "learned":
+            x = x + layers.learned_pos_embed(params["embed"]["pos"], positions)
+        x = _decoder_encdec(params, x, enc_out, cfg, positions, remat,
+                            remat_policy)
+        aux = jnp.float32(0.0)
+    else:
+        x, positions = _embed_inputs(params, batch, cfg)
+        x, aux = _run_stack(params, x, cfg, positions, remat=remat,
+                            remat_policy=remat_policy)
+    return layers.rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def _unembed_table(params, cfg: ArchConfig):
+    return params["embed"]["tok"] if cfg.tie_embeddings else params["unembed"]
+
+
+def _logits(x, params, cfg: ArchConfig):
+    return layers.unembed_logits(x, _unembed_table(params, cfg),
+                                 true_vocab=cfg.vocab)
+
+
+def chunked_loss(x, table, labels, chunk: int = LOSS_CHUNK,
+                 true_vocab=None):
+    """FOR-mode CE: scan over sequence chunks; (B,S,V) never materializes."""
+    b, s, _ = x.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s  # odd smoke-test sizes: single chunk
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, -1).swapaxes(0, 1)
+    lc = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    def body(carry, inp):
+        xb, lb = inp
+        logits = layers.unembed_logits(xb, table, true_vocab=true_vocab)
+        logits = _sh(logits, ("batch", None, "vocab_act"))
+        n = jnp.sum((lb >= 0).astype(jnp.float32))
+        return (carry[0] + layers.cross_entropy(logits, lb) * n,
+                carry[1] + n), None
+    (tot, n), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                               (xc, lc))
+    return tot / jnp.maximum(n, 1.0)
+
+
+def loss_fn(params, batch, cfg: ArchConfig, *, remat=True, remat_policy=None):
+    """Mean next-token CE (+ MoE aux).  Returns (loss, metrics)."""
+    x, aux = forward(params, batch, cfg, remat=remat,
+                     remat_policy=remat_policy)
+    labels = batch["labels"]
+    if cfg.frontend == "vision":
+        x = x[:, -labels.shape[1]:]   # loss over the text tail only
+    ce = chunked_loss(x, _unembed_table(params, cfg), labels,
+                      true_vocab=cfg.vocab)
+    loss = ce + AUX_LOSS_WEIGHT * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ===========================================================================
+# Serving: prefill + decode with caches
+# ===========================================================================
+
+def _kv_cache_axes():
+    return ("cache_batch", None, "cache_kv_heads", None)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16,
+               abstract_only: bool = False):
+    """Cache pytree for `decode_step` (shapes depend on the family)."""
+    mk = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if abstract_only else \
+         (lambda s, dt: jnp.zeros(s, dt))
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    cache = {"pos": mk((batch,), jnp.int32)}
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        cache["k"] = mk((cfg.n_layers, batch, max_seq, hkv, dh), dtype)
+        cache["v"] = mk((cfg.n_layers, batch, max_seq, hkv, dh), dtype)
+    elif fam == "ssm":
+        cache["conv"] = mk((cfg.n_layers, batch, cfg.ssm_conv - 1,
+                            ssm.conv_dim(cfg)), dtype)
+        cache["state"] = mk((cfg.n_layers, batch, cfg.ssm_nheads,
+                             cfg.ssm_headdim, cfg.ssm_state), jnp.float32)
+    elif fam == "hybrid":
+        napp = cfg.n_layers // cfg.shared_attn_every
+        cache["conv"] = mk((cfg.n_layers, batch, cfg.ssm_conv - 1,
+                            ssm.conv_dim(cfg)), dtype)
+        cache["state"] = mk((cfg.n_layers, batch, cfg.ssm_nheads,
+                             cfg.ssm_headdim, cfg.ssm_state), jnp.float32)
+        cache["k"] = mk((napp, batch, max_seq, hkv, dh), dtype)
+        cache["v"] = mk((napp, batch, max_seq, hkv, dh), dtype)
+    elif fam == "encdec":
+        cache["k"] = mk((cfg.dec_layers, batch, max_seq, hkv, dh), dtype)
+        cache["v"] = mk((cfg.dec_layers, batch, max_seq, hkv, dh), dtype)
+        cache["xk"] = mk((cfg.dec_layers, batch, max_seq, hkv, dh), dtype)
+        cache["xv"] = mk((cfg.dec_layers, batch, max_seq, hkv, dh), dtype)
+    return cache
+
+
+def prefill(params, batch, cfg: ArchConfig, max_seq: int):
+    """Run the prompt; return (last-token logits (B, V), filled cache)."""
+    fam = cfg.family
+    bsz = batch["tokens"].shape[0]
+    # cache precision follows the parameters (bf16 in production, f32 in
+    # the CPU consistency tests)
+    cache = init_cache(cfg, bsz, max_seq, dtype=params["embed"]["tok"].dtype)
+
+    if fam in ("dense", "moe", "vlm"):
+        x, positions = _embed_inputs(params, batch, cfg)
+        s = x.shape[1]
+
+        def body(carry, lp):
+            h_in = layers.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+            h, (k, v) = _attention(h_in, h_in, lp, cfg, positions, positions,
+                                   causal=True)
+            y = carry + h
+            f, _ = _ffn(layers.rms_norm(y, lp["ln2"], cfg.norm_eps), lp, cfg)
+            return y + f, (k, v)
+        x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+        cache["k"] = cache["k"].at[:, :, :s].set(ks.astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[:, :, :s].set(vs.astype(cache["v"].dtype))
+        cache["pos"] = jnp.full((bsz,), s, jnp.int32)
+
+    elif fam == "ssm":
+        x, _ = _embed_inputs(params, batch, cfg)
+        s = x.shape[1]
+
+        def body(carry, lp):
+            h_in = layers.rms_norm(carry, lp["ln"], cfg.norm_eps)
+            h, state = ssm.mamba2_block(h_in, lp, cfg)
+            # conv tail for seamless decode continuation
+            zxbcdt = jnp.einsum("bsd,dk->bsk", h_in[:, -cfg.ssm_conv + 1:],
+                                lp["w_in"])
+            conv_tail = zxbcdt[..., cfg.d_inner:
+                               2 * cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state]
+            return carry + h, (state, conv_tail)
+        x, (states, tails) = jax.lax.scan(body, x, params["layers"])
+        cache["state"] = states
+        cache["conv"] = tails.astype(cache["conv"].dtype)
+        cache["pos"] = jnp.full((bsz,), s, jnp.int32)
+
+    elif fam == "hybrid":
+        x, positions = _embed_inputs(params, batch, cfg)
+        s = x.shape[1]
+        every = cfg.shared_attn_every
+        sp = params["shared"]
+        shk, shv = cache["k"], cache["v"]
+
+        def body(carry, inp):
+            lp, idx = inp
+            x_c, shk_c, shv_c = carry
+            h_in = layers.rms_norm(x_c, lp["ln"], cfg.norm_eps)
+            h, state = ssm.mamba2_block(h_in, lp, cfg)
+            zxbcdt = jnp.einsum("bsd,dk->bsk", h_in[:, -cfg.ssm_conv + 1:],
+                                lp["w_in"])
+            conv_tail = zxbcdt[..., cfg.d_inner:
+                               2 * cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state]
+            y = x_c + h
+            app = idx // every
+
+            def apply_shared(args):
+                z, shk_i, shv_i = args
+                out, (k, v) = _shared_attn_block(z, sp, cfg, positions)
+                shk_i = jax.lax.dynamic_update_slice(
+                    shk_i, k[None, :, :, :, :].astype(shk_i.dtype),
+                    (app, 0, 0, 0, 0))
+                shv_i = jax.lax.dynamic_update_slice(
+                    shv_i, v[None].astype(shv_i.dtype), (app, 0, 0, 0, 0))
+                return out, shk_i, shv_i
+
+            y, shk_c, shv_c = jax.lax.cond(
+                (idx % every) == every - 1, apply_shared,
+                lambda args: args, (y, shk_c, shv_c))
+            return (y, shk_c, shv_c), (state, conv_tail)
+        (x, shk, shv), (states, tails) = jax.lax.scan(
+            body, (x, shk[:, :, :s], shv[:, :, :s]),
+            (params["layers"], jnp.arange(cfg.n_layers)))
+        cache["k"] = cache["k"].at[:, :, :s].set(shk.astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[:, :, :s].set(shv.astype(cache["v"].dtype))
+        cache["state"] = states
+        cache["conv"] = tails.astype(cache["conv"].dtype)
+        cache["pos"] = jnp.full((bsz,), s, jnp.int32)
+
+    elif fam == "encdec":
+        enc_out = _encoder(params, batch, cfg)
+        se = enc_out.shape[1]
+        x = layers.embed(params["embed"]["tok"], batch["tokens"])
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        if cfg.pos_embed == "learned":
+            x = x + layers.learned_pos_embed(params["embed"]["pos"], positions)
+        enc_pos = jnp.arange(se, dtype=jnp.int32)
+        s = x.shape[1]
+
+        def body(carry, lp):
+            h_in = layers.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+            h, (k, v) = _attention(h_in, h_in, lp, cfg, positions, positions,
+                                   causal=True)
+            y = carry + h
+            hx, (xk, xv) = _attention(
+                layers.rms_norm(y, lp["lnx"], cfg.norm_eps), enc_out, lp, cfg,
+                positions, enc_pos, causal=False, sfx="x")
+            y = y + hx
+            m = layers.mlp(layers.rms_norm(y, lp["ln2"], cfg.norm_eps), lp,
+                           cfg.act)
+            return y + m, (k, v, xk, xv)
+        x, (ks, vs, xks, xvs) = jax.lax.scan(body, x, params["decoder"])
+        cache["k"] = cache["k"].at[:, :, :s].set(ks.astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[:, :, :s].set(vs.astype(cache["v"].dtype))
+        cache["xk"] = cache["xk"].at[:, :, :se].set(xks.astype(cache["xk"].dtype))
+        cache["xv"] = cache["xv"].at[:, :, :se].set(xvs.astype(cache["xv"].dtype))
+        cache["pos"] = jnp.full((bsz,), s, jnp.int32)
+    else:
+        raise ValueError(fam)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(x[:, -1], params, cfg)
+    return logits, cache
+
+
+def _decode_attn_layer(x1, lp, cfg, k_l, v_l, pos, sfx=""):
+    """One-token attention against a cache layer; writes K/V at `pos`."""
+    bsz = x1.shape[0]
+    q_pos = pos[:, None] if pos.ndim == 1 else pos
+    q = jnp.einsum("bsd,dhk->bshk", x1, lp[f"w{sfx}q"])
+    k = jnp.einsum("bsd,dhk->bshk", x1, lp[f"w{sfx}k"])
+    v = jnp.einsum("bsd,dhk->bshk", x1, lp[f"w{sfx}v"])
+    if cfg.pos_embed == "rope":
+        q = layers.apply_rope(q, q_pos, cfg.rope_theta)
+        k = layers.apply_rope(k, q_pos, cfg.rope_theta)
+    # write the new K/V at each row's position
+    bidx = jnp.arange(bsz)
+    k_l = k_l.at[bidx, pos].set(k[:, 0].astype(k_l.dtype))
+    v_l = v_l.at[bidx, pos].set(v[:, 0].astype(v_l.dtype))
+    o = attn_lib.decode_attention(q, k_l, v_l, pos + 1)
+    out = jnp.einsum("bshk,hkd->bsd", o, lp[f"w{sfx}o"])
+    return out, k_l, v_l
+
+
+def decode_step(params, token, cache, cfg: ArchConfig):
+    """One decode step.  token: (B,) int32.  Returns (logits (B,V), cache)."""
+    bsz = token.shape[0]
+    pos = cache["pos"]
+    x = layers.embed(params["embed"]["tok"], token)[:, None]   # (B,1,d)
+    if cfg.pos_embed == "learned":
+        x = x + layers.learned_pos_embed(params["embed"]["pos"],
+                                         pos[:, None])
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(carry, inp):
+            lp, k_l, v_l = inp
+            h_in = layers.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+            h, k_l, v_l = _decode_attn_layer(h_in, lp, cfg, k_l, v_l, pos)
+            y = carry + h
+            f, _ = _ffn(layers.rms_norm(y, lp["ln2"], cfg.norm_eps), lp, cfg)
+            return y + f, (k_l, v_l)
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                             cache["v"]))
+        cache = dict(cache, k=ks, v=vs)
+
+    elif fam == "ssm":
+        def body(carry, inp):
+            lp, conv_l, state_l = inp
+            h_in = layers.rms_norm(carry[:, 0], lp["ln"], cfg.norm_eps)
+            h, conv_l, state_l = ssm.mamba2_decode(h_in, lp, cfg, conv_l,
+                                                   state_l)
+            return carry + h[:, None], (conv_l, state_l)
+        x, (convs, states) = jax.lax.scan(
+            body, x, (params["layers"], cache["conv"], cache["state"]))
+        cache = dict(cache, conv=convs, state=states)
+
+    elif fam == "hybrid":
+        every = cfg.shared_attn_every
+        sp = params["shared"]
+
+        def body(carry, inp):
+            lp, conv_l, state_l, idx = inp
+            x_c, shk, shv = carry
+            h_in = layers.rms_norm(x_c[:, 0], lp["ln"], cfg.norm_eps)
+            h, conv_l, state_l = ssm.mamba2_decode(h_in, lp, cfg, conv_l,
+                                                   state_l)
+            y = x_c + h[:, None]
+            app = idx // every
+
+            def apply_shared(args):
+                z, shk_i, shv_i = args
+                k_l = jax.lax.dynamic_slice_in_dim(shk_i, app, 1, 0)[0]
+                v_l = jax.lax.dynamic_slice_in_dim(shv_i, app, 1, 0)[0]
+                h_a, k_l, v_l = _decode_attn_layer(
+                    layers.rms_norm(z, sp["ln1"], cfg.norm_eps), sp, cfg,
+                    k_l, v_l, pos)
+                z2 = z + h_a
+                m = layers.mlp(layers.rms_norm(z2, sp["ln2"], cfg.norm_eps),
+                               sp, cfg.act)
+                shk_i = jax.lax.dynamic_update_slice_in_dim(
+                    shk_i, k_l[None], app, 0)
+                shv_i = jax.lax.dynamic_update_slice_in_dim(
+                    shv_i, v_l[None], app, 0)
+                return z2 + m, shk_i, shv_i
+
+            y, shk, shv = jax.lax.cond((idx % every) == every - 1,
+                                       apply_shared, lambda a: a,
+                                       (y, shk, shv))
+            return (y, shk, shv), (conv_l, state_l)
+        (x, shk, shv), (convs, states) = jax.lax.scan(
+            body, (x, cache["k"], cache["v"]),
+            (params["layers"], cache["conv"], cache["state"],
+             jnp.arange(cfg.n_layers)))
+        cache = dict(cache, k=shk, v=shv, conv=convs, state=states)
+
+    elif fam == "encdec":
+        enc_len = cache["pos"] * 0 + cache["xk"].shape[2]  # full cross memory
+
+        def body(carry, inp):
+            lp, k_l, v_l, xk_l, xv_l = inp
+            h_in = layers.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+            h, k_l, v_l = _decode_attn_layer(h_in, lp, cfg, k_l, v_l, pos)
+            y = carry + h
+            qx = jnp.einsum("bsd,dhk->bshk",
+                            layers.rms_norm(y, lp["lnx"], cfg.norm_eps),
+                            lp["wxq"])
+            ox = attn_lib.decode_attention(qx, xk_l, xv_l, enc_len)
+            y = y + jnp.einsum("bshk,hkd->bsd", ox, lp["wxo"])
+            m = layers.mlp(layers.rms_norm(y, lp["ln2"], cfg.norm_eps), lp,
+                           cfg.act)
+            return y + m, (k_l, v_l)
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["decoder"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        cache = dict(cache, k=ks, v=vs)
+    else:
+        raise ValueError(fam)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(x[:, 0], params, cfg)
+    cache["pos"] = pos + 1
+    return logits, cache
+
+
+# ===========================================================================
+# Accounting (roofline's MODEL_FLOPS)
+# ===========================================================================
+
+def model_flops(cfg: ArchConfig, tokens: int, kind: str = "train") -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); 2·N·D for fwd-only."""
+    n = cfg.active_param_count() if cfg.is_moe else cfg.param_count()
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens

@@ -1,0 +1,80 @@
+"""Single-source parameter definitions.
+
+Every model declares its parameters once as a list of :class:`ParamDef`
+(path, shape, logical axes, init).  From that single table derive:
+
+* ``init_params``      — materialized weights (smoke tests, examples),
+* ``abstract_params``  — ShapeDtypeStructs (dry-run: no allocation),
+* partition specs      — via runtime/sharding.py's logical-axis rules
+                         (the framework's "compile-time metainstructions").
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    path: tuple[str, ...]
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: Optional[float] = None  # std for normal; default fan-in
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), \
+            f"{self.path}: axes/shape rank mismatch"
+
+
+def _set(tree: dict, path: tuple[str, ...], value) -> None:
+    node = tree
+    for p in path[:-1]:
+        node = node.setdefault(p, {})
+    node[path[-1]] = value
+
+
+def _init_one(d: ParamDef, key, dtype):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "embed":
+        std = d.scale if d.scale is not None else 0.02
+        return (std * jax.random.normal(key, d.shape, jnp.float32)).astype(dtype)
+    if d.init == "normal":
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = d.scale if d.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, d.shape, jnp.float32)).astype(dtype)
+    raise ValueError(d.init)
+
+
+def init_params(defs: list[ParamDef], key, dtype=jnp.bfloat16) -> dict:
+    tree: dict = {}
+    keys = jax.random.split(key, max(len(defs), 1))
+    for d, k in zip(defs, keys):
+        _set(tree, d.path, _init_one(d, k, dtype))
+    return tree
+
+
+def abstract_params(defs: list[ParamDef], dtype=jnp.bfloat16) -> dict:
+    tree: dict = {}
+    for d in defs:
+        _set(tree, d.path, jax.ShapeDtypeStruct(d.shape, dtype))
+    return tree
+
+
+def axes_tree(defs: list[ParamDef]) -> dict:
+    """Pytree (same structure as params) of logical-axis tuples."""
+    tree: dict = {}
+    for d in defs:
+        _set(tree, d.path, d.axes)
+    return tree
+
+
+def param_bytes(defs: list[ParamDef], bytes_per_el: int = 2) -> int:
+    return sum(math.prod(d.shape) * bytes_per_el for d in defs)

@@ -1,0 +1,2 @@
+# Cluster-scale EMPA runtime.  Import submodules explicitly (kept lazy to
+# avoid pulling jax mesh machinery into simulator-only use).

@@ -1,0 +1,101 @@
+"""Elastic capacity management: the device fleet as an EMPA core pool.
+
+A pod/host is a core: it can be rented (join the mesh), disabled
+("overheating", §4.1.2 — failed health check) and returned.  Because JAX
+SPMD requires a rectangular mesh, elasticity is a LADDER of pre-validated
+degraded meshes (launch/mesh.make_degraded_mesh): on capacity loss the
+manager picks the largest level that fits the healthy host count,
+re-lowers the already-validated plan, and training resumes from the last
+durable checkpoint.  Data re-sharding is free: batches are a pure function
+of (seed, step, host_id) — see data/pipeline.py.
+
+Straggler mitigation = the paper's PREALLOCATION (§5.1): `spares` hosts
+are kept out of the mesh and hot-swapped for persistently slow or failed
+hosts, so the mesh shape (and the compiled program) never changes for a
+single-host loss.  A swap is rent(spare) + disable(slow), not a recompile.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.core.supervisor import CorePool
+
+# (total chips required, mesh kwargs for launch/mesh.make_degraded_mesh)
+LADDER = [
+    (512, {"level": 0}),   # 2 × 16 × 16
+    (256, {"level": 1}),   # 1 × 16 × 16
+    (256, {"level": 2}),   # 16 × 16 (single-pod program)
+    (128, {"level": 3}),   # 8 × 16
+    (64, {"level": 4}),    # 4 × 16
+]
+
+CHIPS_PER_HOST = 4  # v5e host = 4 chips
+
+
+@dataclasses.dataclass
+class Event:
+    kind: str          # fail | slow | swap | relower | recover
+    host: int
+    detail: str = ""
+
+
+class ElasticManager:
+    def __init__(self, n_hosts: int, *, spares: int = 2,
+                 on_relower: Optional[Callable[[int], None]] = None):
+        """`n_hosts` includes the spares (EMPA preallocation)."""
+        self.pool = CorePool(n_hosts)
+        self.spares = spares
+        self.on_relower = on_relower
+        self.level = 0
+        self.events: list[Event] = []
+        # rent the active fleet; leave `spares` in the pool, preallocated
+        self.active = [self.pool.rent() for _ in range(n_hosts - spares)]
+        self.pool.preallocate(self.active[0], spares)
+
+    # -- health signals ------------------------------------------------
+    @property
+    def healthy_chips(self) -> int:
+        return len(self.active) * CHIPS_PER_HOST
+
+    def required_level(self) -> int:
+        for i, (chips, _) in enumerate(LADDER):
+            if self.healthy_chips >= chips:
+                return i
+        raise RuntimeError("fleet below minimum viable capacity")
+
+    def fail(self, host: int) -> Event:
+        """A host died.  Swap in a spare if available, else degrade."""
+        assert host in self.active
+        self.active.remove(host)
+        self.pool.disable(host)
+        self.events.append(Event("fail", host))
+        spare = self.pool.rent()          # preallocated spares first
+        if spare is not None:
+            self.active.append(spare)
+            ev = Event("swap", spare, f"replaced failed host {host}")
+            self.events.append(ev)
+            return ev                     # mesh unchanged: no recompile
+        new_level = self.required_level()
+        if new_level != self.level:
+            self.level = new_level
+            self.events.append(Event("relower", host,
+                                     f"degraded to ladder level {new_level}"))
+            if self.on_relower:
+                self.on_relower(new_level)
+        return self.events[-1]
+
+    def straggler(self, host: int) -> Event:
+        """Persistently slow host: treat as failed (swap, keep it benched)."""
+        ev = self.fail(host)
+        self.events.append(Event("slow", host, "benched as straggler"))
+        return ev
+
+    def recover(self, host: int) -> None:
+        """A repaired host rejoins the pool as a spare."""
+        self.pool.enable(host)
+        self.events.append(Event("recover", host))
+
+    def check_invariants(self) -> None:
+        self.pool.check_invariants()
+        assert len(set(self.active)) == len(self.active)

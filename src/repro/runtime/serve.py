@@ -1,0 +1,129 @@
+"""Serving runtime: prefill/decode step builders + EMPA slot pool.
+
+The KV-cache slot pool *is* the paper's core pool: a request is a QT, a
+cache slot is a core — rented on admission, returned at EOS (§4.3's
+rent/terminate cycle), preallocation reserves slots for a stream of
+requests (§5.1).  `CorePool` from the paper's own supervisor module drives
+admission — the same semantics property-tested at the machine level.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.supervisor import CorePool
+from repro.models import model as model_lib
+from repro.runtime.sharding import ShardingRules, use_rules
+
+
+def build_prefill_step(cfg: ArchConfig, max_seq: int,
+                       rules: Optional[ShardingRules] = None):
+    def prefill_step(params, batch):
+        with use_rules(rules):
+            return model_lib.prefill(params, batch, cfg, max_seq)
+    return prefill_step
+
+
+def build_decode_step(cfg: ArchConfig,
+                      rules: Optional[ShardingRules] = None):
+    def decode_step(params, token, cache):
+        with use_rules(rules):
+            return model_lib.decode_step(params, token, cache, cfg)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Host-side continuous batching over the slot pool
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+
+
+class ServingEngine:
+    """Batched greedy decoding with rent/return slot semantics.
+
+    Single-sequence prefill writes into the rented slot's cache rows;
+    decode advances every active slot each step (inactive slots are
+    masked by feeding pad tokens and ignoring their logits).
+    """
+
+    def __init__(self, params, cfg: ArchConfig, *, n_slots: int,
+                 max_seq: int, eos_id: int = 1,
+                 decode_fn: Optional[Callable] = None):
+        self.params, self.cfg = params, cfg
+        self.max_seq, self.eos_id = max_seq, eos_id
+        self.pool = CorePool(n_slots)
+        self.active: dict[int, Request] = {}
+        dtype = jax.tree_util.tree_leaves(params)[0].dtype
+        self.cache = model_lib.init_cache(cfg, n_slots, max_seq, dtype=dtype)
+        self._decode = jax.jit(decode_fn or build_decode_step(cfg))
+        self._prefill1 = jax.jit(
+            lambda p, b: model_lib.prefill(p, b, cfg, max_seq))
+
+    # -- admission ---------------------------------------------------------
+    def admit(self, req: Request) -> bool:
+        slot = self.pool.rent()
+        if slot is None:
+            return False                      # pool exhausted: queue upstream
+        req.slot = slot
+        batch = {"tokens": jnp.asarray(req.prompt)[None]}
+        if self.cfg.frontend == "vision":
+            batch["vision_embeds"] = jnp.zeros(
+                (1, self.cfg.n_frontend_tokens, self.cfg.frontend_dim),
+                jnp.float32)
+        if self.cfg.family == "encdec":
+            batch["enc_embeds"] = jnp.zeros(
+                (1, len(req.prompt), self.cfg.frontend_dim), jnp.float32)
+        logits, cache1 = self._prefill1(self.params, batch)
+        self._write_slot(slot, cache1)
+        req.out.append(int(jnp.argmax(logits[0])))
+        self.active[slot] = req
+        return True
+
+    def _write_slot(self, slot: int, cache1):
+        def put(big, small):
+            if big.ndim == 1:                 # pos: (n_slots,)
+                return big.at[slot].set(small[0])
+            return big.at[:, slot].set(small[:, 0])
+        self.cache = jax.tree_util.tree_map(put, self.cache, cache1)
+
+    # -- one decode tick over all active slots ------------------------------
+    def step(self) -> list[Request]:
+        if not self.active:
+            return []
+        tokens = np.zeros((self.pool.n,), np.int32)
+        for slot, req in self.active.items():
+            tokens[slot] = req.out[-1]
+        logits, self.cache = self._decode(self.params,
+                                          jnp.asarray(tokens), self.cache)
+        finished = []
+        for slot, req in list(self.active.items()):
+            tok = int(jnp.argmax(logits[slot]))
+            req.out.append(tok)
+            if tok == self.eos_id or len(req.out) >= req.max_new:
+                finished.append(req)
+                del self.active[slot]
+                self.pool.release(slot)       # core back to the pool (§4.3)
+        return finished
+
+    def run_to_completion(self, requests: list[Request], max_ticks=10_000):
+        pending = list(requests)
+        done = []
+        ticks = 0
+        while (pending or self.active) and ticks < max_ticks:
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            done += self.step()
+            ticks += 1
+        return done, ticks

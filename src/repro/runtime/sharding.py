@@ -1,0 +1,179 @@
+"""Logical-axis sharding rules — the framework's 'metainstructions'.
+
+EMPA prepares parallelization information at compile time and lets the
+supervisor bind it to physical cores at run time (§3.3: compile-time QT
+addresses -> runtime core numbers).  Here: model code annotates tensors
+with *logical* axis names; :class:`ShardingRules` binds them to *physical*
+mesh axes at trace time, with **divisibility fallback** — each logical axis
+lists candidate mesh axes in preference order and the first one that
+divides the dimension (and is not already taken by another dimension of
+the same tensor) wins; otherwise the dimension is replicated.  All
+non-divisible cases (starcoder2's 36/24 heads, whisper's 12, odd vocabs)
+degrade gracefully and are *reported*, not crashed on.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisCand = Union[str, tuple[str, ...]]  # one candidate: mesh axis or product
+
+
+# Default rule table.  Keys are logical axis names used by the models;
+# values are candidate mesh axes in preference order.
+DEFAULT_RULES: dict[str, tuple[AxisCand, ...]] = {
+    # -- activations --
+    "batch": (("pod", "data"), "data", "pod"),
+    "seq": ("data",),                      # sequence parallelism (long ctx)
+    "heads_act": ("model",),
+    # sequence parallelism INSIDE attention: when the head count doesn't
+    # divide the model axis (starcoder2 36/24H, whisper 12H), the online-
+    # softmax carry shards over Sq instead — otherwise it bounces between
+    # replicated and sharded every KV chunk (§Perf, starcoder2 prefill)
+    "attn_sq": ("model",),
+    "vocab_act": ("model",),
+    "experts_act": ("model",),
+    # Megatron-style sequence-parallel residual stream: between TP blocks
+    # the residual is S-sharded over "model", so GSPMD lowers the TP
+    # combine as reduce-scatter (+ all-gather at the next block input)
+    # instead of a full all-reduce — half the wire bytes, and norms run on
+    # 1/16th of the tokens (§Perf, granite-8b E3)
+    "res_seq": ("model",),
+    # -- weights --
+    "w_embed": ("data",),                  # FSDP storage shard
+    "ffn": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "qkv": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "ssm_heads": ("model",),
+    "ssm_state": ("model",),
+    "conv_dim": ("model",),
+    # -- caches / states --
+    # batch must span the SAME axes as activations (("pod","data")) or the
+    # prefill cache scatter forces involuntary replication on multi-pod
+    "cache_batch": (("pod", "data"), "data", "pod"),
+    "cache_kv_heads": ("model",),
+    # fallback TP for archs whose kv_heads don't divide the model axis
+    # (whisper 12, qwen3 4, starcoder2 4/2): shard head_dim instead — the
+    # QK/PV contractions then psum over "model", which GSPMD handles.
+    "cache_head_dim": ("model",),
+    "cache_seq": ("data",),
+    "layers": (),                          # scanned; never sharded
+}
+
+
+# Cross-dimension assignment priority (lower = assigned first).  With
+# purely positional assignment a fallback axis early in the shape would
+# steal the mesh axis from the preferred one later in the shape.
+_PRIORITY = {
+    "heads_act": 10, "vocab_act": 10, "experts_act": 10,
+    "cache_kv_heads": 10, "ssm_heads": 10,
+    "batch": 20, "cache_batch": 20,
+    "attn_sq": 30, "cache_head_dim": 30, "ssm_state": 30,
+}
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: Mesh
+    rules: dict[str, tuple[AxisCand, ...]] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_RULES))
+    # log of fallback decisions: (axes, shape, spec)
+    decisions: list = dataclasses.field(default_factory=list)
+
+    def _axis_size(self, cand: AxisCand) -> int:
+        if isinstance(cand, tuple):
+            out = 1
+            for a in cand:
+                out *= self.mesh.shape[a]
+            return out
+        return self.mesh.shape[cand]
+
+    def _cand_axes(self, cand: AxisCand) -> tuple[str, ...]:
+        return cand if isinstance(cand, tuple) else (cand,)
+
+    def spec(self, axes: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for logical `axes` (len == rank).
+
+        With `shape` given, candidates that do not divide the dimension are
+        skipped (divisibility fallback).  Mesh axes are never used twice in
+        one spec.
+        """
+        used: set[str] = set()
+        entries: list = [None] * len(axes)
+        order = sorted(range(len(axes)),
+                       key=lambda i: (_PRIORITY.get(axes[i], 25), i))
+        for i in order:
+            name = axes[i]
+            if name is None:
+                continue
+            for cand in self.rules.get(name, ()):
+                cax = self._cand_axes(cand)
+                if any(a not in self.mesh.shape for a in cax):
+                    continue
+                if any(a in used for a in cax):
+                    continue
+                if shape is not None and \
+                        shape[i] % self._axis_size(cand) != 0:
+                    continue
+                entries[i] = cand
+                used.update(cax)
+                break
+        spec = P(*entries)
+        self.decisions.append((tuple(axes), tuple(shape) if shape else None,
+                               spec))
+        return spec
+
+    def sharding(self, axes, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(axes, shape))
+
+    def report(self) -> str:
+        """Human-readable fallback report (printed by the dry-run)."""
+        lines = []
+        for axes, shape, spec in self.decisions:
+            degraded = [a for a, e in zip(axes, spec)
+                        if a is not None and e is None]
+            if degraded and shape is not None:
+                lines.append(f"  replicated {degraded} for axes={axes} "
+                             f"shape={shape}")
+        uniq = sorted(set(lines))
+        return "\n".join(uniq) if uniq else "  (no fallbacks)"
+
+
+# ---------------------------------------------------------------------------
+# Trace-time context: model code calls shard(x, axes); inside `use_rules`
+# this becomes with_sharding_constraint, otherwise a no-op (CPU tests).
+# ---------------------------------------------------------------------------
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_ctx, "rules", None)
+    _ctx.rules = rules
+    try:
+        yield rules
+    finally:
+        _ctx.rules = prev
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_ctx, "rules", None)
+
+
+def shard(x, axes: Sequence[Optional[str]]):
+    """Constrain `x`'s sharding per the active rules (no-op without rules)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, rules.spec(axes, x.shape)))

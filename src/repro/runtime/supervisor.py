@@ -1,0 +1,183 @@
+"""Cluster supervisor: maps a step's QT graph onto the device mesh.
+
+The runtime-level twin of the paper's SV (§4.1.3): it owns the resources
+(the mesh = core pool), binds compile-time parallelization metadata
+(logical-axis rules = metainstructions) to physical axes, and plans the
+collective schedule (latched parent-child transfers = FSDP all-gathers,
+gradient reductions, EP all-to-alls).  Everything it decides is data — the
+dry-run prints it, the roofline reads it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.qt import QT, MassMode, QTGraph
+from repro.launch import inputs as inputs_lib
+from repro.models import model as model_lib
+from repro.optim import adamw
+from repro.runtime import serve as serve_lib
+from repro.runtime import train as train_lib
+from repro.runtime.sharding import ShardingRules
+
+
+@dataclasses.dataclass
+class Plan:
+    name: str
+    kind: str                    # train | prefill | decode
+    step_fn: Callable
+    abstract_args: tuple         # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    rules: ShardingRules
+    qt_graph: QTGraph
+    notes: list[str]
+
+
+class ClusterSupervisor:
+    def __init__(self, mesh: Mesh, cfg: ArchConfig, shape: ShapeConfig, *,
+                 n_microbatch: Optional[int] = None,
+                 opt_cfg: Optional[adamw.AdamWConfig] = None,
+                 dtype=jnp.bfloat16,
+                 rules: Optional[ShardingRules] = None,
+                 gather_once: bool = False,
+                 remat: bool | str = True):
+        self.mesh, self.cfg, self.shape = mesh, cfg, shape
+        self.dtype = dtype
+        self.rules = rules or ShardingRules(mesh)
+        self.opt_cfg = opt_cfg or adamw.AdamWConfig()
+        self.gather_once = gather_once
+        self.remat = remat
+        if n_microbatch is None:
+            # FOR-mode default: keep per-microbatch global batch at 32 rows.
+            # Archs whose head count doesn't divide the model axis carry
+            # replicated attention activations — halve the microbatch so the
+            # per-device transients fit v5e HBM (measured: starcoder2-7b
+            # needs 16 microbatches to stay under 16 GB; §Perf notes).
+            rows = 32
+            n_microbatch = max(1, shape.global_batch // rows) \
+                if shape.kind == "train" else 1
+        self.n_microbatch = n_microbatch
+
+    # -- helpers -----------------------------------------------------------
+    def _sh(self, spec_tree):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    def _batch_specs(self, with_labels: bool):
+        ax = inputs_lib.batch_axes(self.cfg, self.shape,
+                                   with_labels=with_labels)
+        batch = inputs_lib.batch_inputs(self.cfg, self.shape,
+                                        with_labels=with_labels,
+                                        dtype=self.dtype)
+        return {k: self.rules.spec(ax[k], batch[k].shape) for k in batch}, batch
+
+    def _cache_specs(self, cache):
+        ax = inputs_lib.cache_axes(self.cfg)
+        return jax.tree_util.tree_map(
+            lambda leaf_ax, leaf: self.rules.spec(leaf_ax, leaf.shape),
+            ax, {k: cache[k] for k in ax},
+            is_leaf=lambda x: isinstance(x, tuple))
+
+    # -- plans ---------------------------------------------------------------
+    def plan(self) -> Plan:
+        return {"train": self.plan_train,
+                "prefill": self.plan_prefill,
+                "decode": self.plan_decode}[self.shape.kind]()
+
+    def plan_train(self) -> Plan:
+        cfg, shape = self.cfg, self.shape
+        step = train_lib.build_train_step(
+            cfg, self.opt_cfg, n_microbatch=self.n_microbatch,
+            rules=self.rules, gather_once=self.gather_once,
+            remat=self.remat)
+        state = train_lib.abstract_state(cfg, self.dtype)
+        sspec = train_lib.state_specs(cfg, self.rules)
+        bspec, batch = self._batch_specs(with_labels=True)
+        metrics_spec = {"loss": P(), "grad_norm": P(), "lr": P()}
+        return Plan(
+            name=f"{cfg.name}/{shape.name}", kind="train", step_fn=step,
+            abstract_args=(state, batch),
+            in_shardings=(self._sh(sspec), self._sh(bspec)),
+            out_shardings=(self._sh(sspec), self._sh(metrics_spec)),
+            donate_argnums=(0,), rules=self.rules,
+            qt_graph=self.qt_graph(), notes=self._notes())
+
+    def plan_prefill(self) -> Plan:
+        cfg, shape = self.cfg, self.shape
+        step = serve_lib.build_prefill_step(cfg, shape.seq_len, self.rules)
+        params = model_lib.abstract(cfg, self.dtype)
+        pspec = train_lib.state_specs(cfg, self.rules)["params"]
+        bspec, batch = self._batch_specs(with_labels=False)
+        _, cache = inputs_lib.decode_inputs(cfg, shape, self.dtype)
+        cspec = self._cache_specs(cache)
+        logits_spec = self.rules.spec(("batch", "vocab_act"),
+                                      (shape.global_batch, cfg.vocab))
+        return Plan(
+            name=f"{cfg.name}/{shape.name}", kind="prefill", step_fn=step,
+            abstract_args=(params, batch),
+            in_shardings=(self._sh(pspec), self._sh(bspec)),
+            out_shardings=(self._sh(logits_spec), self._sh(cspec)),
+            donate_argnums=(), rules=self.rules,
+            qt_graph=self.qt_graph(), notes=self._notes())
+
+    def plan_decode(self) -> Plan:
+        cfg, shape = self.cfg, self.shape
+        step = serve_lib.build_decode_step(cfg, self.rules)
+        params = model_lib.abstract(cfg, self.dtype)
+        pspec = train_lib.state_specs(cfg, self.rules)["params"]
+        token, cache = inputs_lib.decode_inputs(cfg, shape, self.dtype)
+        cspec = self._cache_specs(cache)
+        tspec = self.rules.spec(("cache_batch",), (shape.global_batch,))
+        logits_spec = self.rules.spec(("cache_batch", "vocab_act"),
+                                      (shape.global_batch, cfg.vocab))
+        return Plan(
+            name=f"{cfg.name}/{shape.name}", kind="decode", step_fn=step,
+            abstract_args=(params, token, cache),
+            in_shardings=(self._sh(pspec), self._sh(tspec), self._sh(cspec)),
+            out_shardings=(self._sh(logits_spec), self._sh(cspec)),
+            donate_argnums=(2,),   # the cache is updated in place
+            rules=self.rules, qt_graph=self.qt_graph(), notes=self._notes())
+
+    # -- compile-time metadata ------------------------------------------------
+    def qt_graph(self) -> QTGraph:
+        cfg, shape = self.cfg, self.shape
+        tokens = shape.global_batch * shape.seq_len
+        n_active = cfg.active_param_count()
+        g = QTGraph()
+        g.add(QT(f"{shape.kind}_step",
+                 flops=model_lib.model_flops(
+                     cfg, tokens if shape.kind != "decode"
+                     else shape.global_batch, shape.kind)))
+        g.add(QT("embed", shard_axis="data",
+                 param_bytes=2.0 * cfg.vocab * cfg.d_model),
+              parent=f"{shape.kind}_step",
+              glue_bytes=2.0 * tokens * cfg.d_model)
+        g.add(QT("stack", mode=MassMode.FOR, shard_axis="model",
+                 flops=6.0 * n_active * tokens,
+                 param_bytes=2.0 * n_active),
+              parent=f"{shape.kind}_step",
+              glue_bytes=2.0 * tokens * cfg.d_model)
+        g.add(QT("head_loss", mode=MassMode.SUMUP, shard_axis="model"),
+              parent=f"{shape.kind}_step",
+              glue_bytes=2.0 * tokens * cfg.d_model)
+        if shape.kind == "train":
+            g.add(QT("grad_reduce", mode=MassMode.SUMUP, shard_axis="data",
+                     act_bytes=4.0 * n_active),
+                  parent=f"{shape.kind}_step", glue_bytes=4.0 * n_active)
+            g.add(QT("adamw", shard_axis="data"), parent=f"{shape.kind}_step")
+        g.check_invariants()
+        return g
+
+    def _notes(self) -> list[str]:
+        notes = [f"mesh={dict(self.mesh.shape)}",
+                 f"microbatches={self.n_microbatch}",
+                 f"gather_once={self.gather_once}", f"remat={self.remat}"]
+        return notes

@@ -1,0 +1,157 @@
+"""Training step builder: FOR-mode microbatching + AdamW + remat.
+
+EMPA mapping: the microbatch loop is FOR-mode — the 'supervisor' (one
+compiled ``lax.scan``) owns loop control and gradient accumulation streams
+into an f32 accumulator (SUMUP: the partial sum never round-trips through
+'architectural' HBM state between iterations at the JAX level).  One
+optimizer step per scan; gradients sync exactly once per step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as model_lib
+from repro.optim import adamw
+from repro.runtime.sharding import ShardingRules, shard, use_rules
+
+
+def init_state(key, cfg: ArchConfig, dtype=jnp.bfloat16):
+    params = model_lib.init(key, cfg, dtype)
+    return {"params": params, "opt": adamw.init(params)}
+
+
+def abstract_state(cfg: ArchConfig, dtype=jnp.bfloat16):
+    params = model_lib.abstract(cfg, dtype)
+    f32 = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32), params)
+    return {"params": params,
+            "opt": {"m": f32, "v": f32,
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)}}
+
+
+def state_specs(cfg: ArchConfig, rules: ShardingRules):
+    """PartitionSpec tree for the train state (FSDP+TP per the rules)."""
+    defs = model_lib.param_defs(cfg)
+    pspecs: dict = {}
+    from repro.models.params import _set
+    for d in defs:
+        _set(pspecs, d.path, rules.spec(d.axes, d.shape))
+    from jax.sharding import PartitionSpec as P
+    return {"params": pspecs,
+            "opt": {"m": pspecs, "v": pspecs, "step": P()}}
+
+
+def _microbatches(batch: dict, n_mb: int) -> dict:
+    def split(x):
+        b = x.shape[0]
+        assert b % n_mb == 0, (b, n_mb)
+        return x.reshape(n_mb, b // n_mb, *x.shape[1:])
+    return jax.tree_util.tree_map(split, batch)
+
+
+def compute_specs(cfg: ArchConfig, rules: ShardingRules):
+    """Param specs with the FSDP (data) axis dropped — the layout weights
+    are gathered INTO for compute when `gather_once` hoists the all-gather
+    out of the microbatch loop (ZeRO-2-style weight-stationary step)."""
+    import dataclasses as _dc
+    no_fsdp = _dc.replace(rules, rules={**rules.rules, "w_embed": ()})
+    defs = model_lib.param_defs(cfg)
+    out: dict = {}
+    from repro.models.params import _set
+    for d in defs:
+        _set(out, d.path, no_fsdp.spec(d.axes, d.shape))
+    return out
+
+
+def build_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                     *, n_microbatch: int = 1,
+                     rules: Optional[ShardingRules] = None,
+                     gather_once: bool = False,
+                     remat: bool | str = True):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    gather_once — hoist the FSDP all-gather of the weights out of the
+        microbatch loop: ×n_microbatch fewer weight-gather bytes at the
+        cost of holding the gathered (still TP-sharded) bf16 weights for
+        the whole step (§Perf E3, EMPA: clone the glue ONCE per rent).
+    remat — True: full per-layer remat; "moe_save": remat but SAVE tensors
+        named 'moe_out' so backward never replays the MoE combine's
+        collectives (§Perf E2); False: no remat.
+    """
+    policy = None
+    if remat == "moe_save":
+        policy = jax.checkpoint_policies.save_only_these_names("moe_out")
+    elif remat == "block_save":
+        # save the TP-psum'd block outputs: backward reuses them instead of
+        # replaying the collectives (costs ~2 bf16 activations per layer)
+        policy = jax.checkpoint_policies.save_only_these_names(
+            "attn_out", "mlp_out", "moe_out")
+
+    def train_step(state, batch):
+        with use_rules(rules):
+            params = state["params"]
+            if gather_once and rules is not None:
+                from jax.sharding import NamedSharding, PartitionSpec
+                shardings = jax.tree_util.tree_map(
+                    lambda s: NamedSharding(rules.mesh, s),
+                    compute_specs(cfg, rules),
+                    is_leaf=lambda x: isinstance(x, PartitionSpec))
+                params = jax.tree_util.tree_map(
+                    jax.lax.with_sharding_constraint, params, shardings)
+
+            def mb_loss(p, mb):
+                return model_lib.loss_fn(p, mb, cfg, remat=remat,
+                                         remat_policy=policy)
+
+            grad_fn = jax.value_and_grad(mb_loss, has_aux=True)
+
+            if n_microbatch == 1:
+                (loss, metrics), grads = grad_fn(params, batch)
+                grads = jax.tree_util.tree_map(
+                    lambda g: g.astype(jnp.float32), grads)
+            else:
+                mbs = _microbatches(batch, n_microbatch)
+                g0 = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+                def body(carry, mb):
+                    loss_acc, g_acc = carry
+                    (loss, _), g = grad_fn(params, mb)
+                    g_acc = jax.tree_util.tree_map(
+                        lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                    return (loss_acc + loss, g_acc), None
+
+                (loss, grads), _ = jax.lax.scan(
+                    body, (jnp.float32(0.0), g0), mbs)
+                loss = loss / n_microbatch
+                grads = jax.tree_util.tree_map(
+                    lambda g: g / n_microbatch, grads)
+                metrics = {}
+
+            new_params, new_opt, om = adamw.update(
+                grads, state["opt"], params, opt_cfg)
+            out_metrics = {"loss": loss, **om}
+        return {"params": new_params, "opt": new_opt}, out_metrics
+
+    return train_step
+
+
+def jit_train_step(cfg, opt_cfg, mesh, rules, *, n_microbatch=1,
+                   batch_specs=None):
+    """pjit-compiled step with explicit in/out shardings + donation."""
+    from jax.sharding import NamedSharding
+    step = build_train_step(cfg, opt_cfg, n_microbatch=n_microbatch,
+                            rules=rules)
+    sspec = state_specs(cfg, rules)
+    to_sh = lambda tree: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    in_sh = (to_sh(sspec), to_sh(batch_specs) if batch_specs else None)
+    out_sh = (to_sh(sspec), None)
+    return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                   donate_argnums=(0,))

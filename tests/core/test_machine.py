@@ -1,0 +1,166 @@
+"""Machine semantics: results, timing model, nested QTs, properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import exec_clocks, isa, machine, programs, run_program
+
+MODES = ["NO", "FOR", "SUMUP"]
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.lists(st.integers(-2**20, 2**20), min_size=1, max_size=48),
+       st.sampled_from(MODES))
+def test_sum_matches_numpy(vec, mode):
+    """Property: all three codings compute exactly sum(vec)."""
+    n = len(vec)
+    r = run_program(programs.PROGRAMS[mode](n), programs.mem_image(vec))
+    assert bool(r.halted)
+    # int32 wrap-around semantics on both sides
+    assert int(r.result) == int(np.asarray(vec, np.int32).sum(dtype=np.int32))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 120), st.sampled_from(MODES))
+def test_clocks_match_analytic(n, mode):
+    """Property: machine clock count equals the analytic timing model."""
+    vec = np.arange(1, n + 1, dtype=np.int32)
+    r = run_program(programs.PROGRAMS[mode](n), programs.mem_image(vec))
+    assert int(r.clocks) == int(exec_clocks(n, mode))
+
+
+@pytest.mark.parametrize("aluop,npop", [
+    (isa.ALU_ADD, lambda v: np.int32(v.sum(dtype=np.int32))),
+    (isa.ALU_AND, lambda v: np.bitwise_and.reduce(v)),
+    (isa.ALU_XOR, lambda v: np.bitwise_xor.reduce(v)),
+])
+def test_sumup_alu_ops(aluop, npop):
+    """The SUMUP combining unit supports add/and/xor (mass modes, §4.6)."""
+    vec = np.array([0b1100, 0b1010, 0b0111, 0b11110, 5], np.int32)
+    src = [
+        ("irmovl", len(vec), "%edx"),
+        ("irmovl", programs.ARRAY_BASE, "%ecx"),
+        ("irmovl", -1 if aluop == isa.ALU_AND else 0, "%eax"),
+        ("andl", "%edx", "%edx"),
+        ("qprealloc", 30),
+        ("qsumup", "%ecx", "%edx", "Payload", 4, aluop),
+        ("halt",),
+        ("label", "Payload"),
+        ("mrmovl", 0, "%ecx", "%esi"),
+        ("paddl", "%esi"),
+        ("qterm",),
+    ]
+    r = run_program(isa.assemble(src), programs.mem_image(vec))
+    expected = npop(vec)
+    if aluop == isa.ALU_AND:
+        expected = np.bitwise_and(np.int32(-1), expected)
+    assert int(r.result) == int(expected)
+
+
+@pytest.mark.parametrize("depth,fanout", [(1, 2), (2, 3), (3, 2)])
+def test_nested_qt_tree(depth, fanout):
+    """§3: 'QTs can be embedded into each other' — count leaves of a tree."""
+    r = run_program(programs.qt_tree(depth, fanout), ())
+    assert bool(r.halted)
+    assert int(r.result) == fanout ** depth
+    assert int(r.created_total) == sum(fanout ** d for d in range(1, depth + 1))
+
+
+def test_parent_termination_blocked_until_children_done():
+    """§4.3: the SV blocks termination of a parent until children clear."""
+    src = [
+        ("qcreate", "Child"),
+        ("halt",),                     # parent tries to halt immediately
+        ("label", "Child"),
+        ("irmovl", 7, "%eax"),
+        ("irmovl", 1, "%ebx"),         # busy-work so the child outlives
+        ("irmovl", 2, "%ebx"),         # the parent's halt attempt
+        ("qterm",),
+    ]
+    r = run_program(isa.assemble(src), ())
+    assert bool(r.halted)  # halts *eventually*, after the child terminated
+
+
+def test_qwait_clone_back():
+    """§4.6: the latched link register is written back on (implied) Wait."""
+    src = [
+        ("irmovl", 100, "%eax"),
+        ("qcreate", "Child"),
+        ("qwait",),
+        ("halt",),                    # %eax must hold the child's clone-back
+        ("label", "Child"),
+        ("irmovl", 41, "%ebx"),
+        ("irmovl", 1, "%ecx"),
+        ("addl", "%ecx", "%ebx"),
+        ("rrmovl", "%ebx", "%eax"),
+        ("qterm",),
+    ]
+    r = run_program(isa.assemble(src), ())
+    assert int(r.result) == 42
+
+
+def test_child_inherits_glue():
+    """§3.5: the parent's 'glue' (registers) is cloned to the child."""
+    src = [
+        ("irmovl", 1000, "%esi"),
+        ("xorl", "%eax", "%eax"),
+        ("qcreate", "Child"),
+        ("qwait",),
+        ("halt",),
+        ("label", "Child"),
+        ("rrmovl", "%esi", "%eax"),   # child sees parent's %esi
+        ("qterm",),
+    ]
+    r = run_program(isa.assemble(src), ())
+    assert int(r.result) == 1000
+
+
+def test_out_of_cores_blocks_not_crashes():
+    """When the pool is exhausted, QCREATE retries until a core frees
+    (§4.5: 'the SV simply disables the core, until the condition
+    fulfilled')."""
+    fanout = machine.MAX_CORES + 4   # more QTs than cores
+    src = [("xorl", "%ebx", "%ebx")]
+    for _ in range(fanout):
+        src += [("qcreate", "Child"), ("qwait",), ("addl", "%eax", "%ebx")]
+    src += [("rrmovl", "%ebx", "%eax"), ("halt",),
+            ("label", "Child"), ("irmovl", 1, "%eax"), ("qterm",)]
+    r = run_program(isa.assemble(src), ())
+    assert int(r.result) == fanout
+
+
+def test_memory_store_load_roundtrip():
+    src = [
+        ("irmovl", 0x200, "%ecx"),
+        ("irmovl", 1234, "%eax"),
+        ("rmmovl", "%eax", 0, "%ecx"),
+        ("irmovl", 0, "%eax"),
+        ("mrmovl", 0, "%ecx", "%eax"),
+        ("halt",),
+    ]
+    r = run_program(isa.assemble(src), ())
+    assert int(r.result) == 1234
+
+
+def test_conditional_jumps():
+    # compute |x| via jge
+    for x, expect in [(5, 5), (-5, 5), (0, 0)]:
+        src = [
+            ("irmovl", x, "%eax"),
+            ("andl", "%eax", "%eax"),
+            ("jge", "Done"),
+            ("irmovl", 0, "%ebx"),
+            ("subl", "%eax", "%ebx"),
+            ("rrmovl", "%ebx", "%eax"),
+            ("label", "Done"),
+            ("halt",),
+        ]
+        r = run_program(isa.assemble(src), ())
+        assert int(r.result) == expect, x
+
+
+def test_peak_cores_accounting_for_mode():
+    vec = np.arange(1, 9, dtype=np.int32)
+    r = run_program(programs.sumup_for(8), programs.mem_image(vec))
+    assert int(r.peak_cores) == 2       # 1 parent + 1 reused child
+    assert int(r.created_total) == 8    # the child was rented 8 times

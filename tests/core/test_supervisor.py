@@ -1,0 +1,109 @@
+"""Property tests of the SV pool semantics (supervisor.CorePool, qt.QTGraph)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.qt import QT, MassMode, QTGraph
+from repro.core.supervisor import CorePool
+
+
+def test_rent_release_roundtrip():
+    pool = CorePool(8)
+    u = pool.rent()
+    assert u == 0 and pool.used == 1
+    pool.release(u)
+    assert pool.used == 0 and pool.available == 8
+    pool.check_invariants()
+
+
+def test_parent_child_masks():
+    pool = CorePool(8)
+    p = pool.rent()
+    c1, c2 = pool.rent(parent=p), pool.rent(parent=p)
+    assert pool.children_of(p) == [c1, c2]
+    assert pool.parent_of(c1) == p
+    with pytest.raises(RuntimeError):
+        pool.release(p)  # §4.3: parent termination blocked
+    pool.release(c1)
+    pool.release(c2)
+    pool.release(p)      # now allowed
+    pool.check_invariants()
+
+
+def test_prealloc_preference():
+    pool = CorePool(8)
+    p = pool.rent()
+    got = pool.preallocate(p, 2)
+    assert len(got) == 2
+    c = pool.rent(parent=p)
+    assert c in got  # preallocated units are preferred (§5.1)
+    pool.check_invariants()
+
+
+def test_disable_excludes_from_pool():
+    pool = CorePool(4)
+    pool.disable(0)
+    assert pool.rent() == 1   # 'overheated' unit skipped (§4.1.2)
+    assert pool.available == 2
+    pool.check_invariants()
+
+
+def test_exhaustion_returns_none():
+    pool = CorePool(2)
+    assert pool.rent() is not None and pool.rent() is not None
+    assert pool.rent() is None
+    assert not pool.ready()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.sampled_from(["rent", "rent_child", "release", "disable",
+                                 "enable"]), max_size=60),
+       st.integers(2, 16))
+def test_pool_invariants_random_walk(ops, n):
+    """Invariants hold under arbitrary operation sequences."""
+    pool = CorePool(n)
+    rented: list[int] = []
+    for op in ops:
+        if op == "rent":
+            u = pool.rent()
+            if u is not None:
+                rented.append(u)
+        elif op == "rent_child" and rented:
+            u = pool.rent(parent=rented[0])
+            if u is not None:
+                rented.append(u)
+        elif op == "release" and rented:
+            u = rented[-1]
+            if not pool.children_of(u):
+                pool.release(u)
+                rented.remove(u)
+        elif op == "disable":
+            pool.disable(n - 1)
+        elif op == "enable":
+            pool.enable(n - 1)
+        pool.check_invariants()
+    assert pool.used == len(rented)
+
+
+def test_qt_graph_basics():
+    g = QTGraph()
+    g.add(QT("train_step", flops=1e12))
+    g.add(QT("embed", flops=1e9, shard_axis="data"), parent="train_step",
+          glue_bytes=1e6)
+    g.add(QT("layers", flops=9e11, mode=MassMode.FOR), parent="train_step",
+          glue_bytes=2e6)
+    g.add(QT("grad_reduce", mode=MassMode.SUMUP), parent="train_step")
+    assert g.roots() == ["train_step"]
+    assert set(g.children("train_step")) == {"embed", "layers", "grad_reduce"}
+    assert g.parent("embed") == "train_step"
+    assert g.total_flops() == pytest.approx(1e12 + 1e9 + 9e11)
+    assert g.total_glue_bytes() == pytest.approx(3e6)
+    g.check_invariants()
+
+
+def test_qt_graph_rejects_duplicates_and_unknown_parent():
+    g = QTGraph()
+    g.add(QT("a"))
+    with pytest.raises(ValueError):
+        g.add(QT("a"))
+    with pytest.raises(ValueError):
+        g.add(QT("b"), parent="nope")

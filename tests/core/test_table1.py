@@ -1,0 +1,57 @@
+"""Exact reproduction of the paper's Table 1 (and §6.1/§6.2 claims)."""
+import numpy as np
+import pytest
+
+from repro.core import TABLE1, alpha_eff, cores_used, exec_clocks, programs, \
+    run_program, speedup, timing
+
+VEC = [0xD, 0xC0, 0xB00, 0xA000, 5, 7]  # paper's 4-element array, extended
+
+
+@pytest.mark.parametrize("n,mode,t_exp,k_exp,s_exp,sk_exp,aeff_exp", TABLE1)
+def test_table1_machine(n, mode, t_exp, k_exp, s_exp, sk_exp, aeff_exp):
+    r = run_program(programs.PROGRAMS[mode](n), programs.mem_image(VEC[:n]))
+    assert bool(r.halted), "machine did not halt cleanly"
+    assert int(r.clocks) == t_exp, f"clocks {int(r.clocks)} != Table1 {t_exp}"
+    assert int(r.peak_cores) == k_exp
+    assert int(r.result) == sum(VEC[:n])
+
+
+@pytest.mark.parametrize("n,mode,t_exp,k_exp,s_exp,sk_exp,aeff_exp", TABLE1)
+def test_table1_analytic(n, mode, t_exp, k_exp, s_exp, sk_exp, aeff_exp):
+    """Clock/core counts must be exact; the paper's derived float columns
+    mix round-half-up and truncation in the last printed digit (e.g. the
+    n=2 FOR α_eff prints 0.97 although k/(k−1)·(S−1)/S = 0.9756), so the
+    float columns are checked to ±0.015 — one unit in the last place."""
+    assert int(exec_clocks(n, mode)) == t_exp
+    assert int(cores_used(n, mode)) == k_exp
+    s = speedup(n, mode)
+    assert float(s) == pytest.approx(s_exp, abs=0.015)
+    assert float(s / cores_used(n, mode)) == pytest.approx(sk_exp, abs=0.015)
+    assert float(alpha_eff(k_exp, s)) == pytest.approx(aeff_exp, abs=0.015)
+
+
+def test_speedup_saturation():
+    """§6.1: speedups saturate at 30/11 (FOR) and 30 (SUMUP)."""
+    n = 10**7
+    assert speedup(n, "FOR") == pytest.approx(30 / 11, rel=1e-4)
+    assert speedup(n, "SUMUP") == pytest.approx(30.0, rel=1e-4)
+
+
+def test_core_cap():
+    """§6.2: max 31 cores (1 parent + 30 children) in SUMUP mode."""
+    for n in (1, 5, 30, 31, 64, 200):
+        assert int(cores_used(n, "SUMUP")) == min(n, 30) + 1
+    vec = np.arange(1, 65)
+    r = run_program(programs.sumup_sumup(64), programs.mem_image(vec))
+    assert int(r.peak_cores) == 31
+    assert int(r.clocks) == 32 + 64
+
+
+def test_alpha_eff_limits():
+    """α_eff → 1 for long vectors (Fig 6); S/k falls then re-approaches 1."""
+    a = timing.alpha_eff_mode(np.array([1, 10, 100, 10000]), "SUMUP")
+    assert np.all(np.diff(a) > 0) and a[-1] > 0.99
+    sk = timing.s_over_k(np.array([10, 30, 40, 100]), "SUMUP")
+    assert sk[1] <= sk[0] or sk[0] < 1  # falls while k grows with n
+    assert float(timing.s_over_k(10**6, "SUMUP")) == pytest.approx(30 / 31, rel=1e-3)

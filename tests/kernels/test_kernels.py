@@ -1,0 +1,196 @@
+"""Per-kernel allclose sweeps (interpret mode) against the ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.massmap import massmap, massmap_ref
+from repro.kernels.ssd_scan import ssd_chunked_kernel, ssd_scan_ref
+from repro.kernels.ssd_scan.kernel import ssd_scan_call
+from repro.kernels.sumup import sumup, sumup_ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# sumup
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,n,block", [
+    (1, 64, 16), (4, 256, 64), (8, 1024, 256), (2, 2048, 2048), (3, 96, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sumup_shapes(rows, n, block, dtype):
+    x = _rand(jax.random.PRNGKey(rows * n), (rows, n), dtype)
+    got = sumup(x, block=block)
+    want = sumup_ref(x)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4,
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("op", ["sum", "max"])
+def test_sumup_ops(op):
+    x = _rand(jax.random.PRNGKey(7), (4, 512), jnp.float32)
+    got = sumup(x, block=128, op=op)
+    want = sumup_ref(x, op=op)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_sumup_matches_paper_semantics():
+    """Same final sum as the EMPA machine's SUMUP mode (int vector)."""
+    from repro.core import programs, run_program
+    vec = np.array([13, 192, 2816, 40960, 5, 7, 11, 3], np.int32)
+    r = run_program(programs.sumup_sumup(len(vec)), programs.mem_image(vec))
+    got = sumup(jnp.asarray(vec, jnp.float32)[None], block=8)
+    assert int(np.array(got)[0, 0]) == int(r.result)
+
+
+# ---------------------------------------------------------------------------
+# massmap
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,bm,bn", [
+    (8, 64, 8, 32), (64, 256, 32, 128), (256, 512, 256, 512), (16, 128, 4, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("act", ["silu", "gelu", "none"])
+def test_massmap_shapes(m, n, bm, bn, dtype, act):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(m * n), 3)
+    x = _rand(k1, (m, n), dtype)
+    scale = _rand(k2, (n,), jnp.float32)
+    bias = _rand(k3, (n,), jnp.float32)
+    got = massmap(x, scale, bias, act=act, block_m=bm, block_n=bn)
+    want = massmap_ref(x, scale, bias, act=act)
+    np.testing.assert_allclose(np.array(got, np.float32),
+                               np.array(want, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,hkv,sq,skv,d,bq,bk", [
+    (1, 2, 2, 64, 64, 32, 32, 32),      # MHA
+    (2, 4, 2, 128, 128, 64, 64, 64),    # GQA 2:1
+    (1, 8, 2, 64, 128, 32, 32, 64),     # GQA 4:1, cross lengths
+    (1, 2, 1, 256, 256, 64, 128, 128),  # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, h, hkv, sq, skv, d, bq, bk, causal, dtype):
+    if causal and sq != skv:
+        pytest.skip("causal needs square layout in this sweep")
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(h * sq + d), 3)
+    q = _rand(k1, (b, h, sq, d), dtype)
+    k = _rand(k2, (b, hkv, skv, d), dtype)
+    v = _rand(k3, (b, hkv, skv, d), dtype)
+    got = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    want = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.array(got, np.float32),
+                               np.array(want, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_matches_model_path():
+    """Kernel == models/attention (both full and blockwise), layout-adjusted."""
+    from repro.models import attention as A
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    b, sq, h, hkv, d = 2, 128, 4, 2, 32
+    q = jax.random.normal(k1, (b, sq, h, d), jnp.float32)
+    k = jax.random.normal(k2, (b, sq, hkv, d), jnp.float32)
+    v = jax.random.normal(k3, (b, sq, hkv, d), jnp.float32)
+    want = A.full_attention(q, k, v, causal=True)
+    want_bw = A.blockwise_attention(q, k, v, causal=True, chunk=32)
+    got = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), causal=True,
+                          block_q=32, block_k=32).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-5,
+                               atol=2e-5)
+    np.testing.assert_allclose(np.array(want_bw), np.array(want), rtol=2e-5,
+                               atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,nc,q,p,n", [
+    (1, 2, 4, 16, 16, 8), (2, 3, 2, 32, 64, 16), (1, 1, 8, 64, 32, 32),
+])
+def test_ssd_scan_kernel_vs_ref(b, h, nc, q, p, n):
+    key = jax.random.PRNGKey(b + h + q)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    xdt = jax.random.normal(k1, (b, h, nc, q, p), jnp.float32)
+    # realistic negative decays: cumsum of small negative increments
+    da = -0.05 * jax.random.uniform(k2, (b, h, nc, q, 1))
+    cum = jnp.cumsum(da, axis=3)
+    bm = jax.random.normal(k3, (b, h, nc, q, n), jnp.float32) * 0.5
+    cm = jax.random.normal(k4, (b, h, nc, q, n), jnp.float32) * 0.5
+    y, st = ssd_scan_call(xdt, cum, bm, cm, interpret=True)
+    y_ref, st_ref = ssd_scan_ref(xdt, cum, bm, cm)
+    np.testing.assert_allclose(np.array(y), np.array(y_ref), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.array(st), np.array(st_ref), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("s,chunk", [(64, 16), (128, 64), (96, 32)])
+def test_ssd_wrapper_vs_model_ssm(s, chunk):
+    """Kernel-backed SSD == models/ssm.ssd_chunked (the model oracle)."""
+    from repro.models import ssm
+    key = jax.random.PRNGKey(s)
+    ks = jax.random.split(key, 6)
+    b, h, p, n, g = 2, 4, 16, 8, 1
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.random.normal(ks[1], (b, s, h), jnp.float32) * 0.5
+    a_log = jax.random.normal(ks[2], (h,)) * 0.3
+    bm = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    cm = jax.random.normal(ks[4], (b, s, g, n)) * 0.5
+    d_skip = jax.random.normal(ks[5], (h,))
+    dt_bias = jnp.zeros((h,))
+    y_k, st_k = ssd_chunked_kernel(x, dt, a_log, bm, cm, d_skip, dt_bias,
+                                   chunk=chunk)
+    y_r, st_r = ssm.ssd_chunked(x, dt, a_log, bm, cm, d_skip, dt_bias,
+                                chunk=chunk)
+    np.testing.assert_allclose(np.array(y_k), np.array(y_r), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.array(st_k), np.array(st_r), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssd_decode_matches_chunked():
+    """O(1) decode steps == chunked scan over the same tokens."""
+    from repro.models import ssm
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 6)
+    b, s, h, p, n, g = 1, 16, 2, 8, 4, 1
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.random.normal(ks[1], (b, s, h)) * 0.5
+    a_log = jax.random.normal(ks[2], (h,)) * 0.3
+    bm = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    cm = jax.random.normal(ks[4], (b, s, g, n)) * 0.5
+    d_skip = jax.random.normal(ks[5], (h,))
+    dt_bias = jnp.zeros((h,))
+    y_ref, st_ref = ssm.ssd_chunked(x, dt, a_log, bm, cm, d_skip, dt_bias,
+                                    chunk=8)
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        y_t, state = ssm.ssd_decode_step(x[:, t], dt[:, t], a_log, bm[:, t],
+                                         cm[:, t], d_skip, dt_bias, state)
+        ys.append(y_t)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.array(y_seq), np.array(y_ref), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.array(state), np.array(st_ref), rtol=2e-4,
+                               atol=2e-4)

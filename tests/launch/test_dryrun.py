@@ -1,0 +1,67 @@
+"""Launch-layer tests: the dry-run really compiles at 512 devices.
+
+Runs in a subprocess because the 512-device platform override must happen
+before jax initializes (the main test process keeps 1 device).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(__file__)))
+
+
+def _run_cell(arch, shape, extra=()):
+    out = os.path.join(REPO, "benchmarks", "artifacts",
+                       f"test_{arch}_{shape}.json")
+    if os.path.exists(out):
+        os.unlink(out)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--out", out, *extra],
+        capture_output=True, text=True, timeout=540, env=env, cwd=REPO)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    with open(out) as f:
+        cells = json.load(f)
+    os.unlink(out)
+    return cells
+
+
+@pytest.mark.slow
+def test_dryrun_decode_cell_both_meshes():
+    cells = _run_cell("mamba2-780m", "decode_32k")
+    assert len(cells) == 2                       # single-pod + multi-pod
+    for c in cells:
+        assert c["status"] == "ok", c
+        assert c["global_flops"] > 0
+        assert c["memory"]["temp_size_in_bytes"] < 16e9   # fits v5e HBM
+    assert {c["mesh"] for c in cells} == {"pod16x16", "pod2x16x16"}
+    assert cells[0]["n_devices"] == 256
+    assert cells[1]["n_devices"] == 512
+
+
+@pytest.mark.slow
+def test_dryrun_skips_long500k_for_full_attention():
+    cells = _run_cell("granite-3-2b", "long_500k", ["--single-pod"])
+    assert cells[0]["status"] == "skipped"
+    assert "full-attention" in cells[0]["reason"]
+
+
+def test_mesh_constructors_are_lazy():
+    """Importing mesh.py must not touch jax device state."""
+    import importlib
+    import repro.launch.mesh as m
+    importlib.reload(m)   # would explode if module-level jax.devices() ran
+    assert callable(m.make_production_mesh)
+
+
+def test_production_mesh_shapes():
+    # shapes only (constructing 512-dev meshes needs the dryrun subprocess)
+    import repro.launch.mesh as m
+    import inspect
+    src = inspect.getsource(m.make_production_mesh)
+    assert "(2, 16, 16)" in src and "(16, 16)" in src
+    assert '("pod", "data", "model")' in src

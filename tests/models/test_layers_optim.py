@@ -1,0 +1,158 @@
+"""Layer + optimizer unit/property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention, layers
+from repro.optim import adamw
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+def test_rms_norm_unit_scale():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 7.0
+    y = layers.rms_norm(x, jnp.ones((64,)))
+    rms = jnp.sqrt(jnp.mean(y.astype(jnp.float32) ** 2, -1))
+    np.testing.assert_allclose(np.array(rms), 1.0, rtol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**16), st.integers(1, 512))
+def test_rope_preserves_norm_and_relative_phase(shift, dist):
+    """RoPE is an orthogonal transform; scores depend on relative offset."""
+    key = jax.random.PRNGKey(7)
+    q = jax.random.normal(key, (1, 1, 1, 64))
+    k = jax.random.normal(jax.random.PRNGKey(8), (1, 1, 1, 64))
+    p0 = jnp.array([0]), jnp.array([dist])
+    p1 = jnp.array([shift]), jnp.array([shift + dist])
+    qr0 = layers.apply_rope(q, p0[0])
+    kr0 = layers.apply_rope(k, p0[1])
+    qr1 = layers.apply_rope(q, p1[0])
+    kr1 = layers.apply_rope(k, p1[1])
+    # norm preserved
+    np.testing.assert_allclose(float(jnp.linalg.norm(qr0)),
+                               float(jnp.linalg.norm(q)), rtol=1e-5)
+    # dot product depends only on relative distance (f32 trig at large
+    # absolute positions costs a few ulps — tolerance reflects that)
+    np.testing.assert_allclose(float(jnp.vdot(qr0, kr0)),
+                               float(jnp.vdot(qr1, kr1)), rtol=5e-3,
+                               atol=5e-3)
+
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.array([[[2.0, 1.0, 0.0], [0.0, 3.0, 0.0]]])
+    labels = jnp.array([[0, 1]])
+    got = layers.cross_entropy(logits, labels)
+    p0 = np.exp(2.0) / (np.exp(2.0) + np.exp(1.0) + 1)
+    p1 = np.exp(3.0) / (np.exp(3.0) + 2)
+    want = -(np.log(p0) + np.log(p1)) / 2
+    np.testing.assert_allclose(float(got), want, rtol=1e-6)
+
+
+def test_cross_entropy_masks_negative_labels():
+    logits = jnp.zeros((1, 3, 5))
+    labels = jnp.array([[1, -1, -1]])
+    got = layers.cross_entropy(logits, labels)
+    np.testing.assert_allclose(float(got), np.log(5.0), rtol=1e-6)
+
+
+def test_unembed_pad_masking():
+    table = jnp.ones((8, 4))
+    x = jnp.ones((2, 4))
+    logits = layers.unembed_logits(x, table, true_vocab=5)
+    assert np.all(np.array(logits[:, 5:]) < -1e29)
+    assert np.all(np.isfinite(np.array(logits[:, :5])))
+
+
+def test_blockwise_chunk_invariance():
+    """Blockwise attention is exact for any chunk size (SUMUP property)."""
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, 64, 4, 16))
+    k = jax.random.normal(ks[1], (2, 64, 2, 16))
+    v = jax.random.normal(ks[2], (2, 64, 2, 16))
+    want = attention.full_attention(q, k, v, causal=True)
+    for chunk in (8, 16, 32, 64):
+        got = attention.blockwise_attention(q, k, v, causal=True, chunk=chunk)
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-5,
+                                   atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_first_step_is_lr_sized():
+    cfg = adamw.AdamWConfig(lr=1e-2, weight_decay=0.0, warmup_steps=0,
+                            total_steps=10**9, grad_clip=1e9)
+    params = {"w": jnp.zeros((4,))}
+    state = adamw.init(params)
+    grads = {"w": jnp.full((4,), 0.5)}
+    new_p, state, m = adamw.update(grads, state, params, cfg)
+    # bias-corrected Adam first step ≈ lr * sign(g)
+    np.testing.assert_allclose(np.array(new_p["w"]), -1e-2, rtol=1e-3)
+    assert int(state["step"]) == 1
+
+
+def test_grad_clip_caps_norm():
+    g = {"a": jnp.full((3,), 100.0)}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(100.0 * np.sqrt(3), rel=1e-5)
+    np.testing.assert_allclose(float(adamw.global_norm(clipped)), 1.0,
+                               rtol=1e-5)
+
+
+def test_schedule_warmup_and_decay():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_ratio=0.1)
+    assert float(adamw.schedule(cfg, jnp.int32(5))) == pytest.approx(0.5)
+    assert float(adamw.schedule(cfg, jnp.int32(10))) == pytest.approx(1.0)
+    end = float(adamw.schedule(cfg, jnp.int32(100)))
+    assert end == pytest.approx(0.1, rel=1e-3)
+
+
+def test_quadratic_convergence():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                            total_steps=10**9)
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros((3,))}
+    state = adamw.init(params)
+    for _ in range(300):
+        g = {"w": 2 * (params["w"] - target)}
+        params, state, _ = adamw.update(g, state, params, cfg)
+    np.testing.assert_allclose(np.array(params["w"]), np.array(target),
+                               atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# vmapped EMPA machines (many processors simulated in parallel)
+# ---------------------------------------------------------------------------
+
+def test_vmap_machine_over_memories():
+    """One compiled machine, a batch of EMPA processors — vmap over the
+    memory image (the paper's processor as a composable JAX module)."""
+    import jax
+    from repro.core import machine, programs
+
+    n = 6
+    prog = jnp.asarray(np.concatenate(
+        [programs.sumup_sumup(n),
+         np.zeros((0, 6), np.int32)]))
+    vecs = np.arange(1, 4 * n + 1, dtype=np.int32).reshape(4, n)
+    mems = []
+    for v in vecs:
+        m = np.zeros((machine.MEM_WORDS,), np.int32)
+        img = programs.mem_image(v)
+        m[:len(img)] = img
+        mems.append(m)
+    mems = jnp.asarray(np.stack(mems))
+
+    batched = jax.vmap(lambda mem: machine._run(prog, mem, 1000))(mems)
+    np.testing.assert_array_equal(np.array(batched.result),
+                                  vecs.sum(axis=1))
+    np.testing.assert_array_equal(np.array(batched.clocks),
+                                  np.full(4, 32 + n))

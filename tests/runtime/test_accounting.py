@@ -1,0 +1,117 @@
+"""Loop-aware cost accounting tests (the roofline's foundations)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime.accounting import hlo_collectives, jaxpr_cost
+
+
+def test_dot_flops_exact():
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    c = jaxpr_cost(lambda a, b: a @ b, x, w)
+    assert c["matmul_flops"] == 2 * 64 * 128 * 32
+
+
+def test_scan_multiplies_flops():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def f(a):
+        def body(c, _):
+            return c @ c, None
+        y, _ = jax.lax.scan(body, a, None, length=7)
+        return y
+    c = jaxpr_cost(f, x)
+    assert c["matmul_flops"] == 7 * 2 * 64**3
+
+
+def test_nested_scan_multiplies():
+    x = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+
+    def f(a):
+        def outer(c, _):
+            def inner(d, _):
+                return d @ d, None
+            d, _ = jax.lax.scan(inner, c, None, length=3)
+            return d, None
+        y, _ = jax.lax.scan(outer, a, None, length=5)
+        return y
+    c = jaxpr_cost(f, x)
+    assert c["matmul_flops"] == 15 * 2 * 16**3
+
+
+def test_remat_recompute_counted():
+    """grad of a checkpointed matmul chain must count the recompute."""
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+
+    def loss_plain(a):
+        return jnp.sum((a @ a) @ a)
+
+    def loss_remat(a):
+        return jnp.sum(jax.checkpoint(lambda t: (t @ t) @ t)(a))
+
+    plain = jaxpr_cost(jax.grad(loss_plain), x)["matmul_flops"]
+    remat = jaxpr_cost(jax.grad(loss_remat), x)["matmul_flops"]
+    assert remat > plain  # fwd replayed inside the backward
+
+
+def test_cond_takes_max_branch():
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+
+    def f(a):
+        return jax.lax.cond(a[0, 0] > 0,
+                            lambda t: (t @ t) @ t,   # 2 matmuls
+                            lambda t: t + 1.0, a)
+    c = jaxpr_cost(f, x)
+    assert c["matmul_flops"] == 2 * 2 * 32**3
+
+
+SYNTHETIC_HLO = """
+%wrapped_compare_computation (p0: s32[], p1: s32[]) -> pred[] {
+  ROOT %lt = pred[] compare(%p0, %p1), direction=LT
+}
+%cond.1 (arg: (s32[], f32[8,8])) -> pred[] {
+  %c = s32[] constant(12)
+  ROOT %r = pred[] fusion(%gte, %c), kind=kLoop, calls=%wrapped_compare_computation
+}
+%body.1 (arg: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %ar = f32[8,8]{1,0} all-reduce(%gte2), replica_groups={}
+  %ag = bf16[4,16]{1,0} all-gather(%x), dimensions={0}
+}
+ENTRY %main (p: f32[8,8]) -> f32[8,8] {
+  %w = (s32[], f32[8,8]{1,0}) while(%t), condition=%cond.1, body=%body.1
+  %top = f32[2,2]{1,0} reduce-scatter(%p), replica_groups={}
+  ROOT %r = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_while_trip_count_multiplier():
+    r = hlo_collectives(SYNTHETIC_HLO)
+    # all-reduce f32[8,8]=256B and all-gather bf16[4,16]=128B, ×12 trips
+    assert r["bytes"]["all-reduce"] == 256 * 12
+    assert r["bytes"]["all-gather"] == 128 * 12
+    # entry-level reduce-scatter f32[2,2]=16B, once
+    assert r["bytes"]["reduce-scatter"] == 16
+    assert r["total_bytes"] == 256 * 12 + 128 * 12 + 16
+
+
+def test_hlo_real_compiled_scan():
+    """End-to-end: compiled psum-in-scan counts length× the collective."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    if len(jax.devices()) < 1:
+        pytest.skip("no devices")
+    mesh = jax.make_mesh((1,), ("d",))
+
+    def f(x):
+        def body(c, _):
+            return jax.lax.with_sharding_constraint(
+                c @ c, NamedSharding(mesh, P())), None
+        y, _ = jax.lax.scan(body, x, None, length=4)
+        return y
+    with mesh:
+        txt = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((8, 8), jnp.float32)).compile().as_text()
+    r = hlo_collectives(txt)  # no collectives on 1 device — just no crash
+    assert r["total_bytes"] >= 0.0

@@ -1,0 +1,239 @@
+"""Runtime tests: sharding rules, checkpoint/restart, elastic pool, data."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import SHAPES, ShapeConfig, get_arch, reduced
+from repro.data.pipeline import DataConfig, Prefetcher, synth_batch
+from repro.launch.mesh import make_host_mesh
+from repro.runtime.elastic import LADDER, ElasticManager
+from repro.runtime.sharding import ShardingRules
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def _rules(**mesh_shape):
+    return ShardingRules(mesh=FakeMesh(mesh_shape))
+
+
+def test_divisibility_fallback():
+    r = _rules(data=16, model=16)
+    # heads=36 not divisible by model=16 -> replicated; d divisible -> data
+    spec = r.spec(("w_embed", "heads", None), (4608, 36, 128))
+    assert spec == P("data", None, None)
+    # heads=32 divisible -> model
+    spec = r.spec(("w_embed", "heads", None), (4096, 32, 128))
+    assert spec == P("data", "model", None)
+
+
+def test_no_double_axis_use():
+    r = _rules(data=16, model=16)
+    # both dims want "model": only the first gets it
+    spec = r.spec(("heads", "kv_heads"), (32, 16))
+    assert spec == P("model", None)
+
+
+def test_multi_axis_candidate():
+    r = _rules(pod=2, data=16, model=16)
+    spec = r.spec(("batch", None), (256, 4096))
+    assert spec == P(("pod", "data"), None)
+    # batch=8 doesn't divide 32 -> falls through to "data"? 8%16!=0 ->
+    # "pod" (8%2==0)
+    spec = r.spec(("batch", None), (8, 128))
+    assert spec == P("pod", None)
+
+
+def test_odd_vocab_replicates():
+    r = _rules(data=16, model=16)
+    spec = r.spec(("vocab", "w_embed"), (49155, 2048))
+    assert spec == P(None, "data")
+    assert "replicated" in r.report() or r.report()
+
+
+def test_cache_head_dim_fallback():
+    r = _rules(data=16, model=16)
+    ax = ("layers", "cache_batch", None, "cache_kv_heads", "cache_head_dim")
+    # whisper: kv=12 not divisible -> head_dim gets the model axis
+    spec = r.spec(ax, (12, 128, 32768, 12, 64))
+    assert spec == P(None, "data", None, None, "model")
+    # zamba2: kv=32 divisible -> kv_heads wins, head_dim replicated
+    spec = r.spec(ax, (6, 1, 524288, 32, 64))
+    assert spec == P(None, None, None, "model", None)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4096), st.integers(1, 4096))
+def test_spec_always_divides(d1, d2):
+    """Property: any assigned mesh axis divides its dimension."""
+    r = _rules(data=16, model=16)
+    spec = r.spec(("w_embed", "ffn"), (d1, d2))
+    sizes = {"data": 16, "model": 16}
+    for dim, entry in zip((d1, d2), spec):
+        if entry is not None:
+            assert dim % sizes[entry] == 0
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint manager
+# ---------------------------------------------------------------------------
+
+def _tiny_state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (4, 4)),
+                       "b": jnp.zeros((4,))},
+            "opt": {"step": jnp.int32(3)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False, fingerprint="t")
+    state = _tiny_state()
+    mgr.save(7, state, block=True)
+    like = jax.tree_util.tree_map(jnp.zeros_like, state)
+    restored, step = mgr.restore(like)
+    assert step == 7
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.array(a), np.array(b)),
+        state, restored)
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tiny_state(s), block=True)
+    assert mgr.steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_fingerprint_guard(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False, fingerprint="a")
+    mgr.save(1, _tiny_state(), block=True)
+    mgr2 = CheckpointManager(str(tmp_path), async_save=False, fingerprint="b")
+    with pytest.raises(ValueError):
+        mgr2.restore(_tiny_state())
+
+
+def test_checkpoint_crash_leaves_no_partial(tmp_path):
+    """A .tmp dir (simulated crash) is never listed as a checkpoint."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(5, _tiny_state(), block=True)
+    os.makedirs(str(tmp_path / "step_00000009.tmp"))
+    assert mgr.latest_step() == 5
+
+
+def test_failure_injection_resume_identical(tmp_path):
+    """Crash at step 6, restart, and the loss trajectory continues exactly
+    as an uninterrupted run (checkpoint/restart fidelity)."""
+    from repro.launch.train import train_loop
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=1, d_model=64, vocab=128)
+    shape = ShapeConfig("t", 32, 4, "train")
+
+    ref = train_loop(cfg, shape, steps=8, log_every=0)
+
+    with pytest.raises(RuntimeError, match="injected failure"):
+        train_loop(cfg, shape, steps=8, ckpt_dir=str(tmp_path / "c"),
+                   ckpt_every=2, fail_at=6, log_every=0)
+    resumed = train_loop(cfg, shape, steps=8, ckpt_dir=str(tmp_path / "c"),
+                         ckpt_every=2, log_every=0)
+    assert resumed.resumed_from == 6
+    ref_tail = dict(ref.losses)
+    for step, loss in resumed.losses:
+        assert step >= 6
+        np.testing.assert_allclose(loss, ref_tail[step], rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Elastic manager
+# ---------------------------------------------------------------------------
+
+def test_spare_swap_no_relower():
+    relowers = []
+    em = ElasticManager(10, spares=2, on_relower=relowers.append)
+    ev = em.fail(em.active[0])
+    assert ev.kind == "swap" and not relowers   # mesh unchanged
+    em.check_invariants()
+
+
+def test_degrade_after_spares_exhausted():
+    relowers = []
+    # 130 hosts = 520 chips; 2 spares -> active 128 hosts = 512 chips
+    em = ElasticManager(130, spares=2, on_relower=relowers.append)
+    assert em.healthy_chips == 512
+    em.fail(em.active[0])
+    em.fail(em.active[0])         # spares consumed
+    assert not relowers
+    em.fail(em.active[0])         # 127 hosts = 508 chips < 512
+    assert relowers == [1]        # degrade one ladder level
+    em.check_invariants()
+
+
+def test_ladder_monotone():
+    chips = [c for c, _ in LADDER]
+    assert chips == sorted(chips, reverse=True)
+
+
+def test_recover_rejoins_pool():
+    em = ElasticManager(6, spares=1)
+    victim = em.active[0]
+    em.fail(victim)
+    em.recover(victim)
+    em.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_sharded():
+    cfg = get_arch("granite-3-2b")
+    shape = ShapeConfig("t", 64, 8, "train")
+    b1 = synth_batch(cfg, shape, DataConfig(seed=1, host_id=0, n_hosts=2), 5)
+    b2 = synth_batch(cfg, shape, DataConfig(seed=1, host_id=0, n_hosts=2), 5)
+    b3 = synth_batch(cfg, shape, DataConfig(seed=1, host_id=1, n_hosts=2), 5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])   # restartable
+    assert b1["tokens"].shape == (4, 64)                        # host shard
+    assert not np.array_equal(b1["tokens"], b3["tokens"])       # disjoint
+
+
+def test_labels_are_shifted_tokens():
+    cfg = get_arch("granite-3-2b")
+    shape = ShapeConfig("t", 32, 2, "train")
+    b = synth_batch(cfg, shape, DataConfig(), 0)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+    assert np.all(b["labels"][:, -1] == -1)
+
+
+def test_prefetcher_streams_in_order():
+    cfg = get_arch("granite-3-2b")
+    shape = ShapeConfig("t", 16, 2, "train")
+    pf = Prefetcher(cfg, shape, DataConfig(seed=2), start_step=3)
+    try:
+        steps = [next(pf)[0] for _ in range(4)]
+        assert steps == [3, 4, 5, 6]
+    finally:
+        pf.close()
+
+
+def test_frontend_batches():
+    for arch in ("pixtral-12b", "whisper-small"):
+        cfg = reduced(get_arch(arch))
+        shape = ShapeConfig("t", 32, 2, "train")
+        b = synth_batch(cfg, shape, DataConfig(), 0)
+        if cfg.frontend == "vision":
+            assert b["vision_embeds"].shape == (2, cfg.n_frontend_tokens,
+                                                cfg.frontend_dim)
+            assert b["tokens"].shape == (2, 32 - cfg.n_frontend_tokens)
+        if cfg.family == "encdec":
+            assert b["enc_embeds"].shape == (2, 32, cfg.frontend_dim)
