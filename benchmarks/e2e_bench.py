@@ -23,7 +23,7 @@ def run() -> list[str]:
     rows.append(f"e2e,train_tiny,tokens_per_s,{tok_s:.0f},"
                 f"loss_drop={loss_drop:.3f}")
 
-    # serving engine: slot-pool continuous batching
+    # serving engine: device-resident continuous batching over the slot pool
     from repro.models import model as model_lib
     from repro.runtime.serve import Request, ServingEngine
     import jax.numpy as jnp
@@ -34,9 +34,12 @@ def run() -> list[str]:
     t0 = time.perf_counter()
     done, ticks = eng.run_to_completion(reqs)
     dt = time.perf_counter() - t0
+    stats = eng.sync_stats()
     rows.append(f"e2e,serve_slot_pool,requests_done,{len(done)},"
                 f"ticks={ticks};rented={eng.pool.created_total};"
-                f"tok_per_s={sum(len(r.out) for r in done) / dt:.0f}")
+                f"tok_per_s={sum(len(r.out) for r in done) / dt:.0f};"
+                f"host_syncs={stats['host_syncs']};"
+                f"sync_reduction={stats['sync_reduction_x']:.1f}x")
     assert len(done) == 8
     assert eng.pool.created_total >= 8      # every request rented a slot
     assert eng.pool.used == 0               # and returned it (§4.3)

@@ -3,11 +3,15 @@
 The paper's SV "handles all resources of the processor" (§3.5) through
 simple bitmask state: a pool of uniform units, rent/return, preallocation,
 parent/children masks.  The clock-level machine (machine.py) embeds these
-semantics; this module exposes them as a small, pure, framework-level
-component so the *same* pool discipline drives:
+semantics; the *pure, jittable* transition functions live in
+``repro.runtime.pool`` (SlotPoolState) so the same pool discipline can run
+inside a compiled device program.  This module keeps the host-level
+wrapper, :class:`CorePool`, whose API predates the refactor, so the
+*same* property-tested transitions drive:
 
 * the serving slot pool (`runtime/serve.py`: KV-cache slots are cores,
-  requests are QTs — rent on admission, return on EOS),
+  requests are QTs — rent on admission, return on EOS), which runs the
+  transitions *on device* via SlotPoolState,
 * the elastic device-pool manager (`runtime/elastic.py`: pods/hosts are
   cores; a failed host is a core "disabled for some reason (like
   overheating)" §4.1.2 — the pool shrinks, work continues),
@@ -21,118 +25,100 @@ from typing import Optional
 
 import numpy as np
 
+from repro.runtime import pool as pool_lib
+from repro.runtime.pool import SlotPoolState
+
 
 @dataclasses.dataclass
 class CorePool:
-    """Bitmask pool of uniform units with EMPA rent/return semantics."""
+    """Host wrapper over the jittable EMPA pool transitions.
+
+    Thin by construction: every method is one `runtime.pool` transition
+    plus host-side error raising — the device-resident serving supervisor
+    and this host pool can never drift apart.
+    """
 
     n: int
-    # status per unit: True = in pool (available)
-    _free: np.ndarray = dataclasses.field(init=False)
-    _parent: np.ndarray = dataclasses.field(init=False)
-    # bitmasks per unit as Python ints — arbitrary pool sizes (a cluster
-    # fleet has many more units than the paper's 32 cores)
-    _children: list = dataclasses.field(init=False)
-    _prealloc: list = dataclasses.field(init=False)
-    _disabled: np.ndarray = dataclasses.field(init=False)
-    created_total: int = dataclasses.field(init=False, default=0)
-    peak_used: int = dataclasses.field(init=False, default=0)
+    state: SlotPoolState = dataclasses.field(init=False)
 
     def __post_init__(self):
-        self._free = np.ones(self.n, bool)
-        self._parent = np.full(self.n, -1, np.int64)
-        self._children = [0] * self.n
-        self._prealloc = [0] * self.n
-        self._disabled = np.zeros(self.n, bool)
+        self.state = pool_lib.init_pool(self.n)
 
     # -- queries ----------------------------------------------------------
     @property
     def available(self) -> int:
-        return int(np.sum(self._free & ~self._disabled))
+        return int(pool_lib.available(self.state))
 
     @property
     def used(self) -> int:
-        return int(np.sum(~self._free))
+        return int(pool_lib.used(self.state))
+
+    @property
+    def created_total(self) -> int:
+        return int(self.state.created_total)
+
+    @property
+    def peak_used(self) -> int:
+        return int(self.state.peak_used)
 
     def children_of(self, unit: int) -> list[int]:
-        mask = self._children[unit]
-        return [i for i in range(self.n) if mask >> i & 1]
+        mask = np.asarray(pool_lib.children_mask(self.state, unit))
+        return [int(i) for i in np.flatnonzero(mask)]
 
     def parent_of(self, unit: int) -> int:
-        return int(self._parent[unit])
+        return int(self.state.parent[unit])
 
     def ready(self) -> bool:
         """The SV's 'ALU avail' signal: ready while ≥1 core is free (§3.1)."""
         return self.available > 0
 
     # -- transitions -------------------------------------------------------
+    def _check_unit(self, unit: int) -> None:
+        if not 0 <= unit < self.n:
+            raise IndexError(f"unit {unit} out of range for pool({self.n})")
+
     def rent(self, parent: Optional[int] = None,
              prefer_preallocated: bool = True) -> Optional[int]:
         """Rent the first available unit; administer parent/child masks."""
-        cand = self._free & ~self._disabled
-        if parent is not None and prefer_preallocated:
-            pre = np.array([bool(self._prealloc[parent] >> i & 1)
-                            for i in range(self.n)])
-            if np.any(cand & pre):
-                cand = cand & pre
-        idx = np.flatnonzero(cand)
-        if idx.size == 0:
-            return None
-        u = int(idx[0])
-        self._free[u] = False
         if parent is not None:
-            self._parent[u] = parent
-            self._children[parent] |= 1 << u
-        self.created_total += 1
-        self.peak_used = max(self.peak_used, self.used)
-        return u
+            self._check_unit(parent)
+        self.state, unit = pool_lib.rent(
+            self.state, pool_lib.NO_PARENT if parent is None else parent,
+            prefer_preallocated=prefer_preallocated)
+        unit = int(unit)
+        return None if unit < 0 else unit
 
     def preallocate(self, parent: int, k: int) -> list[int]:
         """Mark k free units as preallocated for `parent` (§5.1: guarantees
         a core is always available for the iterations)."""
-        got = []
-        for u in np.flatnonzero(self._free & ~self._disabled)[:k]:
-            self._prealloc[parent] |= 1 << int(u)
-            got.append(int(u))
-        return got
+        self._check_unit(parent)
+        self.state, granted = pool_lib.preallocate(self.state, parent, k)
+        return [int(i) for i in np.flatnonzero(np.asarray(granted))]
 
     def release(self, unit: int) -> None:
         """Terminate the QT on `unit`: clear masks, return to pool (§4.3)."""
-        if self._free[unit]:
+        new_state, status = pool_lib.release(self.state, unit)
+        status = int(status)
+        if status == pool_lib.ERR_NOT_RENTED:
             raise ValueError(f"unit {unit} is not rented")
-        if self._children[unit] != 0:
+        if status == pool_lib.ERR_LIVE_CHILDREN:
             # §4.3: the SV blocks termination of a parent until its
             # children mask gets cleared.
             raise RuntimeError(
                 f"unit {unit} has live children; termination blocked")
-        p = int(self._parent[unit])
-        if p >= 0:
-            self._children[p] &= ~(1 << unit)
-        self._parent[unit] = -1
-        # clear any prealloc claims on this unit
-        for i in range(self.n):
-            self._prealloc[i] &= ~(1 << unit)
-        self._free[unit] = True
+        if status == pool_lib.ERR_BAD_UNIT:
+            raise IndexError(f"unit {unit} out of range for pool({self.n})")
+        self.state = new_state
 
     def disable(self, unit: int) -> None:
         """A unit becomes unavailable ('overheating' / failed host)."""
-        self._disabled[unit] = True
+        self._check_unit(unit)
+        self.state = pool_lib.disable(self.state, unit)
 
     def enable(self, unit: int) -> None:
-        self._disabled[unit] = False
+        self._check_unit(unit)
+        self.state = pool_lib.enable(self.state, unit)
 
     # -- invariants (property-tested) --------------------------------------
     def check_invariants(self) -> None:
-        assert self._parent.shape == (self.n,)
-        for u in range(self.n):
-            p = int(self._parent[u])
-            if p >= 0:
-                assert not self._free[u], f"{u} has parent but is free"
-                assert (self._children[p] >> u) & 1, \
-                    f"{u}'s parent {p} does not list it"
-        for p in range(self.n):
-            for c in self.children_of(p):
-                assert int(self._parent[c]) == p
-        # pool conservation
-        assert self.used + self.available + int(
-            np.sum(self._disabled & self._free)) == self.n
+        pool_lib.check_invariants(self.state)

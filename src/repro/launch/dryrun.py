@@ -56,6 +56,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # older jax: one dict per device
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         mem_stats = {k: int(getattr(mem, k)) for k in

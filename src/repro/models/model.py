@@ -485,8 +485,18 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16,
     return cache
 
 
-def prefill(params, batch, cfg: ArchConfig, max_seq: int):
-    """Run the prompt; return (last-token logits (B, V), filled cache)."""
+def prefill(params, batch, cfg: ArchConfig, max_seq: int, lengths=None):
+    """Run the prompt; return (last-token logits (B, V), filled cache).
+
+    With ``lengths`` (B,) given, rows are right-padded prompts: logits are
+    gathered at each row's last *valid* position and ``cache["pos"]`` is
+    set per row, so one batched call prefills many admitted requests at
+    once (continuous-batching packed prefill).  Causal attention keeps the
+    valid prefix exact under right-padding, and the pad tail of the KV
+    cache is masked at decode by ``pos``.  For recurrent families
+    (ssm/hybrid) the state would absorb pad tokens — callers must pass
+    exact-length rows (or ``lengths=None``) there.
+    """
     fam = cfg.family
     bsz = batch["tokens"].shape[0]
     # cache precision follows the parameters (bf16 in production, f32 in
@@ -601,7 +611,15 @@ def prefill(params, batch, cfg: ArchConfig, max_seq: int):
         raise ValueError(fam)
 
     x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = _logits(x[:, -1], params, cfg)
+    if lengths is None:
+        x_last = x[:, -1]
+    else:
+        lengths = jnp.asarray(lengths, jnp.int32)
+        # vision frontends prepend stub tokens: offset the text positions
+        offset = x.shape[1] - batch["tokens"].shape[1]
+        x_last = x[jnp.arange(bsz), offset + lengths - 1]
+        cache["pos"] = (offset + lengths).astype(jnp.int32)
+    logits = _logits(x_last, params, cfg)
     return logits, cache
 
 

@@ -13,6 +13,11 @@ Straggler mitigation = the paper's PREALLOCATION (§5.1): `spares` hosts
 are kept out of the mesh and hot-swapped for persistently slow or failed
 hosts, so the mesh shape (and the compiled program) never changes for a
 single-host loss.  A swap is rent(spare) + disable(slow), not a recompile.
+
+The pool discipline itself is the shared jittable transition set in
+``runtime/pool.py`` (via the `CorePool` host wrapper) — the exact same
+rent/release/disable semantics the serving engine runs on device, so the
+fleet manager and the slot supervisor can never drift apart.
 """
 from __future__ import annotations
 
@@ -20,6 +25,7 @@ import dataclasses
 from typing import Callable, Optional
 
 from repro.core.supervisor import CorePool
+from repro.runtime.pool import SlotPoolState
 
 # (total chips required, mesh kwargs for launch/mesh.make_degraded_mesh)
 LADDER = [
@@ -54,6 +60,11 @@ class ElasticManager:
         self.pool.preallocate(self.active[0], spares)
 
     # -- health signals ------------------------------------------------
+    @property
+    def pool_state(self) -> SlotPoolState:
+        """The underlying jittable pool state (shared with serving)."""
+        return self.pool.state
+
     @property
     def healthy_chips(self) -> int:
         return len(self.active) * CHIPS_PER_HOST

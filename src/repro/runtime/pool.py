@@ -1,0 +1,182 @@
+"""Jittable EMPA pool discipline: the SV's rent/return state as arrays.
+
+The paper's supervisor "handles all resources of the processor" (§3.5)
+through bitmask state over a pool of uniform units.  This module is that
+state as a :class:`SlotPoolState` NamedTuple of jax arrays plus *pure*
+transition functions (``rent`` / ``release`` / ``disable`` / ``enable`` /
+``preallocate``) that can live inside a jitted program — so the serving
+engine's slot supervisor runs on the device, not in host Python.
+
+One implementation, three consumers:
+
+* ``core/supervisor.CorePool`` — the host-level wrapper (raises on misuse,
+  keeps the exact pre-refactor API) used by the property tests and the
+  elastic fleet manager;
+* ``runtime/serve.ServingEngine`` — KV-cache slots are cores, requests
+  are QTs (§4.3 rent/terminate);
+* ``runtime/elastic.ElasticManager`` — hosts are cores, a failed host is
+  a core "disabled for some reason (like overheating)" (§4.1.2).
+
+Transitions never raise: they are total functions returning a status code
+(jit-compatible).  The host wrapper turns non-``OK`` codes into the
+exceptions the old numpy implementation raised.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NO_PARENT = -1
+
+# status codes returned by `release`
+OK = 0
+ERR_NOT_RENTED = 1          # ValueError on the host wrapper
+ERR_LIVE_CHILDREN = 2       # RuntimeError: §4.3 blocks parent termination
+ERR_BAD_UNIT = 3
+
+IntLike = Union[int, jax.Array]
+
+
+class SlotPoolState(NamedTuple):
+    """Pool of `n` uniform units; every field is a fixed-shape array."""
+
+    free: jax.Array           # (n,) bool — True = in pool (available)
+    parent: jax.Array         # (n,) int32 — parent unit or NO_PARENT
+    prealloc: jax.Array       # (n, n) bool — [parent, unit] claims (§5.1)
+    disabled: jax.Array       # (n,) bool — 'overheated' units (§4.1.2)
+    created_total: jax.Array  # () int32 — rents ever granted
+    peak_used: jax.Array      # () int32 — high-water mark
+
+    @property
+    def n(self) -> int:
+        return self.free.shape[0]
+
+
+def init_pool(n: int) -> SlotPoolState:
+    return SlotPoolState(
+        free=jnp.ones((n,), bool),
+        parent=jnp.full((n,), NO_PARENT, jnp.int32),
+        prealloc=jnp.zeros((n, n), bool),
+        disabled=jnp.zeros((n,), bool),
+        created_total=jnp.int32(0),
+        peak_used=jnp.int32(0),
+    )
+
+
+# -- queries (all jittable) --------------------------------------------------
+
+def available(state: SlotPoolState) -> jax.Array:
+    return jnp.sum(state.free & ~state.disabled).astype(jnp.int32)
+
+
+def used(state: SlotPoolState) -> jax.Array:
+    return jnp.sum(~state.free).astype(jnp.int32)
+
+
+def children_mask(state: SlotPoolState, unit: IntLike) -> jax.Array:
+    """Live children of `unit` (a free unit never has a parent)."""
+    return (state.parent == jnp.asarray(unit, jnp.int32)) & ~state.free
+
+
+# -- transitions -------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("prefer_preallocated",))
+def rent(state: SlotPoolState, parent: IntLike = NO_PARENT,
+         prefer_preallocated: bool = True):
+    """Rent the first available unit.  Returns (state, unit) — unit == -1
+    when the pool is exhausted (the SV's 'no ALU avail', §3.1)."""
+    parent = jnp.asarray(parent, jnp.int32)
+    # transitions are total: an out-of-range parent degrades to "no
+    # parent" rather than corrupting state (the host wrapper raises)
+    has_parent = (parent >= 0) & (parent < state.n)
+    p = jnp.clip(parent, 0, state.n - 1)
+    cand = state.free & ~state.disabled
+    pre = state.prealloc[p] & cand
+    if prefer_preallocated:
+        cand = jnp.where(has_parent & jnp.any(pre), pre, cand)
+    ok = jnp.any(cand)
+    unit = jnp.where(ok, jnp.argmax(cand), NO_PARENT).astype(jnp.int32)
+    u = jnp.maximum(unit, 0)
+    free = jnp.where(ok, state.free.at[u].set(False), state.free)
+    par = jnp.where(ok & has_parent, state.parent.at[u].set(parent),
+                    state.parent)
+    created = state.created_total + ok.astype(jnp.int32)
+    peak = jnp.maximum(state.peak_used, jnp.sum(~free).astype(jnp.int32))
+    return state._replace(free=free, parent=par, created_total=created,
+                          peak_used=peak), unit
+
+
+@jax.jit
+def release(state: SlotPoolState, unit: IntLike):
+    """Terminate the QT on `unit` (§4.3).  Returns (state, status); on a
+    non-OK status the state is unchanged."""
+    unit = jnp.asarray(unit, jnp.int32)
+    valid = (unit >= 0) & (unit < state.n)
+    u = jnp.clip(unit, 0, state.n - 1)
+    status = jnp.where(
+        ~valid, ERR_BAD_UNIT,
+        jnp.where(state.free[u], ERR_NOT_RENTED,
+                  jnp.where(jnp.any(children_mask(state, unit)),
+                            ERR_LIVE_CHILDREN, OK))).astype(jnp.int32)
+    ok = status == OK
+    par = jnp.where(ok, state.parent.at[u].set(NO_PARENT), state.parent)
+    # clear any prealloc claims on this unit
+    pre = jnp.where(ok, state.prealloc.at[:, u].set(False), state.prealloc)
+    free = jnp.where(ok, state.free.at[u].set(True), state.free)
+    return state._replace(free=free, parent=par, prealloc=pre), status
+
+
+@jax.jit
+def preallocate(state: SlotPoolState, parent: IntLike, k: IntLike):
+    """Claim up to `k` free units for `parent` (§5.1: guarantees a core is
+    always available for the iterations).  Returns (state, granted_mask).
+
+    Claims are exclusive: a unit already claimed by another parent is
+    skipped, so ``prealloc`` stays one-hot per unit column.  An
+    out-of-range parent grants nothing (the host wrapper raises)."""
+    parent = jnp.asarray(parent, jnp.int32)
+    valid = (parent >= 0) & (parent < state.n)
+    p = jnp.clip(parent, 0, state.n - 1)
+    cand = state.free & ~state.disabled & ~jnp.any(state.prealloc, axis=0)
+    take = valid & cand & (jnp.cumsum(cand) <= jnp.asarray(k, jnp.int32))
+    pre = state.prealloc.at[p].set(state.prealloc[p] | take)
+    return state._replace(prealloc=pre), take
+
+
+@jax.jit
+def disable(state: SlotPoolState, unit: IntLike) -> SlotPoolState:
+    """A unit becomes unavailable ('overheating' / failed host, §4.1.2)."""
+    return state._replace(
+        disabled=state.disabled.at[jnp.asarray(unit, jnp.int32)].set(True))
+
+
+@jax.jit
+def enable(state: SlotPoolState, unit: IntLike) -> SlotPoolState:
+    return state._replace(
+        disabled=state.disabled.at[jnp.asarray(unit, jnp.int32)].set(False))
+
+
+# -- invariants (host-side; property-tested) ---------------------------------
+
+def check_invariants(state: SlotPoolState) -> None:
+    free = np.asarray(state.free)
+    parent = np.asarray(state.parent)
+    prealloc = np.asarray(state.prealloc)
+    disabled = np.asarray(state.disabled)
+    n = free.shape[0]
+    assert parent.shape == (n,) and prealloc.shape == (n, n)
+    for u in range(n):
+        p = int(parent[u])
+        assert -1 <= p < n
+        if p >= 0:
+            assert not free[u], f"{u} has parent but is free"
+    # prealloc claims are exclusive: one parent per unit
+    assert np.all(prealloc.sum(axis=0) <= 1), "unit preallocated twice"
+    # pool conservation: rented + available + disabled-but-free == n
+    n_used = int(np.sum(~free))
+    n_avail = int(np.sum(free & ~disabled))
+    assert n_used + n_avail + int(np.sum(disabled & free)) == n

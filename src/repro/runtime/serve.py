@@ -1,15 +1,31 @@
-"""Serving runtime: prefill/decode step builders + EMPA slot pool.
+"""Serving runtime: device-resident continuous batching over the EMPA pool.
 
 The KV-cache slot pool *is* the paper's core pool: a request is a QT, a
 cache slot is a core — rented on admission, returned at EOS (§4.3's
 rent/terminate cycle), preallocation reserves slots for a stream of
-requests (§5.1).  `CorePool` from the paper's own supervisor module drives
-admission — the same semantics property-tested at the machine level.
+requests (§5.1).  The refactor pushed the supervisor onto the device:
+
+* per-slot decode state (last token, emitted count, budget, active mask)
+  lives on device as a :class:`DecodeState`;
+* one jitted **decode chunk** (`build_decode_chunk`) advances every active
+  slot up to ``chunk`` tokens inside a single ``lax.while_loop`` — greedy
+  argmax, EOS/max-new retirement and the active mask are all computed on
+  device, so the host syncs once per chunk instead of once per slot per
+  tick;
+* admission packs every rentable pending prompt into one right-padded
+  batched prefill (`build_admit_step`) that scatters prompt caches into
+  the rented slots — one compiled call per admission round, not one per
+  request.
+
+Host Python keeps only what must be host-side: the rent/return ledger
+(`core/supervisor.CorePool`, itself a thin wrapper over the same jittable
+`runtime/pool` transitions) and the request queue.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+import functools
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +35,13 @@ from repro.configs.base import ArchConfig
 from repro.core.supervisor import CorePool
 from repro.models import model as model_lib
 from repro.runtime.sharding import ShardingRules, use_rules
+
+NO_TOKEN = -1          # emitted-buffer sentinel: slot idle this iteration
+
+# families whose prefill is exact under right-padding (causal attention);
+# recurrent state (ssm/hybrid) would absorb pad tokens, so those admit
+# one exact-length prompt per prefill call instead of a padded pack
+PACKED_PREFILL_FAMILIES = ("dense", "moe", "vlm")
 
 
 def build_prefill_step(cfg: ArchConfig, max_seq: int,
@@ -38,7 +61,132 @@ def build_decode_step(cfg: ArchConfig,
 
 
 # ---------------------------------------------------------------------------
-# Host-side continuous batching over the slot pool
+# Device-resident decode state + jitted transitions
+# ---------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    """Per-slot decode supervisor state; every field is (n_slots,)."""
+
+    tokens: jax.Array    # int32 — last emitted token (decode input)
+    n_out: jax.Array     # int32 — tokens emitted so far (incl. prefill's)
+    max_new: jax.Array   # int32 — per-request budget
+    active: jax.Array    # bool — slot is decoding
+
+
+def init_decode_state(n_slots: int) -> DecodeState:
+    return DecodeState(tokens=jnp.zeros((n_slots,), jnp.int32),
+                       n_out=jnp.zeros((n_slots,), jnp.int32),
+                       max_new=jnp.zeros((n_slots,), jnp.int32),
+                       active=jnp.zeros((n_slots,), bool))
+
+
+def abstract_decode_state(n_slots: int) -> DecodeState:
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+        init_decode_state(n_slots))
+
+
+def _merge_rows(new, old, keep_new):
+    """Per-slot select between two cache leaves (batch axis 0 for `pos`,
+    axis 1 for layer-stacked leaves — same convention as init_cache)."""
+    if new.ndim == 1:
+        return jnp.where(keep_new, new, old)
+    shape = [1] * new.ndim
+    shape[1] = -1
+    return jnp.where(keep_new.reshape(shape), new, old)
+
+
+def build_decode_chunk(cfg: ArchConfig, *, chunk: int, eos_id: int,
+                       rules: Optional[ShardingRules] = None,
+                       decode_fn: Optional[Callable] = None,
+                       jit: bool = True):
+    """Jitted multi-token decode tick: one host round-trip per `chunk`.
+
+    fn(params, state, cache) -> (state, cache, emitted, iters) where
+    `emitted` is (n_slots, chunk) int32 (NO_TOKEN for idle cells) and
+    `iters` counts executed loop iterations (early exit when every slot
+    retires).  The cache is donated: the engine decodes in place.
+    """
+    decode = decode_fn or build_decode_step(cfg, rules)
+
+    def chunk_fn(params, state: DecodeState, cache):
+        n = state.tokens.shape[0]
+        emitted0 = jnp.full((n, chunk), NO_TOKEN, jnp.int32)
+
+        def cond(carry):
+            i, st, _, _ = carry
+            return (i < chunk) & jnp.any(st.active)
+
+        def body(carry):
+            i, st, cache, emitted = carry
+            logits, new_cache = decode(params, st.tokens, cache)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            # a retired slot keeps its last token and frozen cache rows:
+            # it can never perturb an active one
+            tok = jnp.where(st.active, nxt, st.tokens)
+            n_out = st.n_out + st.active.astype(jnp.int32)
+            cache = jax.tree_util.tree_map(
+                lambda a, b: _merge_rows(a, b, st.active), new_cache, cache)
+            emitted = emitted.at[:, i].set(
+                jnp.where(st.active, tok, NO_TOKEN))
+            retire = st.active & ((tok == eos_id) | (n_out >= st.max_new))
+            st = DecodeState(tok, n_out, st.max_new, st.active & ~retire)
+            return i + jnp.int32(1), st, cache, emitted
+
+        iters, state, cache, emitted = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), state, cache, emitted0))
+        return state, cache, emitted, iters
+
+    if not jit:        # the cluster supervisor jits with explicit shardings
+        return chunk_fn
+    return jax.jit(chunk_fn, donate_argnums=(2,))
+
+
+def build_admit_step(cfg: ArchConfig, max_seq: int,
+                     rules: Optional[ShardingRules] = None):
+    """Jitted packed admission: batched prefill + scatter into rented slots.
+
+    fn(params, tokens (G,Sp), lengths (G,), max_new (G,), slots (G,),
+       state, cache, first) -> (state, cache, first).
+
+    Rows whose slot is out of range (the G-padding rows) are dropped by
+    the scatter (`mode="drop"`), so the call compiles once per Sp bucket.
+    """
+
+    def admit_fn(params, tokens, lengths, max_new, slots, state, cache,
+                 first):
+        g = tokens.shape[0]
+        batch = {"tokens": tokens}
+        if cfg.frontend == "vision":
+            batch["vision_embeds"] = jnp.zeros(
+                (g, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.float32)
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = jnp.zeros(
+                (g, tokens.shape[1], cfg.frontend_dim), jnp.float32)
+        with use_rules(rules):
+            logits, cache_g = model_lib.prefill(params, batch, cfg, max_seq,
+                                                lengths=lengths)
+        ftok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        def put(big, small):
+            if big.ndim == 1:                  # pos: (n_slots,)
+                return big.at[slots].set(small, mode="drop")
+            return big.at[:, slots].set(
+                small.astype(big.dtype), mode="drop")
+        cache = jax.tree_util.tree_map(put, cache, cache_g)
+        state = DecodeState(
+            tokens=state.tokens.at[slots].set(ftok, mode="drop"),
+            n_out=state.n_out.at[slots].set(1, mode="drop"),
+            max_new=state.max_new.at[slots].set(max_new, mode="drop"),
+            active=state.active.at[slots].set(True, mode="drop"))
+        first = first.at[slots].set(ftok, mode="drop")
+        return state, cache, first
+
+    return jax.jit(admit_fn, donate_argnums=(6,))
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching engine
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -50,80 +198,159 @@ class Request:
     slot: Optional[int] = None
 
 
+def _pow2_bucket(n: int, cap: int) -> int:
+    """Next power of two ≥ n, clipped to cap — bounds recompiles."""
+    b = 1
+    while b < n:
+        b <<= 1
+    return min(b, cap) if n <= cap else n
+
+
 class ServingEngine:
     """Batched greedy decoding with rent/return slot semantics.
 
-    Single-sequence prefill writes into the rented slot's cache rows;
-    decode advances every active slot each step (inactive slots are
-    masked by feeding pad tokens and ignoring their logits).
+    The host owns the pool ledger and the queue; everything per-tick —
+    argmax, EOS / max-new retirement, the active mask, cache advancement —
+    runs inside one jitted decode chunk with a donated cache.  The host
+    syncs once per chunk (and reads nothing at admission), which is what
+    turns sequential per-slot coordination into streaming throughput.
     """
 
     def __init__(self, params, cfg: ArchConfig, *, n_slots: int,
                  max_seq: int, eos_id: int = 1,
-                 decode_fn: Optional[Callable] = None):
+                 decode_fn: Optional[Callable] = None,
+                 chunk: int = 8,
+                 rules: Optional[ShardingRules] = None):
         self.params, self.cfg = params, cfg
-        self.max_seq, self.eos_id = max_seq, eos_id
+        self.max_seq, self.eos_id, self.chunk = max_seq, eos_id, chunk
         self.pool = CorePool(n_slots)
         self.active: dict[int, Request] = {}
         dtype = jax.tree_util.tree_leaves(params)[0].dtype
         self.cache = model_lib.init_cache(cfg, n_slots, max_seq, dtype=dtype)
-        self._decode = jax.jit(decode_fn or build_decode_step(cfg))
-        self._prefill1 = jax.jit(
-            lambda p, b: model_lib.prefill(p, b, cfg, max_seq))
+        self.dstate = init_decode_state(n_slots)
+        self._first = jnp.zeros((n_slots,), jnp.int32)
+        self._need_first: set[int] = set()
+        self._chunk_fn = build_decode_chunk(cfg, chunk=chunk, eos_id=eos_id,
+                                            rules=rules, decode_fn=decode_fn)
+        self._admit_fn = build_admit_step(cfg, max_seq, rules=rules)
+        self._packed = cfg.family in PACKED_PREFILL_FAMILIES
+        # accounting: host round-trips vs the one-sync-per-slot-per-tick
+        # baseline an un-refactored engine would have paid
+        self.host_syncs = 0
+        self.baseline_syncs = 0
+        self.device_ticks = 0
+        self.decode_tokens = 0
 
     # -- admission ---------------------------------------------------------
     def admit(self, req: Request) -> bool:
-        slot = self.pool.rent()
-        if slot is None:
-            return False                      # pool exhausted: queue upstream
-        req.slot = slot
-        batch = {"tokens": jnp.asarray(req.prompt)[None]}
-        if self.cfg.frontend == "vision":
-            batch["vision_embeds"] = jnp.zeros(
-                (1, self.cfg.n_frontend_tokens, self.cfg.frontend_dim),
-                jnp.float32)
-        if self.cfg.family == "encdec":
-            batch["enc_embeds"] = jnp.zeros(
-                (1, len(req.prompt), self.cfg.frontend_dim), jnp.float32)
-        logits, cache1 = self._prefill1(self.params, batch)
-        self._write_slot(slot, cache1)
-        req.out.append(int(jnp.argmax(logits[0])))
-        self.active[slot] = req
-        return True
+        return self.admit_many([req]) == 1
 
-    def _write_slot(self, slot: int, cache1):
-        def put(big, small):
-            if big.ndim == 1:                 # pos: (n_slots,)
-                return big.at[slot].set(small[0])
-            return big.at[:, slot].set(small[:, 0])
-        self.cache = jax.tree_util.tree_map(put, self.cache, cache1)
+    def admit_many(self, requests: list[Request]) -> int:
+        """Rent slots and prefill as many of `requests` as the pool allows.
 
-    # -- one decode tick over all active slots ------------------------------
+        Packed admission: one batched padded prefill per call (causal
+        families); recurrent families fall back to one exact-length
+        prefill per request through the same jitted path.
+        """
+        granted: list[Request] = []
+        for req in requests:
+            slot = self.pool.rent()
+            if slot is None:
+                break                     # pool exhausted: queue upstream
+            req.slot = slot
+            granted.append(req)
+        if not granted:
+            return 0
+        groups = [granted] if self._packed else [[r] for r in granted]
+        for group in groups:
+            self._prefill_group(group)
+        for req in granted:
+            self.active[req.slot] = req
+            self._need_first.add(req.slot)
+        return len(granted)
+
+    def _prefill_group(self, group: list[Request]) -> None:
+        g = len(group)
+        n = self.pool.n
+        maxlen = max(len(r.prompt) for r in group)
+        span = _pow2_bucket(maxlen, self.max_seq) if self._packed else maxlen
+        # pad the group to a pow2 row count: compiles stay bounded to
+        # log2(n_slots) variants per span bucket, while a single trickle
+        # admission doesn't pay a full n_slots-row prefill
+        gpad = _pow2_bucket(g, n) if self._packed else g
+        tokens = np.zeros((gpad, span), np.int32)
+        lengths = np.ones((gpad,), np.int32)
+        max_new = np.zeros((gpad,), np.int32)
+        slots = np.full((gpad,), n, np.int32)   # n = out of range -> dropped
+        for i, r in enumerate(group):
+            tokens[i, :len(r.prompt)] = r.prompt
+            lengths[i] = len(r.prompt)
+            max_new[i] = r.max_new
+            slots[i] = r.slot
+        self.dstate, self.cache, self._first = self._admit_fn(
+            self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+            jnp.asarray(max_new), jnp.asarray(slots), self.dstate,
+            self.cache, self._first)
+        # un-refactored baseline: one argmax sync per admitted request
+        self.baseline_syncs += g
+
+    # -- one decode chunk over all active slots -----------------------------
     def step(self) -> list[Request]:
+        """Advance every active slot up to `chunk` tokens; one host sync."""
         if not self.active:
             return []
-        tokens = np.zeros((self.pool.n,), np.int32)
-        for slot, req in self.active.items():
-            tokens[slot] = req.out[-1]
-        logits, self.cache = self._decode(self.params,
-                                          jnp.asarray(tokens), self.cache)
+        self.dstate, self.cache, emitted, iters = self._chunk_fn(
+            self.params, self.dstate, self.cache)
+        em, active_mask, first, iters = jax.device_get(
+            (emitted, self.dstate.active, self._first, iters))
+        self.host_syncs += 1
+        self.device_ticks += int(iters)
         finished = []
         for slot, req in list(self.active.items()):
-            tok = int(jnp.argmax(logits[slot]))
-            req.out.append(tok)
-            if tok == self.eos_id or len(req.out) >= req.max_new:
+            if slot in self._need_first:
+                req.out.append(int(first[slot]))
+                self._need_first.discard(slot)
+            row = em[slot]
+            new_toks = [int(t) for t in row if t != NO_TOKEN]
+            req.out.extend(new_toks)
+            self.decode_tokens += len(new_toks)
+            self.baseline_syncs += len(new_toks)
+            if not active_mask[slot]:
                 finished.append(req)
                 del self.active[slot]
-                self.pool.release(slot)       # core back to the pool (§4.3)
+                self.pool.release(slot)   # core back to the pool (§4.3)
         return finished
 
     def run_to_completion(self, requests: list[Request], max_ticks=10_000):
+        """Continuous batching: admit whenever slots free up, decode in
+        device-resident chunks.  Returns (done, device decode ticks)."""
         pending = list(requests)
         done = []
-        ticks = 0
-        while (pending or self.active) and ticks < max_ticks:
-            while pending and self.admit(pending[0]):
-                pending.pop(0)
+        start_ticks = self.device_ticks
+        while (pending or self.active) and \
+                self.device_ticks - start_ticks < max_ticks:
+            n = self.admit_many(pending)
+            del pending[:n]
+            if not self.active:
+                if pending:    # no slots rentable and none draining
+                    raise RuntimeError(
+                        f"{len(pending)} requests stuck: pool has no "
+                        f"rentable slot and no active request to drain")
+                break
             done += self.step()
-            ticks += 1
-        return done, ticks
+        return done, self.device_ticks - start_ticks
+
+    # -- accounting ---------------------------------------------------------
+    def sync_stats(self) -> dict:
+        """Host-sync economy vs a per-slot-per-tick engine (same run)."""
+        tokens = max(1, self.decode_tokens)
+        return {
+            "host_syncs": self.host_syncs,
+            "baseline_syncs": self.baseline_syncs,
+            "device_ticks": self.device_ticks,
+            "decode_tokens": self.decode_tokens,
+            "host_syncs_per_100_tokens": 100.0 * self.host_syncs / tokens,
+            "baseline_syncs_per_100_tokens":
+                100.0 * self.baseline_syncs / tokens,
+            "sync_reduction_x": self.baseline_syncs / max(1, self.host_syncs),
+        }

@@ -90,7 +90,8 @@ class ClusterSupervisor:
     def plan(self) -> Plan:
         return {"train": self.plan_train,
                 "prefill": self.plan_prefill,
-                "decode": self.plan_decode}[self.shape.kind]()
+                "decode": self.plan_decode,
+                "serve": self.plan_serve}[self.shape.kind]()
 
     def plan_train(self) -> Plan:
         cfg, shape = self.cfg, self.shape
@@ -146,6 +147,34 @@ class ClusterSupervisor:
             donate_argnums=(2,),   # the cache is updated in place
             rules=self.rules, qt_graph=self.qt_graph(), notes=self._notes())
 
+    def plan_serve(self, *, chunk: int = 8, eos_id: int = 1) -> Plan:
+        """The device-resident continuous-batching tick (serve_lib): one
+        jitted chunk advances every slot up to `chunk` tokens with the
+        supervisor state (active mask, budgets) resident on device.  The
+        cache is donated — decode streams in place."""
+        cfg, shape = self.cfg, self.shape
+        n_slots = shape.global_batch
+        step = serve_lib.build_decode_chunk(
+            cfg, chunk=chunk, eos_id=eos_id, rules=self.rules, jit=False)
+        params = model_lib.abstract(cfg, self.dtype)
+        pspec = train_lib.state_specs(cfg, self.rules)["params"]
+        state = serve_lib.abstract_decode_state(n_slots)
+        slot_spec = self.rules.spec(("cache_batch",), (n_slots,))
+        sspec = serve_lib.DecodeState(*([slot_spec] * len(state)))
+        cache = model_lib.init_cache(cfg, n_slots, shape.seq_len,
+                                     dtype=self.dtype, abstract_only=True)
+        cspec = self._cache_specs(cache)
+        emitted_spec = self.rules.spec(("cache_batch", None),
+                                       (n_slots, chunk))
+        return Plan(
+            name=f"{cfg.name}/{shape.name}", kind="serve", step_fn=step,
+            abstract_args=(params, state, cache),
+            in_shardings=(self._sh(pspec), self._sh(sspec), self._sh(cspec)),
+            out_shardings=(self._sh(sspec), self._sh(cspec),
+                           self._sh(emitted_spec), self._sh(P())),
+            donate_argnums=(2,),   # decode streams the cache in place
+            rules=self.rules, qt_graph=self.qt_graph(), notes=self._notes())
+
     # -- compile-time metadata ------------------------------------------------
     def qt_graph(self) -> QTGraph:
         cfg, shape = self.cfg, self.shape
@@ -154,7 +183,7 @@ class ClusterSupervisor:
         g = QTGraph()
         g.add(QT(f"{shape.kind}_step",
                  flops=model_lib.model_flops(
-                     cfg, tokens if shape.kind != "decode"
+                     cfg, tokens if shape.kind not in ("decode", "serve")
                      else shape.global_batch, shape.kind)))
         g.add(QT("embed", shard_axis="data",
                  param_bytes=2.0 * cfg.vocab * cfg.d_model),

@@ -1,7 +1,9 @@
 """Machine semantics: results, timing model, nested QTs, properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")   # real lib or the conftest fallback
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import exec_clocks, isa, machine, programs, run_program
 

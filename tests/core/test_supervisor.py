@@ -1,6 +1,8 @@
 """Property tests of the SV pool semantics (supervisor.CorePool, qt.QTGraph)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")   # real lib or the conftest fallback
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.qt import QT, MassMode, QTGraph
 from repro.core.supervisor import CorePool

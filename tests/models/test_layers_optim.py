@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+pytest.importorskip("hypothesis")   # real lib or the conftest fallback
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.models import attention, layers
 from repro.optim import adamw

@@ -1,0 +1,201 @@
+"""Property tests of the jittable SlotPool transitions (runtime/pool.py).
+
+The same §4.3 rent/terminate discipline drives the clock-level machine's
+host pool (core/supervisor.CorePool), the serving slot supervisor (on
+device) and the elastic fleet manager — so the invariants are tested once
+over the shared pure transitions, plus parity between the consumers.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")   # real lib or the conftest fallback
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.supervisor import CorePool
+from repro.runtime import pool as pool_lib
+
+OPS = ["rent", "rent_child", "release", "prealloc", "disable", "enable"]
+
+
+def _apply(state, rented, op):
+    """Drive one op on the pure transitions, mirroring host-side legality
+    checks (only release units without live children)."""
+    if op == "rent":
+        state, u = pool_lib.rent(state)
+        if int(u) >= 0:
+            rented.append(int(u))
+    elif op == "rent_child" and rented:
+        state, u = pool_lib.rent(state, parent=rented[0])
+        if int(u) >= 0:
+            rented.append(int(u))
+    elif op == "release" and rented:
+        u = rented[-1]
+        if not np.any(np.asarray(pool_lib.children_mask(state, u))):
+            state, status = pool_lib.release(state, u)
+            assert int(status) == pool_lib.OK
+            rented.remove(u)
+    elif op == "prealloc" and rented:
+        state, _ = pool_lib.preallocate(state, rented[0], 2)
+    elif op == "disable":
+        state = pool_lib.disable(state, state.n - 1)
+    elif op == "enable":
+        state = pool_lib.enable(state, state.n - 1)
+    return state, rented
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.sampled_from(OPS), max_size=40), st.integers(2, 12))
+def test_transition_invariants_random_walk(ops, n):
+    """Conservation + parent/child consistency hold under arbitrary
+    transition sequences on the pure jittable state."""
+    state = pool_lib.init_pool(n)
+    rented: list[int] = []
+    for op in ops:
+        state, rented = _apply(state, rented, op)
+        pool_lib.check_invariants(state)
+    assert int(pool_lib.used(state)) == len(rented)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.sampled_from(OPS), max_size=30), st.integers(2, 8))
+def test_host_wrapper_matches_pure_transitions(ops, n):
+    """CorePool is a *thin* wrapper: same op sequence -> identical state."""
+    pool = CorePool(n)
+    state = pool_lib.init_pool(n)
+    rented: list[int] = []
+    for op in ops:
+        if op == "rent":
+            u = pool.rent()
+            state, v = pool_lib.rent(state)
+            assert (-1 if u is None else u) == int(v)
+            if u is not None:
+                rented.append(u)
+        elif op == "rent_child" and rented:
+            u = pool.rent(parent=rented[0])
+            state, v = pool_lib.rent(state, parent=rented[0])
+            assert (-1 if u is None else u) == int(v)
+            if u is not None:
+                rented.append(u)
+        elif op == "release" and rented:
+            u = rented[-1]
+            if not pool.children_of(u):
+                pool.release(u)
+                state, status = pool_lib.release(state, u)
+                assert int(status) == pool_lib.OK
+                rented.remove(u)
+        elif op == "prealloc" and rented:
+            pool.preallocate(rented[0], 2)
+            state, _ = pool_lib.preallocate(state, rented[0], 2)
+        elif op == "disable":
+            pool.disable(n - 1)
+            state = pool_lib.disable(state, n - 1)
+        elif op == "enable":
+            pool.enable(n - 1)
+            state = pool_lib.enable(state, n - 1)
+        for a, b in zip(pool.state, state):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    pool.check_invariants()
+    pool_lib.check_invariants(state)
+
+
+def test_host_wrapper_raises_on_misuse():
+    pool = CorePool(4)
+    with pytest.raises(ValueError):
+        pool.release(0)                  # not rented
+    p = pool.rent()
+    c = pool.rent(parent=p)
+    with pytest.raises(RuntimeError):
+        pool.release(p)                  # §4.3: live children block parent
+    pool.release(c)
+    pool.release(p)
+    with pytest.raises(IndexError):
+        pool.release(99)
+    pool.check_invariants()
+
+
+def test_transitions_compose_under_jit():
+    """The whole rent->release cycle runs inside one jitted program —
+    the property the device-resident serving supervisor relies on."""
+
+    @jax.jit
+    def cycle(state):
+        state, u1 = pool_lib.rent(state)
+        state, u2 = pool_lib.rent(state, parent=u1)
+        state, s_blocked = pool_lib.release(state, u1)   # child alive
+        state, s2 = pool_lib.release(state, u2)
+        state, s1 = pool_lib.release(state, u1)
+        return state, (u1, u2, s_blocked, s2, s1)
+
+    state, (u1, u2, s_blocked, s2, s1) = cycle(pool_lib.init_pool(4))
+    assert (int(u1), int(u2)) == (0, 1)
+    assert int(s_blocked) == pool_lib.ERR_LIVE_CHILDREN
+    assert int(s2) == pool_lib.OK and int(s1) == pool_lib.OK
+    assert int(pool_lib.used(state)) == 0
+    pool_lib.check_invariants(state)
+
+
+def test_rent_exhaustion_and_disable_inside_scan():
+    """Vectorized SV behavior: scan rents until exhaustion, -1 after."""
+    def body(state, _):
+        state, u = pool_lib.rent(state)
+        return state, u
+
+    state = pool_lib.disable(pool_lib.init_pool(3), 1)
+    state, units = jax.lax.scan(body, state, None, length=4)
+    assert [int(u) for u in units] == [0, 2, -1, -1]
+    assert int(pool_lib.available(state)) == 0
+
+
+def test_serving_and_elastic_observe_identical_pool_behavior():
+    """The serving engine's slot pool and the elastic fleet pool are the
+    same discipline: an identical op trace leaves identical state."""
+    from repro.runtime.elastic import ElasticManager
+
+    em = ElasticManager(6, spares=2)          # rents 4, preallocates 2
+    # replay the exact same trace on a fresh CorePool (as the serving
+    # engine would drive it: rent on admission, release on EOS)
+    pool = CorePool(6)
+    active = [pool.rent() for _ in range(4)]
+    pool.preallocate(active[0], 2)
+    for a, b in zip(em.pool.state, pool.state):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # a failure in the fleet == a released+disabled slot in serving terms
+    em.fail(em.active[0])                     # swap: disable + rent spare
+    pool.disable(0)
+    spare = pool.rent()
+    assert spare is not None
+    for a, b in zip(em.pool.state, pool.state):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    em.check_invariants()
+    pool.check_invariants()
+
+
+def test_serving_engine_pool_is_shared_discipline():
+    """ServingEngine's ledger and ElasticManager's fleet pool expose the
+    same SlotPoolState type — one property-tested implementation."""
+    import jax.numpy as jnp_  # noqa: F401
+
+    from repro.configs import get_arch, reduced
+    from repro.models import model
+    from repro.runtime.elastic import ElasticManager
+    from repro.runtime.serve import Request, ServingEngine
+
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=1, d_model=64,
+                  vocab=128)
+    params = model.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    eng = ServingEngine(params, cfg, n_slots=2, max_seq=32)
+    em = ElasticManager(4, spares=1)
+    assert isinstance(eng.pool.state, pool_lib.SlotPoolState)
+    assert isinstance(em.pool_state, pool_lib.SlotPoolState)
+    # rent-on-admission visible through the shared state
+    assert eng.admit(Request(0, np.arange(1, 5, dtype=np.int32), max_new=2))
+    assert not bool(eng.pool.state.free[0])
+    assert int(pool_lib.used(eng.pool.state)) == 1
+    done, _ = eng.run_to_completion([])
+    assert len(done) == 1                      # the admitted request drains
+    assert int(pool_lib.used(eng.pool.state)) == 0
+    pool_lib.check_invariants(eng.pool.state)
+    pool_lib.check_invariants(em.pool_state)

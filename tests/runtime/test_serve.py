@@ -35,7 +35,8 @@ def test_eos_releases_slot_for_next_request():
 
 
 def test_outputs_deterministic_wrt_batching():
-    """A request decoded alone == decoded while sharing the batch."""
+    """A request decoded alone == decoded while sharing the batch, even
+    when the neighbors retire mid-flight (shorter budgets)."""
     eng1 = _engine(n_slots=4)
     prompt = np.arange(1, 9, dtype=np.int32)
     solo = Request(0, prompt, max_new=5)
@@ -44,12 +45,68 @@ def test_outputs_deterministic_wrt_batching():
 
     eng2 = _engine(n_slots=4)
     rng = np.random.default_rng(1)
+    # staggered budgets: both neighbors retire while req 0 still decodes
     others = [Request(i, rng.integers(1, 100, size=6).astype(np.int32),
-                      max_new=5) for i in (1, 2)]
+                      max_new=mn) for i, mn in ((1, 2), (2, 3))]
     together = Request(0, prompt, max_new=5)
     done2, _ = eng2.run_to_completion([together] + others)
     together_out = [r for r in done2 if r.rid == 0][0].out
     assert solo_out == together_out
+
+
+def test_outputs_deterministic_wrt_retirement_churn():
+    """Regression for the stale-token retirement bug class: slots retiring
+    mid-chunk and being re-rented to fresh requests must never perturb a
+    still-active slot's token stream."""
+    prompt = np.arange(1, 9, dtype=np.int32)
+    eng1 = _engine(n_slots=3, max_seq=64)
+    done, _ = eng1.run_to_completion([Request(0, prompt, max_new=12)])
+    solo_out = done[0].out
+    assert len(solo_out) >= 2
+
+    eng2 = _engine(n_slots=3, max_seq=64)
+    rng = np.random.default_rng(7)
+    churn = [Request(i, rng.integers(1, 100, size=4).astype(np.int32),
+                     max_new=2) for i in range(1, 6)]
+    target = Request(0, prompt, max_new=12)
+    done2, _ = eng2.run_to_completion([target] + churn)
+    assert {r.rid for r in done2} == set(range(6))
+    assert [r for r in done2 if r.rid == 0][0].out == solo_out
+    assert eng2.pool.created_total == 6      # recycled slots were re-rented
+    assert eng2.pool.used == 0
+
+
+def test_host_sync_economy():
+    """The device-resident loop syncs ≥5× less than per-slot-per-tick."""
+    eng = _engine(n_slots=4, max_seq=64)
+    rng = np.random.default_rng(3)
+    reqs = [Request(i, rng.integers(1, 100, size=6).astype(np.int32),
+                    max_new=10) for i in range(6)]
+    done, _ = eng.run_to_completion(reqs)
+    assert len(done) == 6
+    stats = eng.sync_stats()
+    assert stats["sync_reduction_x"] >= 5.0, stats
+
+
+def test_plan_serve_lowers_with_shardings():
+    """ClusterSupervisor emits the jitted serve tick as a Plan."""
+    from jax.sharding import Mesh
+    from repro.configs import ShapeConfig
+    from repro.runtime.supervisor import ClusterSupervisor
+
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=1, d_model=64,
+                  vocab=128)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    shape = ShapeConfig("serve_tiny", 48, 4, "serve")
+    plan = ClusterSupervisor(mesh, cfg, shape, dtype=jnp.float32).plan()
+    assert plan.kind == "serve"
+    assert plan.donate_argnums == (2,)       # the cache decodes in place
+    lowered = jax.jit(plan.step_fn, in_shardings=plan.in_shardings,
+                      out_shardings=plan.out_shardings,
+                      donate_argnums=plan.donate_argnums) \
+        .lower(*plan.abstract_args)
+    assert lowered.compile() is not None
 
 
 def test_prefill_writes_correct_slot():
