@@ -1,7 +1,7 @@
 """Serving benchmark: device-resident continuous batching economics.
 
 Measures the refactored engine on CPU-sized configs and writes
-``BENCH_serve.json`` so the perf trajectory starts recording:
+``BENCH_serve.json`` so the perf trajectory keeps recording:
 
 * ``tokens_per_s`` — end-to-end greedy decode throughput,
 * ``device_ticks`` — decode iterations executed on device,
@@ -9,11 +9,33 @@ Measures the refactored engine on CPU-sized configs and writes
 * ``baseline_syncs_per_100_tokens`` — what the pre-refactor engine paid
   (one ``int(jnp.argmax(...))`` per slot per tick + one per admission),
   measured in the *same run* from the same token stream,
-* ``sync_reduction_x`` — the ratio (acceptance floor: ≥ 5×).
+* ``sync_reduction_x`` — the ratio (acceptance floor: ≥ 5×),
+* ``kv`` — paged-vs-contiguous KV economics from the same request
+  stream: allocated KV bytes per admitted token under each layout and
+  the reduction ratio (acceptance floor: paged strictly smaller), plus
+  shared-prefix block hits and peak block usage.
 """
 import json
 import os
 import time
+
+
+def _requests(cfg, np, Request, n=16):
+    rng = np.random.default_rng(0)
+    shared = rng.integers(1, cfg.vocab, size=16,
+                          dtype=np.int64).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        if i % 2 == 0:   # half the stream shares a 16-token (1-block) prefix
+            tail = rng.integers(1, cfg.vocab, size=int(rng.integers(2, 8)),
+                                dtype=np.int64).astype(np.int32)
+            prompt = np.concatenate([shared, tail])
+        else:
+            prompt = rng.integers(1, cfg.vocab,
+                                  size=int(rng.integers(4, 16)),
+                                  dtype=np.int64).astype(np.int32)
+        reqs.append(Request(i, prompt, max_new=int(rng.integers(6, 20))))
+    return reqs
 
 
 def run_serve(out_path: str = None) -> list[str]:
@@ -30,35 +52,58 @@ def run_serve(out_path: str = None) -> list[str]:
                   vocab=512)
     params = model_lib.init(jax.random.PRNGKey(0), cfg, jnp.float32)
     chunk = 8
-    eng = ServingEngine(params, cfg, n_slots=4, max_seq=96, chunk=chunk)
 
-    rng = np.random.default_rng(0)
-    reqs = [Request(i,
-                    rng.integers(1, cfg.vocab, size=int(rng.integers(4, 16)),
-                                 dtype=np.int64).astype(np.int32),
-                    max_new=int(rng.integers(6, 20)))
-            for i in range(16)]
-    # warmup: compile the admit/decode programs outside the timed region
-    warm = ServingEngine(params, cfg, n_slots=4, max_seq=96, chunk=chunk)
-    warm.run_to_completion([Request(99, np.arange(1, 9, dtype=np.int32),
-                                    max_new=4)])
+    def engine(paged: bool) -> ServingEngine:
+        kw = dict(paged=True, block_size=16, n_blocks=20) if paged else {}
+        return ServingEngine(params, cfg, n_slots=4, max_seq=96,
+                             chunk=chunk, **kw)
 
-    t0 = time.perf_counter()
-    done, ticks = eng.run_to_completion(reqs)
-    dt = time.perf_counter() - t0
-    assert len(done) == len(reqs)
+    results = {}
+    for paged in (False, True):
+        eng = engine(paged)
+        # warmup on the SAME engine (each engine owns its jitted
+        # closures), then reset the counters for a clean measurement
+        eng.run_to_completion([Request(99, np.arange(1, 9, dtype=np.int32),
+                                       max_new=4)])
+        eng.reset_stats()
+        reqs = _requests(cfg, np, Request)
+        t0 = time.perf_counter()
+        done, ticks = eng.run_to_completion(reqs)
+        dt = time.perf_counter() - t0
+        assert len(done) == len(reqs)
+        results[eng.kv_stats()["layout"]] = dict(
+            engine=eng, done=done, ticks=ticks, dt=dt,
+            outputs={r.rid: list(r.out) for r in done})
+    # paged decode is token-exact vs the contiguous cache (same stream)
+    token_exact = results["paged"]["outputs"] == results["contiguous"]["outputs"]
+    assert token_exact, "paged decode diverged from the contiguous cache"
 
-    total_tokens = sum(len(r.out) for r in done)
+    eng = results["contiguous"]["engine"]
+    dt, ticks = results["contiguous"]["dt"], results["contiguous"]["ticks"]
+    total_tokens = sum(len(r.out) for r in results["contiguous"]["done"])
     stats = eng.sync_stats()
+    kv_c = eng.kv_stats()
+    kv_p = results["paged"]["engine"].kv_stats()
+    kv_reduction = kv_c["kv_bytes_per_token"] / kv_p["kv_bytes_per_token"]
     record = {
         "suite": "serve",
         "config": {"arch": cfg.name, "n_slots": 4, "chunk": chunk,
-                   "n_requests": len(reqs), "max_seq": 96},
+                   "n_requests": len(results["contiguous"]["done"]),
+                   "max_seq": 96, "block_size": 16, "n_blocks": 20},
         "tokens_per_s": total_tokens / dt,
         "total_tokens": total_tokens,
         "device_ticks": ticks,
         "wall_s": dt,
         **stats,
+        "kv": {
+            "contiguous_bytes_per_token": kv_c["kv_bytes_per_token"],
+            "paged_bytes_per_token": kv_p["kv_bytes_per_token"],
+            "kv_bytes_reduction_x": kv_reduction,
+            "paged_token_exact": token_exact,
+            "shared_block_hits": kv_p["shared_block_hits"],
+            "peak_blocks": kv_p["peak_blocks"],
+            "stalls": kv_p["stalls"],
+        },
     }
     with open(out_path, "w") as f:
         json.dump(record, f, indent=2)
@@ -70,9 +115,17 @@ def run_serve(out_path: str = None) -> list[str]:
                 f"{stats['host_syncs_per_100_tokens']:.2f},"
                 f"baseline={stats['baseline_syncs_per_100_tokens']:.2f};"
                 f"reduction={stats['sync_reduction_x']:.1f}x")
+    rows.append(f"serve,paged_kv_economy,kv_bytes_per_token,"
+                f"{kv_p['kv_bytes_per_token']:.0f},"
+                f"contiguous={kv_c['kv_bytes_per_token']:.0f};"
+                f"reduction={kv_reduction:.2f}x;"
+                f"shared_hits={kv_p['shared_block_hits']}")
     rows.append(f"serve,artifact,path,{out_path},")
-    # acceptance floor: ≥ 5× fewer host syncs than per-slot-per-tick
+    # acceptance floors: ≥ 5× fewer host syncs than per-slot-per-tick;
+    # paged KV bytes per token strictly below contiguous, with no stalls
     assert stats["sync_reduction_x"] >= 5.0, stats
+    assert kv_reduction > 1.0, record["kv"]
+    assert kv_p["stalls"] == 0, record["kv"]
     return rows
 
 

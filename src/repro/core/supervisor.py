@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.runtime import pool as pool_lib
@@ -87,6 +88,13 @@ class CorePool:
             prefer_preallocated=prefer_preallocated)
         unit = int(unit)
         return None if unit < 0 else unit
+
+    def rent_many(self, k: int) -> list[int]:
+        """Rent up to `k` units in one vectorized transition (same grant
+        order as `k` sequential rents).  Returns the granted unit ids."""
+        self.state, units = pool_lib.rent_many(
+            self.state, jnp.ones((k,), bool))
+        return [int(u) for u in np.asarray(units) if int(u) >= 0]
 
     def preallocate(self, parent: int, k: int) -> list[int]:
         """Mark k free units as preallocated for `parent` (§5.1: guarantees

@@ -10,3 +10,6 @@
 #   flash_attention — SUMUP applied to softmax: online (m, l, acc) stream
 #   ssd_scan        — Mamba2 SSD: chunk children + sequential-grid parent
 #                     state carry (the latched parent-child chain)
+#   paged_attention — SUMUP decode attention over the paged KV cache:
+#                     scalar-prefetched block tables aim each KV DMA at
+#                     the supervisor-rented physical block

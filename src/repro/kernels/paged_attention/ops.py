@@ -1,0 +1,18 @@
+"""Public jit'd wrapper for paged decode attention."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention_call
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@jax.jit
+def paged_attention(q, k_pages, v_pages, block_tables, lengths):
+    """Block-table decode attention.  q (B,H,D) against (P,bs,Hkv,D)
+    pages addressed by (B,NB) tables, masked by (B,) lengths."""
+    return paged_attention_call(q, k_pages, v_pages, block_tables, lengths,
+                                interpret=_interpret())

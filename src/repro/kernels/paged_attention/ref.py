@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: materialize the block-table gather, then softmax."""
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths):
+    """q: (B, H, D); k/v_pages: (P, bs, Hkv, D); block_tables: (B, NB);
+    lengths: (B,).  Returns (B, H, D)."""
+    b, h, d = q.shape
+    n_pages, bs, hkv, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    t = jnp.clip(block_tables, 0, n_pages - 1)
+    k = k_pages[t].reshape(b, nb * bs, hkv, d)
+    v = v_pages[t].reshape(b, nb * bs, hkv, d)
+    rep = h // hkv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(d))
+    pos = jnp.arange(nb * bs)
+    s = jnp.where(pos[None, None, :] < lengths[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

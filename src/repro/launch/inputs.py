@@ -54,13 +54,22 @@ def decode_inputs(cfg: ArchConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
     return token, cache
 
 
-def cache_axes(cfg: ArchConfig) -> dict:
-    """Logical axes for each cache leaf (family-dependent)."""
-    kv = ("layers", "cache_batch", None, "cache_kv_heads", "cache_head_dim")
+def cache_axes(cfg: ArchConfig, paged: bool = False) -> dict:
+    """Logical axes for each cache leaf (family-dependent).
+
+    Paged K/V pages are `(layers, n_blocks, block_size, hkv, dh)`: any
+    slot's chain may live on any block, so the block axes replicate
+    across the data axis and TP stays on the head/head-dim axes; the
+    per-slot block tables shard with the slot batch."""
+    kv = ("layers", None, None, "cache_kv_heads", "cache_head_dim") \
+        if paged else \
+        ("layers", "cache_batch", None, "cache_kv_heads", "cache_head_dim")
     ax = {"pos": ("cache_batch",)}
     fam = cfg.family
     if fam in ("dense", "moe", "vlm", "encdec"):
         ax.update(k=kv, v=kv)
+        if paged:
+            ax["block_tables"] = ("cache_batch", None)
         if fam == "encdec":
             ax.update(xk=kv, xv=kv)
     if fam in ("ssm", "hybrid"):

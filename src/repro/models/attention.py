@@ -135,6 +135,33 @@ def decode_attention(q, k_cache, v_cache, cache_len):
     return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
 
 
+def paged_decode_attention(q, k_pages, v_pages, block_tables, cache_len,
+                           use_kernel=None):
+    """Single-token decode over a paged cache: q (B, 1, H, D) against
+    (P, bs, Hkv, D) pages addressed by (B, NB) block tables.
+
+    The pure-jnp path gathers the chain back into the contiguous layout
+    and reuses :func:`decode_attention` — element order matches the
+    contiguous cache exactly, so paged decode is bit-identical to
+    contiguous decode on the same tokens (the parity the serving tests
+    assert).  On TPU the Pallas kernel (kernels/paged_attention) computes
+    the same schedule without materializing the gather.
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        from repro.kernels.paged_attention import paged_attention
+        o = paged_attention(q[:, 0], k_pages, v_pages, block_tables,
+                            cache_len)
+        return o[:, None]
+    n_pages, bs, _, d = k_pages.shape
+    b, nb = block_tables.shape
+    t = jnp.clip(block_tables, 0, n_pages - 1)
+    k = k_pages[t].reshape(b, nb * bs, k_pages.shape[2], d)
+    v = v_pages[t].reshape(b, nb * bs, v_pages.shape[2], d)
+    return decode_attention(q, k, v, cache_len)
+
+
 def attention_flops(batch: int, sq: int, skv: int, heads: int, head_dim: int,
                     causal: bool) -> float:
     f = 4.0 * batch * heads * sq * skv * head_dim  # QK^T + PV

@@ -17,6 +17,7 @@ the loop lives in one compiled `lax.scan`, layer weights are all-gathered
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -453,39 +454,113 @@ def _kv_cache_axes():
     return ("cache_batch", None, "cache_kv_heads", None)
 
 
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Paged KV layout: the cache is a pool of `n_blocks` blocks of
+    `block_size` positions, addressed per slot through a block table
+    (runtime/paging.py owns the rent/release discipline over them).
+
+    Only causal attention-cache families (dense/moe/vlm) page; recurrent
+    state (ssm/hybrid) is O(1) per slot and has nothing to page.
+    """
+
+    block_size: int
+    n_blocks: int
+
+    def max_blocks(self, max_seq: int) -> int:
+        return -(-max_seq // self.block_size)
+
+
+PAGED_FAMILIES = ("dense", "moe", "vlm")
+
+
 def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16,
-               abstract_only: bool = False):
-    """Cache pytree for `decode_step` (shapes depend on the family)."""
+               abstract_only: bool = False,
+               layout: Optional[PagedLayout] = None):
+    """Cache pytree for `decode_step` (shapes depend on the family).
+
+    With `layout` given, attention K/V live in `(L, n_blocks, block_size,
+    hkv, dh)` pages plus a per-slot `block_tables` leaf (-1 = end of
+    chain); without it, the contiguous `(L, batch, max_seq, hkv, dh)`
+    allocation.  Both shapes go through the same `decode_step`.
+    """
     mk = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if abstract_only else \
          (lambda s, dt: jnp.zeros(s, dt))
-    hkv, dh = cfg.n_kv_heads, cfg.head_dim
-    cache = {"pos": mk((batch,), jnp.int32)}
+
+    def kv(n_layers: int, *names: str) -> dict:
+        hkv, dh = cfg.n_kv_heads, cfg.head_dim
+        shape = (n_layers, batch, max_seq, hkv, dh) if layout is None else \
+            (n_layers, layout.n_blocks, layout.block_size, hkv, dh)
+        return {name: mk(shape, dtype) for name in names}
+
+    def recurrent() -> dict:
+        return {
+            "conv": mk((cfg.n_layers, batch, cfg.ssm_conv - 1,
+                        ssm.conv_dim(cfg)), dtype),
+            "state": mk((cfg.n_layers, batch, cfg.ssm_nheads,
+                         cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+        }
+
     fam = cfg.family
+    if layout is not None and fam not in PAGED_FAMILIES:
+        raise ValueError(
+            f"paged KV cache supports {PAGED_FAMILIES}, not {fam!r}: "
+            "recurrent/cross-attention state is not paged")
+    cache = {"pos": mk((batch,), jnp.int32)}
     if fam in ("dense", "moe", "vlm"):
-        cache["k"] = mk((cfg.n_layers, batch, max_seq, hkv, dh), dtype)
-        cache["v"] = mk((cfg.n_layers, batch, max_seq, hkv, dh), dtype)
+        cache.update(kv(cfg.n_layers, "k", "v"))
+        if layout is not None:
+            nb = layout.max_blocks(max_seq)
+            cache["block_tables"] = mk((batch, nb), jnp.int32) \
+                if abstract_only else jnp.full((batch, nb), -1, jnp.int32)
     elif fam == "ssm":
-        cache["conv"] = mk((cfg.n_layers, batch, cfg.ssm_conv - 1,
-                            ssm.conv_dim(cfg)), dtype)
-        cache["state"] = mk((cfg.n_layers, batch, cfg.ssm_nheads,
-                             cfg.ssm_headdim, cfg.ssm_state), jnp.float32)
+        cache.update(recurrent())
     elif fam == "hybrid":
-        napp = cfg.n_layers // cfg.shared_attn_every
-        cache["conv"] = mk((cfg.n_layers, batch, cfg.ssm_conv - 1,
-                            ssm.conv_dim(cfg)), dtype)
-        cache["state"] = mk((cfg.n_layers, batch, cfg.ssm_nheads,
-                             cfg.ssm_headdim, cfg.ssm_state), jnp.float32)
-        cache["k"] = mk((napp, batch, max_seq, hkv, dh), dtype)
-        cache["v"] = mk((napp, batch, max_seq, hkv, dh), dtype)
+        cache.update(recurrent())
+        cache.update(kv(cfg.n_layers // cfg.shared_attn_every, "k", "v"))
     elif fam == "encdec":
-        cache["k"] = mk((cfg.dec_layers, batch, max_seq, hkv, dh), dtype)
-        cache["v"] = mk((cfg.dec_layers, batch, max_seq, hkv, dh), dtype)
-        cache["xk"] = mk((cfg.dec_layers, batch, max_seq, hkv, dh), dtype)
-        cache["xv"] = mk((cfg.dec_layers, batch, max_seq, hkv, dh), dtype)
+        cache.update(kv(cfg.dec_layers, "k", "v", "xk", "xv"))
     return cache
 
 
-def prefill(params, batch, cfg: ArchConfig, max_seq: int, lengths=None):
+def _prefill_paged(params, batch, cfg: ArchConfig, max_seq: int,
+                   layout: PagedLayout, lengths=None):
+    """Paged prefill: contiguous prefill over the (block-rounded) prompt
+    span, then scatter the K/V blocks into pages with full identity
+    chains (row i owns blocks ``i*nb_full .. (i+1)*nb_full - 1``, so
+    decode up to ``max_seq`` never needs growth).  The serving engine
+    instead scatters into *rented* blocks and grows chains on demand
+    (runtime/paging.py); this path is the standalone cache API (plans,
+    parity tests, single-shot generation)."""
+    if cfg.family not in PAGED_FAMILIES:    # fail before the inner prefill
+        raise ValueError(
+            f"paged KV cache supports {PAGED_FAMILIES}, not {cfg.family!r}")
+    bsz = batch["tokens"].shape[0]
+    bs = layout.block_size
+    span = batch["tokens"].shape[1]
+    if cfg.frontend == "vision":
+        span += cfg.n_frontend_tokens
+    span_pad = -(-span // bs) * bs
+    nb = span_pad // bs
+    nb_full = layout.max_blocks(max_seq)
+    if bsz * nb_full > layout.n_blocks:
+        raise ValueError(f"static paged prefill needs {bsz * nb_full} "
+                         f"blocks, pool has {layout.n_blocks}")
+    logits, cc = prefill(params, batch, cfg, span_pad, lengths=lengths)
+    cache = init_cache(cfg, bsz, max_seq, dtype=cc["k"].dtype, layout=layout)
+    n_layers = cc["k"].shape[0]
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    chains = jnp.arange(bsz * nb_full, dtype=jnp.int32).reshape(bsz, nb_full)
+    for name in ("k", "v"):
+        blocks = cc[name].reshape(n_layers, bsz, nb, bs, hkv, dh)
+        cache[name] = cache[name].at[:, chains[:, :nb]].set(blocks)
+    cache["block_tables"] = chains
+    cache["pos"] = cc["pos"]
+    return logits, cache
+
+
+def prefill(params, batch, cfg: ArchConfig, max_seq: int, lengths=None,
+            layout: Optional[PagedLayout] = None):
     """Run the prompt; return (last-token logits (B, V), filled cache).
 
     With ``lengths`` (B,) given, rows are right-padded prompts: logits are
@@ -496,7 +571,13 @@ def prefill(params, batch, cfg: ArchConfig, max_seq: int, lengths=None):
     cache is masked at decode by ``pos``.  For recurrent families
     (ssm/hybrid) the state would absorb pad tokens — callers must pass
     exact-length rows (or ``lengths=None``) there.
+
+    With ``layout`` given the returned cache is paged (see
+    :class:`PagedLayout`); ``decode_step`` accepts either.
     """
+    if layout is not None:
+        return _prefill_paged(params, batch, cfg, max_seq, layout,
+                              lengths=lengths)
     fam = cfg.family
     bsz = batch["tokens"].shape[0]
     # cache precision follows the parameters (bf16 in production, f32 in
@@ -642,8 +723,35 @@ def _decode_attn_layer(x1, lp, cfg, k_l, v_l, pos, sfx=""):
     return out, k_l, v_l
 
 
+def _decode_attn_layer_paged(x1, lp, cfg, k_l, v_l, pos, blk, off, tables,
+                             sfx=""):
+    """One-token attention against a paged cache layer: write the new
+    K/V into (block, offset) of each row's chain, then attend through
+    the block table.  Rows with no valid block (retired / released
+    chains, `blk` < 0) drop the write — they can never corrupt a live
+    chain's pages."""
+    n_pages = k_l.shape[0]
+    q_pos = pos[:, None]
+    q = jnp.einsum("bsd,dhk->bshk", x1, lp[f"w{sfx}q"])
+    k = jnp.einsum("bsd,dhk->bshk", x1, lp[f"w{sfx}k"])
+    v = jnp.einsum("bsd,dhk->bshk", x1, lp[f"w{sfx}v"])
+    if cfg.pos_embed == "rope":
+        q = layers.apply_rope(q, q_pos, cfg.rope_theta)
+        k = layers.apply_rope(k, q_pos, cfg.rope_theta)
+    wblk = jnp.where(blk >= 0, blk, n_pages)   # out of range -> dropped
+    k_l = k_l.at[wblk, off].set(k[:, 0].astype(k_l.dtype), mode="drop")
+    v_l = v_l.at[wblk, off].set(v[:, 0].astype(v_l.dtype), mode="drop")
+    o = attn_lib.paged_decode_attention(q, k_l, v_l, tables, pos + 1)
+    out = jnp.einsum("bshk,hkd->bsd", o, lp[f"w{sfx}o"])
+    return out, k_l, v_l
+
+
 def decode_step(params, token, cache, cfg: ArchConfig):
-    """One decode step.  token: (B,) int32.  Returns (logits (B,V), cache)."""
+    """One decode step.  token: (B,) int32.  Returns (logits (B,V), cache).
+
+    Accepts either cache layout from :func:`init_cache`: the presence of
+    ``block_tables`` selects the paged write/attend path.
+    """
     bsz = token.shape[0]
     pos = cache["pos"]
     x = layers.embed(params["embed"]["tok"], token)[:, None]   # (B,1,d)
@@ -652,7 +760,31 @@ def decode_step(params, token, cache, cfg: ArchConfig):
                                          pos[:, None])
     fam = cfg.family
 
-    if fam in ("dense", "moe", "vlm"):
+    if fam in PAGED_FAMILIES and "block_tables" in cache:
+        tables = cache["block_tables"]
+        blk_size = cache["k"].shape[2]
+        nb = tables.shape[1]
+        blk_idx = pos // blk_size
+        blk = jnp.take_along_axis(
+            tables, jnp.clip(blk_idx, 0, nb - 1)[:, None], axis=1)[:, 0]
+        # beyond-capacity rows (frozen retired slots at pos == max_seq)
+        # must not clamp into a live block
+        blk = jnp.where(blk_idx < nb, blk, -1)
+        off = pos % blk_size
+
+        def body(carry, inp):
+            lp, k_l, v_l = inp
+            h_in = layers.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+            h, k_l, v_l = _decode_attn_layer_paged(h_in, lp, cfg, k_l, v_l,
+                                                   pos, blk, off, tables)
+            y = carry + h
+            f, _ = _ffn(layers.rms_norm(y, lp["ln2"], cfg.norm_eps), lp, cfg)
+            return y + f, (k_l, v_l)
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                             cache["v"]))
+        cache = dict(cache, k=ks, v=vs)
+
+    elif fam in ("dense", "moe", "vlm"):
         def body(carry, inp):
             lp, k_l, v_l = inp
             h_in = layers.rms_norm(carry, lp["ln1"], cfg.norm_eps)

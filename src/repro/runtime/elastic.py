@@ -55,8 +55,10 @@ class ElasticManager:
         self.on_relower = on_relower
         self.level = 0
         self.events: list[Event] = []
-        # rent the active fleet; leave `spares` in the pool, preallocated
-        self.active = [self.pool.rent() for _ in range(n_hosts - spares)]
+        # rent the active fleet in ONE vectorized pool transition (the
+        # same `rent_many` the paged serving chunk uses to grow block
+        # chains on device); leave `spares` in the pool, preallocated
+        self.active = self.pool.rent_many(n_hosts - spares)
         self.pool.preallocate(self.active[0], spares)
 
     # -- health signals ------------------------------------------------

@@ -1,0 +1,163 @@
+"""Paged KV-cache block pool under the SV's rent/release discipline.
+
+PR 1 made KV-cache *slots* the rented resource; this module makes the
+rented resource a fixed-size KV **block** (vLLM-style paging), which is
+the paper's discipline applied one level down: the supervisor "handles
+all resources of the processor" (§3.5) one action per clock — here the
+resources are cache blocks, the actions are the same pure transitions
+(`runtime/pool.rent_many` / `release_many`) the slot pool already runs.
+
+State:
+
+* :class:`BlockPoolState` — a :class:`SlotPoolState` over ``n_blocks``
+  plus per-block **refcounts** (shared prompt-prefix blocks are rented
+  once and referenced by many chains);
+* per-slot **block tables** ``(n_slots, max_blocks)`` int32 (-1 = end of
+  chain) — these live in the serving cache pytree so the jitted decode
+  step can translate ``pos`` -> ``(block, offset)`` without host help.
+
+Transitions (all pure, all jit-compatible):
+
+* :func:`admit_chains` — admission rents the blocks a prompt needs and
+  takes a reference on every block of the chain (shared prefix blocks
+  are referenced, not re-rented);
+* :func:`grow_for_decode` — inside the jitted decode chunk: every active
+  slot whose ``pos`` crossed a block boundary rents one more block in a
+  single vectorized ``rent_many`` (no host sync);
+* :func:`release_chain` — retirement drops the chain's references and
+  returns refcount-zero blocks to the pool (§4.3 rent/terminate).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime import pool as pool_lib
+from repro.runtime.pool import SlotPoolState
+
+NO_BLOCK = -1
+
+
+class BlockPoolState(NamedTuple):
+    """The rented resource is a KV block; every field is fixed-shape."""
+
+    pool: SlotPoolState       # free/disabled/created/peak over n_blocks
+    refcount: jax.Array       # (n_blocks,) int32 — chains referencing
+
+    @property
+    def n_blocks(self) -> int:
+        return self.pool.n
+
+
+def init_blocks(n_blocks: int) -> BlockPoolState:
+    return BlockPoolState(pool=pool_lib.init_pool(n_blocks),
+                          refcount=jnp.zeros((n_blocks,), jnp.int32))
+
+
+def init_block_tables(n_slots: int, max_blocks: int) -> jax.Array:
+    return jnp.full((n_slots, max_blocks), NO_BLOCK, jnp.int32)
+
+
+def abstract_blocks(n_blocks: int) -> BlockPoolState:
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+        init_blocks(n_blocks))
+
+
+def _sanitize(idx: jax.Array, n: int) -> jax.Array:
+    """Map NO_BLOCK entries to an out-of-range sentinel so scatters with
+    ``mode="drop"`` skip them (negative indices would wrap)."""
+    return jnp.where(idx >= 0, idx, n).astype(jnp.int32)
+
+
+def admit_chains(state: BlockPoolState, chain_blocks: jax.Array,
+                 new_blocks: jax.Array) -> BlockPoolState:
+    """Admission: rent `new_blocks`, reference every block in
+    `chain_blocks` (both flat int32 arrays, NO_BLOCK-padded).
+
+    The host supervisor picked the block ids (it owns the admission-time
+    free list and the prefix-hash map); this transition commits them to
+    the device state: shared prefix blocks appear in `chain_blocks` only
+    (refcount + 1), newly stored blocks appear in both (rented AND
+    referenced).
+    """
+    n = state.n_blocks
+    new_s = _sanitize(jnp.asarray(new_blocks, jnp.int32), n)
+    chain_s = _sanitize(jnp.asarray(chain_blocks, jnp.int32), n)
+    n_new = jnp.sum(new_s < n).astype(jnp.int32)
+    pool = state.pool
+    free = pool.free.at[new_s].set(False, mode="drop")
+    created = pool.created_total + n_new
+    peak = jnp.maximum(pool.peak_used, jnp.sum(~free).astype(jnp.int32))
+    refcount = state.refcount.at[chain_s].add(1, mode="drop")
+    return BlockPoolState(
+        pool=pool._replace(free=free, created_total=created, peak_used=peak),
+        refcount=refcount)
+
+
+def grow_for_decode(state: BlockPoolState, tables: jax.Array,
+                    pos: jax.Array, active: jax.Array, *, block_size: int):
+    """One decode tick's block growth, fully on device.
+
+    Every active slot whose next write position ``pos`` falls in a block
+    its chain doesn't cover yet rents exactly one block via a single
+    vectorized :func:`pool.rent_many`.  Returns
+    ``(state, tables, stalled)`` where ``stalled`` marks slots that
+    needed a block the pool couldn't grant (the engine's admission-time
+    reservation makes this unreachable; it is the safety valve, not the
+    plan — a stalled slot must be retired, never written).
+    """
+    n_slots, max_blocks = tables.shape
+    need_idx = pos // block_size
+    have = jnp.sum(tables >= 0, axis=1).astype(jnp.int32)
+    need = jnp.asarray(active, bool) & (need_idx >= have)
+    pool, units = pool_lib.rent_many(state.pool, need)
+    granted = units >= 0
+    row = jnp.arange(n_slots)
+    col = jnp.where(granted, jnp.clip(need_idx, 0, max_blocks - 1),
+                    max_blocks)
+    tables = tables.at[row, col].set(units, mode="drop")
+    refcount = state.refcount.at[
+        jnp.where(granted, units, state.n_blocks)].set(1, mode="drop")
+    stalled = need & ~granted
+    return BlockPoolState(pool=pool, refcount=refcount), tables, stalled
+
+
+@jax.jit
+def release_chain(state: BlockPoolState, tables: jax.Array, slot):
+    """Retire `slot`: drop one reference per chain block, return
+    refcount-zero blocks to the pool, clear the slot's table row."""
+    n = state.n_blocks
+    chain = _sanitize(tables[jnp.asarray(slot, jnp.int32)], n)
+    refcount = state.refcount.at[chain].add(-1, mode="drop")
+    newly_free = (refcount <= 0) & ~state.pool.free
+    pool = pool_lib.release_many(state.pool, newly_free)
+    tables = tables.at[jnp.asarray(slot, jnp.int32)].set(NO_BLOCK)
+    return BlockPoolState(pool=pool, refcount=refcount), tables
+
+
+# -- queries / invariants ----------------------------------------------------
+
+def blocks_in_use(state: BlockPoolState) -> jax.Array:
+    return jnp.sum(~state.pool.free).astype(jnp.int32)
+
+
+def check_invariants(state: BlockPoolState, tables=None) -> None:
+    """Host-side: refcounts and the free mask must agree; with `tables`
+    given, refcounts must equal the number of chains referencing."""
+    pool_lib.check_invariants(state.pool)
+    free = np.asarray(state.pool.free)
+    ref = np.asarray(state.refcount)
+    assert np.all(ref >= 0), "negative refcount"
+    assert np.all(ref[free] == 0), "free block still referenced"
+    assert np.all(ref[~free] >= 1), "rented block with no reference"
+    if tables is not None:
+        t = np.asarray(tables)
+        counts = np.zeros_like(ref)
+        for row in t:
+            for b in row[row >= 0]:
+                counts[b] += 1
+        assert np.array_equal(counts, ref), (counts, ref)

@@ -131,6 +131,57 @@ def release(state: SlotPoolState, unit: IntLike):
 
 
 @jax.jit
+def rent_many(state: SlotPoolState, need: jax.Array):
+    """Vectorized rent: grant one unit per ``True`` row of ``need``.
+
+    The generalization that lets the same discipline govern pools of
+    *arbitrary* resource counts (KV-cache blocks, not just slots): the
+    serving decode chunk asks for one block per slot crossing a block
+    boundary in a single pure transition — no host round-trip, no Python
+    loop over rows.  Returns ``(state, units)`` where ``units`` has the
+    shape of ``need``: the granted unit id per row, or -1 where the row
+    didn't ask or the pool ran dry (grants are first-come first-served in
+    row order, lowest-index units first — the same order a loop of
+    ``rent`` calls would produce)."""
+    need = jnp.asarray(need, bool)
+    avail = state.free & ~state.disabled
+    n_avail = jnp.sum(avail).astype(jnp.int32)
+    # available unit ids first, ascending (stable sort keeps index order)
+    order = jnp.argsort(~avail, stable=True).astype(jnp.int32)
+    rank = jnp.cumsum(need.astype(jnp.int32)) - 1
+    ok = need & (rank < n_avail)
+    u = order[jnp.clip(rank, 0, state.n - 1)]
+    units = jnp.where(ok, u, NO_PARENT).astype(jnp.int32)
+    # scatter with an out-of-range sentinel for ungranted rows ("drop")
+    free = state.free.at[jnp.where(ok, u, state.n)].set(False, mode="drop")
+    created = state.created_total + jnp.sum(ok).astype(jnp.int32)
+    peak = jnp.maximum(state.peak_used, jnp.sum(~free).astype(jnp.int32))
+    return state._replace(free=free, created_total=created,
+                          peak_used=peak), units
+
+
+@jax.jit
+def release_many(state: SlotPoolState, mask: jax.Array) -> SlotPoolState:
+    """Vectorized release of every rented unit in ``mask`` (n,) bool.
+
+    Rows that are already free are ignored; a unit whose live children are
+    not all being released in the same call is kept rented (the §4.3
+    parent-termination block, applied set-wise).  Total function — never
+    raises — so it can run inside the jitted serving chunk when a whole
+    block chain retires at once."""
+    mask = jnp.asarray(mask, bool)
+    alive_after = ~state.free & ~mask
+    has_child = jnp.any(
+        (state.parent[None, :] == jnp.arange(state.n)[:, None])
+        & alive_after[None, :], axis=1)
+    rel = mask & ~state.free & ~has_child
+    free = state.free | rel
+    parent = jnp.where(rel, NO_PARENT, state.parent)
+    prealloc = state.prealloc & ~rel[None, :]
+    return state._replace(free=free, parent=parent, prealloc=prealloc)
+
+
+@jax.jit
 def preallocate(state: SlotPoolState, parent: IntLike, k: IntLike):
     """Claim up to `k` free units for `parent` (§5.1: guarantees a core is
     always available for the iterations).  Returns (state, granted_mask).

@@ -17,9 +17,25 @@ requests (§5.1).  The refactor pushed the supervisor onto the device:
   the rented slots — one compiled call per admission round, not one per
   request.
 
+**Paged mode** (``ServingEngine(paged=True)``) applies the same rent /
+release discipline one level down: the rented resource is a fixed-size
+KV *block* (runtime/paging.py), so a slot's cache cost is proportional
+to its actual sequence, not to ``max_seq``:
+
+* admission rents ``ceil(len/block)`` blocks and *reserves* (the paper's
+  §5.1 preallocation, as host accounting) the worst-case remainder, so
+  decode growth can never starve mid-flight;
+* identical prompt-prefix blocks are shared through a host-side hash
+  map with device refcounts — rented once, referenced by many chains;
+* inside the jitted chunk, slots crossing a block boundary rent one
+  block each through a single vectorized ``pool.rent_many`` — no host
+  sync;
+* retirement releases the whole chain; refcount-zero blocks return to
+  the pool.
+
 Host Python keeps only what must be host-side: the rent/return ledger
 (`core/supervisor.CorePool`, itself a thin wrapper over the same jittable
-`runtime/pool` transitions) and the request queue.
+`runtime/pool` transitions), the prefix-hash map, and the request queue.
 """
 from __future__ import annotations
 
@@ -34,6 +50,9 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.supervisor import CorePool
 from repro.models import model as model_lib
+from repro.models.model import PagedLayout
+from repro.runtime import paging
+from repro.runtime import pool as pool_lib
 from repro.runtime.sharding import ShardingRules, use_rules
 
 NO_TOKEN = -1          # emitted-buffer sentinel: slot idle this iteration
@@ -99,47 +118,98 @@ def _merge_rows(new, old, keep_new):
 def build_decode_chunk(cfg: ArchConfig, *, chunk: int, eos_id: int,
                        rules: Optional[ShardingRules] = None,
                        decode_fn: Optional[Callable] = None,
-                       jit: bool = True):
+                       jit: bool = True,
+                       paged: Optional[PagedLayout] = None):
     """Jitted multi-token decode tick: one host round-trip per `chunk`.
 
-    fn(params, state, cache) -> (state, cache, emitted, iters) where
-    `emitted` is (n_slots, chunk) int32 (NO_TOKEN for idle cells) and
+    Contiguous: fn(params, state, cache) -> (state, cache, emitted,
+    iters).  Paged: fn(params, state, cache, bstate) -> (state, cache,
+    bstate, emitted, iters, stalls) — each loop iteration first grows
+    block chains on device (`paging.grow_for_decode`), then decodes.
+    `emitted` is (n_slots, chunk) int32 (NO_TOKEN for idle cells),
     `iters` counts executed loop iterations (early exit when every slot
-    retires).  The cache is donated: the engine decodes in place.
+    retires) and `stalls` counts slots force-retired because the block
+    pool ran dry (zero under the engine's admission-time reservation).
+    The cache (and block state) is donated: the engine decodes in place.
     """
     decode = decode_fn or build_decode_step(cfg, rules)
 
-    def chunk_fn(params, state: DecodeState, cache):
+    def advance(params, st: DecodeState, cache, active, i, emitted):
+        """One decode step over every row + retirement bookkeeping."""
+        pos0 = cache["pos"]
+        logits, new_cache = decode(params, st.tokens, cache)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # a retired slot keeps its last token and frozen cache rows /
+        # pages: it can never perturb an active one
+        tok = jnp.where(active, nxt, st.tokens)
+        n_out = st.n_out + active.astype(jnp.int32)
+        if paged is None:
+            cache = jax.tree_util.tree_map(
+                lambda a, b: _merge_rows(a, b, active), new_cache, cache)
+        else:
+            # pages are disjoint per chain: an inactive row's write is
+            # either dropped (released chain) or rewrites its own cell
+            # with the identical value — only per-row leaves need merge
+            cache = dict(new_cache,
+                         pos=jnp.where(active, new_cache["pos"], pos0))
+        emitted = emitted.at[:, i].set(jnp.where(active, tok, NO_TOKEN))
+        retire = active & ((tok == eos_id) | (n_out >= st.max_new))
+        return DecodeState(tok, n_out, st.max_new, active & ~retire), \
+            cache, emitted
+
+    if paged is None:
+        def chunk_fn(params, state: DecodeState, cache):
+            n = state.tokens.shape[0]
+            emitted0 = jnp.full((n, chunk), NO_TOKEN, jnp.int32)
+
+            def cond(carry):
+                i, st, _, _ = carry
+                return (i < chunk) & jnp.any(st.active)
+
+            def body(carry):
+                i, st, cache, emitted = carry
+                st, cache, emitted = advance(params, st, cache, st.active,
+                                             i, emitted)
+                return i + jnp.int32(1), st, cache, emitted
+
+            iters, state, cache, emitted = jax.lax.while_loop(
+                cond, body, (jnp.int32(0), state, cache, emitted0))
+            return state, cache, emitted, iters
+
+        if not jit:    # the cluster supervisor jits with explicit shardings
+            return chunk_fn
+        return jax.jit(chunk_fn, donate_argnums=(2,))
+
+    def chunk_fn_paged(params, state: DecodeState, cache, bstate):
         n = state.tokens.shape[0]
         emitted0 = jnp.full((n, chunk), NO_TOKEN, jnp.int32)
 
         def cond(carry):
-            i, st, _, _ = carry
+            i, st, _, _, _, _ = carry
             return (i < chunk) & jnp.any(st.active)
 
         def body(carry):
-            i, st, cache, emitted = carry
-            logits, new_cache = decode(params, st.tokens, cache)
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            # a retired slot keeps its last token and frozen cache rows:
-            # it can never perturb an active one
-            tok = jnp.where(st.active, nxt, st.tokens)
-            n_out = st.n_out + st.active.astype(jnp.int32)
-            cache = jax.tree_util.tree_map(
-                lambda a, b: _merge_rows(a, b, st.active), new_cache, cache)
-            emitted = emitted.at[:, i].set(
-                jnp.where(st.active, tok, NO_TOKEN))
-            retire = st.active & ((tok == eos_id) | (n_out >= st.max_new))
-            st = DecodeState(tok, n_out, st.max_new, st.active & ~retire)
-            return i + jnp.int32(1), st, cache, emitted
+            i, st, cache, bstate, emitted, stalls = carry
+            # rent one block per slot crossing a block boundary — the
+            # supervisor action happens on device, no host round-trip
+            bstate, tables, stalled = paging.grow_for_decode(
+                bstate, cache["block_tables"], cache["pos"], st.active,
+                block_size=paged.block_size)
+            active = st.active & ~stalled
+            stalls = stalls + jnp.sum(stalled).astype(jnp.int32)
+            cache = dict(cache, block_tables=tables)
+            st, cache, emitted = advance(params, st, cache, active, i,
+                                         emitted)
+            return i + jnp.int32(1), st, cache, bstate, emitted, stalls
 
-        iters, state, cache, emitted = jax.lax.while_loop(
-            cond, body, (jnp.int32(0), state, cache, emitted0))
-        return state, cache, emitted, iters
+        iters, state, cache, bstate, emitted, stalls = jax.lax.while_loop(
+            cond, body,
+            (jnp.int32(0), state, cache, bstate, emitted0, jnp.int32(0)))
+        return state, cache, bstate, emitted, iters, stalls
 
-    if not jit:        # the cluster supervisor jits with explicit shardings
-        return chunk_fn
-    return jax.jit(chunk_fn, donate_argnums=(2,))
+    if not jit:
+        return chunk_fn_paged
+    return jax.jit(chunk_fn_paged, donate_argnums=(2, 3))
 
 
 def build_admit_step(cfg: ArchConfig, max_seq: int,
@@ -151,21 +221,14 @@ def build_admit_step(cfg: ArchConfig, max_seq: int,
 
     Rows whose slot is out of range (the G-padding rows) are dropped by
     the scatter (`mode="drop"`), so the call compiles once per Sp bucket.
+    A ``max_new`` of 1 admits inactive: the prefill argmax already is the
+    whole budget, so the slot retires without a decode step.
     """
 
     def admit_fn(params, tokens, lengths, max_new, slots, state, cache,
                  first):
-        g = tokens.shape[0]
-        batch = {"tokens": tokens}
-        if cfg.frontend == "vision":
-            batch["vision_embeds"] = jnp.zeros(
-                (g, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.float32)
-        if cfg.family == "encdec":
-            batch["enc_embeds"] = jnp.zeros(
-                (g, tokens.shape[1], cfg.frontend_dim), jnp.float32)
-        with use_rules(rules):
-            logits, cache_g = model_lib.prefill(params, batch, cfg, max_seq,
-                                                lengths=lengths)
+        logits, cache_g = _group_prefill(params, tokens, lengths, cfg,
+                                         max_seq, rules)
         ftok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
         def put(big, small):
@@ -174,15 +237,82 @@ def build_admit_step(cfg: ArchConfig, max_seq: int,
             return big.at[:, slots].set(
                 small.astype(big.dtype), mode="drop")
         cache = jax.tree_util.tree_map(put, cache, cache_g)
-        state = DecodeState(
-            tokens=state.tokens.at[slots].set(ftok, mode="drop"),
-            n_out=state.n_out.at[slots].set(1, mode="drop"),
-            max_new=state.max_new.at[slots].set(max_new, mode="drop"),
-            active=state.active.at[slots].set(True, mode="drop"))
+        state = _admit_state(state, slots, ftok, max_new)
         first = first.at[slots].set(ftok, mode="drop")
         return state, cache, first
 
     return jax.jit(admit_fn, donate_argnums=(6,))
+
+
+def _group_prefill(params, tokens, lengths, cfg, span, rules):
+    """The shared packed-prefill call (span = group cache length)."""
+    g = tokens.shape[0]
+    batch = {"tokens": tokens}
+    if cfg.frontend == "vision":
+        batch["vision_embeds"] = jnp.zeros(
+            (g, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.float32)
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jnp.zeros(
+            (g, tokens.shape[1], cfg.frontend_dim), jnp.float32)
+    with use_rules(rules):
+        return model_lib.prefill(params, batch, cfg, span, lengths=lengths)
+
+
+def _admit_state(state: DecodeState, slots, ftok, max_new) -> DecodeState:
+    return DecodeState(
+        tokens=state.tokens.at[slots].set(ftok, mode="drop"),
+        n_out=state.n_out.at[slots].set(1, mode="drop"),
+        max_new=state.max_new.at[slots].set(max_new, mode="drop"),
+        # budget 1 is already spent by the prefill argmax
+        active=state.active.at[slots].set(max_new > 1, mode="drop"))
+
+
+def build_admit_step_paged(cfg: ArchConfig, max_seq: int,
+                           layout: PagedLayout,
+                           rules: Optional[ShardingRules] = None):
+    """Paged packed admission: prefill the group over its (block-rounded)
+    span, then scatter K/V *blocks* into host-rented pages.
+
+    fn(params, tokens (G,Sp), lengths, max_new, slots (G,),
+       gtables (G,NB), wtargets (G,nb_span), state, cache, bstate, first)
+    -> (state, cache, bstate, first).
+
+    ``gtables`` rows are the full chains committed to the slots' block
+    tables; ``wtargets`` names the physical block each span-block of the
+    group prefill is stored into — shared prefix blocks carry the
+    out-of-range sentinel (already stored by an earlier chain; the
+    scatter drops them).  ``paging.admit_chains`` rents the written
+    blocks and takes one reference per chain entry.
+    """
+    bs = layout.block_size
+
+    def admit_fn(params, tokens, lengths, max_new, slots, gtables,
+                 wtargets, state, cache, bstate, first):
+        g = tokens.shape[0]
+        span_total = tokens.shape[1] + \
+            (cfg.n_frontend_tokens if cfg.frontend == "vision" else 0)
+        logits, cache_g = _group_prefill(params, tokens, lengths, cfg,
+                                         span_total, rules)
+        ftok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        nb_span = span_total // bs
+        wflat = wtargets.reshape(g * nb_span)
+        for name in ("k", "v"):
+            n_layers = cache_g[name].shape[0]
+            blocks = cache_g[name].reshape(
+                n_layers, g * nb_span, bs, *cache_g[name].shape[3:])
+            cache[name] = cache[name].at[:, wflat].set(
+                blocks.astype(cache[name].dtype), mode="drop")
+        cache = dict(
+            cache,
+            pos=cache["pos"].at[slots].set(cache_g["pos"], mode="drop"),
+            block_tables=cache["block_tables"].at[slots].set(
+                gtables, mode="drop"))
+        bstate = paging.admit_chains(bstate, gtables.reshape(-1), wflat)
+        state = _admit_state(state, slots, ftok, max_new)
+        first = first.at[slots].set(ftok, mode="drop")
+        return state, cache, bstate, first
+
+    return jax.jit(admit_fn, donate_argnums=(8, 9))
 
 
 # ---------------------------------------------------------------------------
@@ -199,81 +329,250 @@ class Request:
 
 
 def _pow2_bucket(n: int, cap: int) -> int:
-    """Next power of two ≥ n, clipped to cap — bounds recompiles."""
+    """Next power of two ≥ n, clamped to cap — bounds recompiles.
+
+    Over-cap lengths clamp to `cap` (admission rejects them before any
+    compile); the pre-fix behavior returned raw `n`, which compiled a
+    fresh prefill for every distinct over-cap prompt length.
+    """
     b = 1
     while b < n:
         b <<= 1
-    return min(b, cap) if n <= cap else n
+    return min(b, cap)
+
+
+@dataclasses.dataclass
+class _ChainPlan:
+    """Host-side admission plan for one request's block chain."""
+
+    chain: list            # block ids covering the prompt (shared + new)
+    new_blocks: list       # subset actually stored by this admission
+    n_shared: int
+    worst_total: int       # §5.1 reservation: blocks the chain may reach
 
 
 class ServingEngine:
     """Batched greedy decoding with rent/return slot semantics.
 
     The host owns the pool ledger and the queue; everything per-tick —
-    argmax, EOS / max-new retirement, the active mask, cache advancement —
-    runs inside one jitted decode chunk with a donated cache.  The host
-    syncs once per chunk (and reads nothing at admission), which is what
-    turns sequential per-slot coordination into streaming throughput.
+    argmax, EOS / max-new retirement, the active mask, cache advancement,
+    and (paged) block-chain growth — runs inside one jitted decode chunk
+    with a donated cache.  The host syncs once per chunk (and reads
+    nothing at admission), which is what turns sequential per-slot
+    coordination into streaming throughput.
+
+    With ``paged=True`` the KV cache is a pool of ``n_blocks`` blocks of
+    ``block_size`` positions governed by the same rent/release discipline
+    (runtime/paging.py): admission rents exactly what the prompt needs
+    (sharing identical prefix blocks), reserves the worst-case decode
+    remainder so growth can't starve, and retirement returns the chain.
     """
 
     def __init__(self, params, cfg: ArchConfig, *, n_slots: int,
                  max_seq: int, eos_id: int = 1,
                  decode_fn: Optional[Callable] = None,
                  chunk: int = 8,
-                 rules: Optional[ShardingRules] = None):
+                 rules: Optional[ShardingRules] = None,
+                 paged: bool = False, block_size: int = 16,
+                 n_blocks: Optional[int] = None,
+                 prefix_sharing: bool = True):
         self.params, self.cfg = params, cfg
         self.max_seq, self.eos_id, self.chunk = max_seq, eos_id, chunk
         self.pool = CorePool(n_slots)
         self.active: dict[int, Request] = {}
+        self._offset = cfg.n_frontend_tokens if cfg.frontend == "vision" \
+            else 0
         dtype = jax.tree_util.tree_leaves(params)[0].dtype
-        self.cache = model_lib.init_cache(cfg, n_slots, max_seq, dtype=dtype)
+        self.layout: Optional[PagedLayout] = None
+        if paged:
+            if cfg.family not in model_lib.PAGED_FAMILIES:
+                raise ValueError(
+                    f"paged serving supports {model_lib.PAGED_FAMILIES}, "
+                    f"not {cfg.family!r}")
+            nb_full = -(-max_seq // block_size)
+            if n_blocks is None:       # capacity-equivalent default
+                n_blocks = n_slots * nb_full
+            self.layout = PagedLayout(block_size, n_blocks)
+        self.cache = model_lib.init_cache(cfg, n_slots, max_seq,
+                                          dtype=dtype, layout=self.layout)
         self.dstate = init_decode_state(n_slots)
         self._first = jnp.zeros((n_slots,), jnp.int32)
         self._need_first: set[int] = set()
         self._chunk_fn = build_decode_chunk(cfg, chunk=chunk, eos_id=eos_id,
-                                            rules=rules, decode_fn=decode_fn)
-        self._admit_fn = build_admit_step(cfg, max_seq, rules=rules)
+                                            rules=rules, decode_fn=decode_fn,
+                                            paged=self.layout)
+        if self.layout is None:
+            self._admit_fn = build_admit_step(cfg, max_seq, rules=rules)
+        else:
+            self._admit_fn = build_admit_step_paged(cfg, max_seq,
+                                                    self.layout, rules=rules)
+            self.bstate = paging.init_blocks(n_blocks)
+            self._prefix_sharing = prefix_sharing
+            # host mirrors of the device block state (refreshed at every
+            # chunk sync — admission never blocks on the device)
+            self._ref_host = np.zeros((n_blocks,), np.int32)
+            self._tables_host = np.full(
+                (n_slots, self.layout.max_blocks(max_seq)), -1, np.int32)
+            self._prefix_map: dict = {}      # prefix key -> block id
+            self._block_hash: dict = {}      # block id -> prefix key
+            self._plans: dict[int, _ChainPlan] = {}   # slot -> plan
         self._packed = cfg.family in PACKED_PREFILL_FAMILIES
+        self._finished_instant: list[Request] = []
         # accounting: host round-trips vs the one-sync-per-slot-per-tick
         # baseline an un-refactored engine would have paid
         self.host_syncs = 0
         self.baseline_syncs = 0
         self.device_ticks = 0
         self.decode_tokens = 0
+        self.stalls = 0
+        self.shared_block_hits = 0
+        self.kv_bytes_allocated = 0
+        self.tokens_finished = 0
+        # per-slot / per-block KV footprint (all cache leaves that scale
+        # with the slot or block count; `pos`/tables bookkeeping excluded)
+        if self.layout is None:
+            self._slot_bytes = sum(
+                leaf.nbytes // n_slots for key, leaf in self.cache.items()
+                if key != "pos")
+        else:
+            self._block_bytes = sum(
+                self.cache[k].nbytes // n_blocks for k in ("k", "v"))
 
     # -- admission ---------------------------------------------------------
     def admit(self, req: Request) -> bool:
         return self.admit_many([req]) == 1
 
     def admit_many(self, requests: list[Request]) -> int:
-        """Rent slots and prefill as many of `requests` as the pool allows.
+        """Rent slots (and, paged, blocks) and prefill as many of
+        `requests` as the pools allow; returns how many were consumed
+        from the front of the list.
 
         Packed admission: one batched padded prefill per call (causal
         families); recurrent families fall back to one exact-length
         prefill per request through the same jitted path.
+
+        Edge cases (all host-side, before any compile):
+        * a prompt longer than ``max_seq`` raises ``ValueError``;
+        * a prompt of exactly ``max_seq`` is admitted with an effective
+          budget of 1 (the prefill argmax) — no decode write can land
+          past the cache;
+        * ``max_new <= 0`` completes immediately with empty output.
         """
-        granted: list[Request] = []
+        # validate the whole batch before renting anything: a rejection
+        # must never leave earlier requests granted-but-unprefilled
         for req in requests:
+            if len(req.prompt) + self._offset > self.max_seq:
+                raise ValueError(
+                    f"request {req.rid}: prompt length {len(req.prompt)}"
+                    f"{f' (+{self._offset} frontend tokens)' if self._offset else ''}"
+                    f" does not fit max_seq={self.max_seq}; reject or "
+                    f"truncate upstream")
+        granted: list[Request] = []
+        consumed = 0
+        for req in requests:
+            plen = len(req.prompt) + self._offset
+            if req.max_new <= 0:
+                req.out = []
+                self._finished_instant.append(req)
+                consumed += 1
+                continue
             slot = self.pool.rent()
             if slot is None:
                 break                     # pool exhausted: queue upstream
+            if self.layout is not None:
+                plan = self._plan_chain(req, plen)
+                if plan is None:          # block pool exhausted
+                    self.pool.release(slot)
+                    break
+                self._commit_plan(slot, plan, req)
             req.slot = slot
             granted.append(req)
+            consumed += 1
         if not granted:
-            return 0
+            return consumed
         groups = [granted] if self._packed else [[r] for r in granted]
         for group in groups:
             self._prefill_group(group)
         for req in granted:
             self.active[req.slot] = req
             self._need_first.add(req.slot)
-        return len(granted)
+        return consumed
+
+    def _max_new_eff(self, req: Request, plen: int) -> int:
+        """Budget clamp: emitted tokens 2..max_new write at positions
+        plen..plen+max_new-2, which must stay inside max_seq."""
+        return min(req.max_new, self.max_seq - plen + 1)
+
+    def _plan_chain(self, req: Request, plen: int) -> Optional[_ChainPlan]:
+        """Pick the request's blocks from the host mirror: reuse shared
+        prompt-prefix blocks, rent new ones, and check the §5.1
+        reservation (worst-case chain) against the unreserved pool."""
+        lo = self.layout
+        bs = lo.block_size
+        n_full = plen // bs
+        shared: list[int] = []
+        if self._prefix_sharing:
+            for j in range(n_full):
+                blk = self._prefix_map.get(self._prefix_key(req.prompt, j))
+                if blk is None:
+                    break
+                shared.append(blk)
+        total_now = -(-plen // bs)
+        worst_total = -(-(plen + self._max_new_eff(req, plen) - 1) // bs)
+        used = int(np.sum(self._ref_host > 0))
+        reserve = sum(
+            max(0, p.worst_total - int(np.sum(self._tables_host[s] >= 0)))
+            for s, p in self._plans.items())
+        budget = lo.n_blocks - used - reserve
+        if worst_total - len(shared) > budget:
+            return None
+        free_ids = np.flatnonzero(self._ref_host == 0)
+        new_blocks = [int(b) for b in free_ids[:total_now - len(shared)]]
+        return _ChainPlan(chain=shared + new_blocks, new_blocks=new_blocks,
+                          n_shared=len(shared), worst_total=worst_total)
+
+    def _commit_plan(self, slot: int, plan: _ChainPlan,
+                     req: Request) -> None:
+        """Host-mirror bookkeeping for a granted chain.  Prefix keys are
+        registered here, *before* the group prefill, so later requests
+        in the same admission round already share them (the group
+        scatter stores each block exactly once)."""
+        self._plans[slot] = plan
+        self.shared_block_hits += plan.n_shared
+        for b in plan.chain:
+            self._ref_host[b] += 1
+        row = self._tables_host[slot]
+        row[:] = -1
+        row[:len(plan.chain)] = plan.chain
+        self._register_prefixes(req, plan)
+
+    def _prefix_key(self, prompt: np.ndarray, j: int):
+        """Key for chain block j: its content is a pure function of the
+        token prefix it covers (frontend stub tokens are constant)."""
+        end = (j + 1) * self.layout.block_size - self._offset
+        return (j, np.asarray(prompt[:max(0, end)], np.int32).tobytes())
+
+    def _register_prefixes(self, req: Request, plan: _ChainPlan) -> None:
+        if not self._prefix_sharing:
+            return
+        plen = len(req.prompt) + self._offset
+        n_full = plen // self.layout.block_size
+        for j in range(plan.n_shared, n_full):
+            key = self._prefix_key(req.prompt, j)
+            blk = plan.chain[j]
+            self._prefix_map[key] = blk
+            self._block_hash[blk] = key
 
     def _prefill_group(self, group: list[Request]) -> None:
         g = len(group)
         n = self.pool.n
         maxlen = max(len(r.prompt) for r in group)
         span = _pow2_bucket(maxlen, self.max_seq) if self._packed else maxlen
+        if self.layout is not None:
+            # the paged scatter stores whole blocks: pad the span so the
+            # group cache divides into block_size rows
+            bs = self.layout.block_size
+            span += (-(span + self._offset)) % bs
         # pad the group to a pow2 row count: compiles stay bounded to
         # log2(n_slots) variants per span bucket, while a single trickle
         # admission doesn't pay a full n_slots-row prefill
@@ -285,27 +584,61 @@ class ServingEngine:
         for i, r in enumerate(group):
             tokens[i, :len(r.prompt)] = r.prompt
             lengths[i] = len(r.prompt)
-            max_new[i] = r.max_new
+            max_new[i] = self._max_new_eff(r, len(r.prompt) + self._offset)
             slots[i] = r.slot
-        self.dstate, self.cache, self._first = self._admit_fn(
-            self.params, jnp.asarray(tokens), jnp.asarray(lengths),
-            jnp.asarray(max_new), jnp.asarray(slots), self.dstate,
-            self.cache, self._first)
+        if self.layout is None:
+            self.dstate, self.cache, self._first = self._admit_fn(
+                self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+                jnp.asarray(max_new), jnp.asarray(slots), self.dstate,
+                self.cache, self._first)
+        else:
+            lo = self.layout
+            nb_span = (span + self._offset) // lo.block_size
+            gtables = np.full((gpad, lo.max_blocks(self.max_seq)), -1,
+                              np.int32)
+            wtargets = np.full((gpad, nb_span), lo.n_blocks, np.int32)
+            for i, r in enumerate(group):
+                plan = self._plans[r.slot]
+                gtables[i, :len(plan.chain)] = plan.chain
+                for j, blk in enumerate(plan.chain):
+                    if j >= plan.n_shared:
+                        wtargets[i, j] = blk
+            (self.dstate, self.cache, self.bstate,
+             self._first) = self._admit_fn(
+                self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+                jnp.asarray(max_new), jnp.asarray(slots),
+                jnp.asarray(gtables), jnp.asarray(wtargets), self.dstate,
+                self.cache, self.bstate, self._first)
         # un-refactored baseline: one argmax sync per admitted request
         self.baseline_syncs += g
 
     # -- one decode chunk over all active slots -----------------------------
     def step(self) -> list[Request]:
         """Advance every active slot up to `chunk` tokens; one host sync."""
+        finished: list[Request] = []
+        if self._finished_instant:
+            finished, self._finished_instant = self._finished_instant, []
         if not self.active:
-            return []
-        self.dstate, self.cache, emitted, iters = self._chunk_fn(
-            self.params, self.dstate, self.cache)
-        em, active_mask, first, iters = jax.device_get(
-            (emitted, self.dstate.active, self._first, iters))
+            return finished
+        if self.layout is None:
+            self.dstate, self.cache, emitted, iters = self._chunk_fn(
+                self.params, self.dstate, self.cache)
+            em, active_mask, first, iters = jax.device_get(
+                (emitted, self.dstate.active, self._first, iters))
+        else:
+            (self.dstate, self.cache, self.bstate, emitted, iters,
+             stalls) = self._chunk_fn(self.params, self.dstate, self.cache,
+                                      self.bstate)
+            (em, active_mask, first, iters, stalls, tables_d,
+             ref_d) = jax.device_get(
+                (emitted, self.dstate.active, self._first, iters, stalls,
+                 self.cache["block_tables"], self.bstate.refcount))
+            # refresh the host mirrors with the chunk's on-device growth
+            self._tables_host = np.asarray(tables_d).copy()
+            self._ref_host = np.asarray(ref_d).copy()
+            self.stalls += int(stalls)
         self.host_syncs += 1
         self.device_ticks += int(iters)
-        finished = []
         for slot, req in list(self.active.items()):
             if slot in self._need_first:
                 req.out.append(int(first[slot]))
@@ -318,8 +651,36 @@ class ServingEngine:
             if not active_mask[slot]:
                 finished.append(req)
                 del self.active[slot]
-                self.pool.release(slot)   # core back to the pool (§4.3)
+                self._retire_slot(slot, req)
         return finished
+
+    def _retire_slot(self, slot: int, req: Request) -> None:
+        """Return the core — and, paged, the block chain — to the pool
+        (§4.3 terminate)."""
+        self.tokens_finished += len(req.prompt) + len(req.out)
+        if self.layout is None:
+            self.kv_bytes_allocated += self._slot_bytes
+            self.pool.release(slot)
+            return
+        plan = self._plans.pop(slot)
+        chain = self._tables_host[slot]
+        chain = chain[chain >= 0]
+        self.kv_bytes_allocated += \
+            (len(chain) - plan.n_shared) * self._block_bytes
+        # device: drop one reference per chain block, free refcount-zero
+        # blocks, clear the table row
+        self.bstate, tables = paging.release_chain(
+            self.bstate, self.cache["block_tables"], slot)
+        self.cache = dict(self.cache, block_tables=tables)
+        # host mirror + prefix map upkeep
+        for b in chain:
+            self._ref_host[b] -= 1
+            if self._ref_host[b] == 0:
+                key = self._block_hash.pop(int(b), None)
+                if key is not None and self._prefix_map.get(key) == int(b):
+                    del self._prefix_map[key]
+        self._tables_host[slot] = -1
+        self.pool.release(slot)
 
     def run_to_completion(self, requests: list[Request], max_ticks=10_000):
         """Continuous batching: admit whenever slots free up, decode in
@@ -327,20 +688,38 @@ class ServingEngine:
         pending = list(requests)
         done = []
         start_ticks = self.device_ticks
-        while (pending or self.active) and \
+        while (pending or self.active or self._finished_instant) and \
                 self.device_ticks - start_ticks < max_ticks:
             n = self.admit_many(pending)
             del pending[:n]
-            if not self.active:
-                if pending:    # no slots rentable and none draining
+            if not self.active and not self._finished_instant:
+                if pending:    # no capacity rentable and none draining
                     raise RuntimeError(
                         f"{len(pending)} requests stuck: pool has no "
-                        f"rentable slot and no active request to drain")
+                        f"rentable slot/blocks and no active request to "
+                        f"drain")
                 break
             done += self.step()
         return done, self.device_ticks - start_ticks
 
     # -- accounting ---------------------------------------------------------
+    def reset_stats(self) -> None:
+        """Zero the accounting counters (pool/cache state untouched).
+        Benches warm the jit caches on the engine they will time — each
+        engine owns its own jitted closures, so warming a sibling engine
+        warms nothing — then reset before the measured run."""
+        self.host_syncs = self.baseline_syncs = 0
+        self.device_ticks = self.decode_tokens = 0
+        self.stalls = 0
+        self.shared_block_hits = 0
+        self.kv_bytes_allocated = 0
+        self.tokens_finished = 0
+        if self.layout is not None:
+            # the block high-water mark restarts from what is in use now
+            pool = self.bstate.pool
+            self.bstate = self.bstate._replace(
+                pool=pool._replace(peak_used=pool_lib.used(pool)))
+
     def sync_stats(self) -> dict:
         """Host-sync economy vs a per-slot-per-tick engine (same run)."""
         tokens = max(1, self.decode_tokens)
@@ -354,3 +733,28 @@ class ServingEngine:
                 100.0 * self.baseline_syncs / tokens,
             "sync_reduction_x": self.baseline_syncs / max(1, self.host_syncs),
         }
+
+    def kv_stats(self) -> dict:
+        """KV-cache economics over the *finished* requests: bytes the
+        engine actually allocated for them per token they produced.
+        Contiguous slots pay `max_seq` rows per admission regardless of
+        the sequence; paged chains pay per rented (non-shared) block."""
+        out = {
+            "layout": "paged" if self.layout is not None else "contiguous",
+            "kv_bytes_allocated": int(self.kv_bytes_allocated),
+            "tokens_finished": int(self.tokens_finished),
+            "kv_bytes_per_token":
+                self.kv_bytes_allocated / max(1, self.tokens_finished),
+        }
+        if self.layout is not None:
+            out.update(
+                block_size=self.layout.block_size,
+                n_blocks=self.layout.n_blocks,
+                shared_block_hits=int(self.shared_block_hits),
+                stalls=int(self.stalls),
+                peak_blocks=int(self.bstate.pool.peak_used),
+                blocks_in_use=int(np.sum(self._ref_host > 0)),
+            )
+        else:
+            out["slot_bytes"] = int(self._slot_bytes)
+        return out

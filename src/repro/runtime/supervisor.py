@@ -79,8 +79,8 @@ class ClusterSupervisor:
                                         dtype=self.dtype)
         return {k: self.rules.spec(ax[k], batch[k].shape) for k in batch}, batch
 
-    def _cache_specs(self, cache):
-        ax = inputs_lib.cache_axes(self.cfg)
+    def _cache_specs(self, cache, paged: bool = False):
+        ax = inputs_lib.cache_axes(self.cfg, paged=paged)
         return jax.tree_util.tree_map(
             lambda leaf_ax, leaf: self.rules.spec(leaf_ax, leaf.shape),
             ax, {k: cache[k] for k in ax},
@@ -147,32 +147,55 @@ class ClusterSupervisor:
             donate_argnums=(2,),   # the cache is updated in place
             rules=self.rules, qt_graph=self.qt_graph(), notes=self._notes())
 
-    def plan_serve(self, *, chunk: int = 8, eos_id: int = 1) -> Plan:
+    def plan_serve(self, *, chunk: int = 8, eos_id: int = 1,
+                   paged: Optional[model_lib.PagedLayout] = None) -> Plan:
         """The device-resident continuous-batching tick (serve_lib): one
         jitted chunk advances every slot up to `chunk` tokens with the
         supervisor state (active mask, budgets) resident on device.  The
-        cache is donated — decode streams in place."""
+        cache is donated — decode streams in place.
+
+        With ``paged`` given, the tick also carries the donated block
+        pool state and grows block chains on device: the step signature
+        becomes (params, state, cache, bstate) and the cache holds pages
+        plus per-slot block tables (see `_cache_specs(paged=True)`)."""
         cfg, shape = self.cfg, self.shape
         n_slots = shape.global_batch
         step = serve_lib.build_decode_chunk(
-            cfg, chunk=chunk, eos_id=eos_id, rules=self.rules, jit=False)
+            cfg, chunk=chunk, eos_id=eos_id, rules=self.rules, jit=False,
+            paged=paged)
         params = model_lib.abstract(cfg, self.dtype)
         pspec = train_lib.state_specs(cfg, self.rules)["params"]
         state = serve_lib.abstract_decode_state(n_slots)
         slot_spec = self.rules.spec(("cache_batch",), (n_slots,))
         sspec = serve_lib.DecodeState(*([slot_spec] * len(state)))
         cache = model_lib.init_cache(cfg, n_slots, shape.seq_len,
-                                     dtype=self.dtype, abstract_only=True)
-        cspec = self._cache_specs(cache)
+                                     dtype=self.dtype, abstract_only=True,
+                                     layout=paged)
+        cspec = self._cache_specs(cache, paged=paged is not None)
         emitted_spec = self.rules.spec(("cache_batch", None),
                                        (n_slots, chunk))
+        abstract_args = [params, state, cache]
+        in_sh = [self._sh(pspec), self._sh(sspec), self._sh(cspec)]
+        out_sh = [self._sh(sspec), self._sh(cspec)]
+        donate = (2,)                   # decode streams the cache in place
+        if paged is not None:
+            from repro.runtime import paging
+            bstate = paging.abstract_blocks(paged.n_blocks)
+            # block pool state is supervisor bookkeeping: replicated
+            bspec = jax.tree_util.tree_map(lambda _: P(), bstate)
+            abstract_args.append(bstate)
+            in_sh.append(self._sh(bspec))
+            out_sh.append(self._sh(bspec))
+            donate = (2, 3)             # ... and the block pool with it
+        out_sh += [self._sh(emitted_spec), self._sh(P())]
+        if paged is not None:
+            out_sh.append(self._sh(P()))     # stall counter
         return Plan(
             name=f"{cfg.name}/{shape.name}", kind="serve", step_fn=step,
-            abstract_args=(params, state, cache),
-            in_shardings=(self._sh(pspec), self._sh(sspec), self._sh(cspec)),
-            out_shardings=(self._sh(sspec), self._sh(cspec),
-                           self._sh(emitted_spec), self._sh(P())),
-            donate_argnums=(2,),   # decode streams the cache in place
+            abstract_args=tuple(abstract_args),
+            in_shardings=tuple(in_sh),
+            out_shardings=tuple(out_sh),
+            donate_argnums=donate,
             rules=self.rules, qt_graph=self.qt_graph(), notes=self._notes())
 
     # -- compile-time metadata ------------------------------------------------

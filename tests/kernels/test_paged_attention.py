@@ -1,0 +1,102 @@
+"""Paged-attention kernel vs its oracles (interpret mode).
+
+Three-way agreement: the Pallas kernel (scalar-prefetched block tables,
+online softmax) == the pure-jnp ref.py gather == the model path
+(`models/attention.paged_decode_attention`, which itself must match
+contiguous `decode_attention` bit-for-bit on the same chains).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.paged_attention import paged_attention, paged_attention_ref
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+def _chains(rng, b, n_pages, nb, bs, lengths):
+    """Random disjoint chains covering each row's length."""
+    tables = np.full((b, nb), -1, np.int32)
+    perm = rng.permutation(n_pages)
+    i = 0
+    for r in range(b):
+        for j in range(-(-int(lengths[r]) // bs)):
+            tables[r, j] = perm[i]
+            i += 1
+    return jnp.asarray(tables)
+
+
+@pytest.mark.parametrize("b,h,hkv,d,n_pages,bs,nb", [
+    (1, 2, 2, 32, 8, 8, 4),       # MHA
+    (3, 4, 2, 32, 16, 8, 4),      # GQA 2:1
+    (2, 8, 2, 64, 12, 16, 3),     # GQA 4:1
+    (2, 2, 1, 64, 10, 8, 4),      # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_kernel_vs_ref(b, h, hkv, d, n_pages, bs, nb, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(b * h + d), 3)
+    q = _rand(k1, (b, h, d), dtype)
+    kp = _rand(k2, (n_pages, bs, hkv, d), dtype)
+    vp = _rand(k3, (n_pages, bs, hkv, d), dtype)
+    rng = np.random.default_rng(b + nb)
+    lengths = jnp.asarray(rng.integers(1, nb * bs + 1, size=b), jnp.int32)
+    tables = _chains(rng, b, n_pages, nb, bs, lengths)
+    got = paged_attention(q, kp, vp, tables, lengths)
+    want = paged_attention_ref(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.array(got, np.float32),
+                               np.array(want, np.float32), **_tol(dtype))
+
+
+def test_paged_matches_contiguous_decode_attention():
+    """Gathering the chain == attending the contiguous cache: the ref
+    (and the kernel) must agree with `models/attention.decode_attention`
+    on the same logical sequence."""
+    from repro.models import attention as A
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    b, h, hkv, d, bs, nb = 3, 4, 2, 32, 8, 4
+    max_seq = bs * nb
+    q = jax.random.normal(k1, (b, 1, h, d), jnp.float32)
+    k_cont = jax.random.normal(k2, (b, max_seq, hkv, d), jnp.float32)
+    v_cont = jax.random.normal(k3, (b, max_seq, hkv, d), jnp.float32)
+    lengths = jnp.asarray([5, 17, 32], jnp.int32)
+    # scatter the contiguous rows into shuffled pages
+    rng = np.random.default_rng(7)
+    tables = _chains(rng, b, b * nb, nb, bs, [max_seq] * b)
+    kp = jnp.zeros((b * nb, bs, hkv, d), jnp.float32)
+    vp = jnp.zeros((b * nb, bs, hkv, d), jnp.float32)
+    for r in range(b):
+        for j in range(nb):
+            blk = int(tables[r, j])
+            kp = kp.at[blk].set(k_cont[r, j * bs:(j + 1) * bs])
+            vp = vp.at[blk].set(v_cont[r, j * bs:(j + 1) * bs])
+    want = A.decode_attention(q, k_cont, v_cont, lengths)
+    # model path (pure jnp): bit-exact vs contiguous
+    got_model = A.paged_decode_attention(q, kp, vp, tables, lengths,
+                                         use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(got_model), np.asarray(want))
+    # kernel path (interpret): allclose (own accumulation schedule)
+    got_kernel = A.paged_decode_attention(q, kp, vp, tables, lengths,
+                                          use_kernel=True)
+    np.testing.assert_allclose(np.asarray(got_kernel), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_empty_rows_are_finite():
+    """Rows with length 0 (unadmitted slots riding in the batch) must
+    produce finite output, never NaN (the engine discards them)."""
+    q = jnp.ones((2, 4, 32), jnp.float32)
+    kp = jnp.zeros((4, 8, 2, 32), jnp.float32)
+    vp = jnp.zeros((4, 8, 2, 32), jnp.float32)
+    tables = jnp.full((2, 2), -1, jnp.int32)
+    lengths = jnp.asarray([0, 0], jnp.int32)
+    out = paged_attention(q, kp, vp, tables, lengths)
+    assert bool(jnp.all(jnp.isfinite(out)))

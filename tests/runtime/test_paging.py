@@ -1,0 +1,274 @@
+"""Paged KV cache: pool generalization, block transitions, and the
+token-exactness of paged serving vs the contiguous cache.
+
+The block pool is the paper's rent/release discipline (§4.1.3, §4.3)
+applied to KV blocks: the same pure `runtime/pool` transitions, one
+level down from slots.  The contract under test:
+
+* `rent_many`/`release_many` == a loop of single-unit transitions;
+* chains grow exactly at block boundaries, on device, and release
+  returns refcount-zero blocks only;
+* paged decode is bit-exact vs the contiguous cache, at the model level
+  and through the full continuous-batching engine (including shared
+  prompt prefixes and admission deferral under block pressure).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models import model
+from repro.runtime import paging
+from repro.runtime import pool as pool_lib
+from repro.runtime.serve import Request, ServingEngine
+
+
+def _cfg(**kw):
+    kw = {"n_layers": 1, "d_model": 64, "vocab": 128, **kw}
+    return reduced(get_arch("granite-3-2b"), **kw)
+
+
+def _params(cfg):
+    return model.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# pool generalization: vectorized transitions over arbitrary counts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,pattern", [
+    (5, [True] * 3),
+    (7, [True, False, True, True, False, True]),
+    (3, [True] * 6),               # over-ask: pool runs dry mid-grant
+])
+def test_rent_many_matches_sequential_rents(n, pattern):
+    state_v = pool_lib.init_pool(n)
+    state_s = pool_lib.init_pool(n)
+    state_v, units = pool_lib.rent_many(state_v, jnp.asarray(pattern))
+    got = [int(u) for u in units]
+    want = []
+    for need in pattern:
+        if not need:
+            want.append(-1)
+            continue
+        state_s, u = pool_lib.rent(state_s)
+        want.append(int(u))
+    assert got == want
+    for a, b in zip(state_v, state_s):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    pool_lib.check_invariants(state_v)
+
+
+def test_rent_many_skips_disabled_units():
+    state = pool_lib.disable(pool_lib.init_pool(4), 1)
+    state, units = pool_lib.rent_many(state, jnp.ones((4,), bool))
+    assert [int(u) for u in units] == [0, 2, 3, -1]
+
+
+def test_release_many_blocks_parents_with_live_children():
+    state = pool_lib.init_pool(4)
+    state, p = pool_lib.rent(state)
+    state, c = pool_lib.rent(state, parent=p)
+    # parent alone: blocked (live child not in the release set)
+    s2 = pool_lib.release_many(state, jnp.asarray([True, False, False,
+                                                   False]))
+    assert not bool(s2.free[int(p)])
+    # parent + child together: both released
+    s3 = pool_lib.release_many(state, jnp.asarray([True, True, False,
+                                                   False]))
+    assert bool(s3.free[int(p)]) and bool(s3.free[int(c)])
+    pool_lib.check_invariants(s3)
+
+
+def test_core_pool_rent_many_wrapper():
+    from repro.core.supervisor import CorePool
+    pool = CorePool(6)
+    assert pool.rent_many(4) == [0, 1, 2, 3]
+    assert pool.created_total == 4 and pool.used == 4
+    assert pool.rent_many(5) == [4, 5]    # grants what the pool has
+
+
+# ---------------------------------------------------------------------------
+# block-pool transitions
+# ---------------------------------------------------------------------------
+
+def test_grow_rents_exactly_at_block_boundary():
+    bs = 8
+    bstate = paging.init_blocks(6)
+    tables = paging.init_block_tables(2, 4)
+    # slot 0 owns one block (positions 0..7); slot 1 inactive
+    bstate = paging.admit_chains(bstate, jnp.asarray([0, -1]),
+                                 jnp.asarray([0]))
+    tables = tables.at[0, 0].set(0)
+    active = jnp.asarray([True, False])
+    # pos 7 still inside the block: no growth
+    b2, t2, stalled = paging.grow_for_decode(
+        bstate, tables, jnp.asarray([7, 0]), active, block_size=bs)
+    np.testing.assert_array_equal(np.asarray(t2), np.asarray(tables))
+    assert not bool(jnp.any(stalled))
+    # pos 8 crosses: slot 0 rents exactly one block, refcount 1
+    b3, t3, stalled = paging.grow_for_decode(
+        bstate, tables, jnp.asarray([8, 0]), active, block_size=bs)
+    assert int(t3[0, 1]) == 1 and int(t3[1, 0]) == -1
+    assert int(b3.refcount[1]) == 1 and not bool(b3.pool.free[1])
+    assert not bool(jnp.any(stalled))
+    paging.check_invariants(b3, t3)
+
+
+def test_grow_exhaustion_stalls_not_corrupts():
+    bstate = paging.init_blocks(1)
+    tables = paging.init_block_tables(1, 2)
+    bstate = paging.admit_chains(bstate, jnp.asarray([0]), jnp.asarray([0]))
+    tables = tables.at[0, 0].set(0)
+    b2, t2, stalled = paging.grow_for_decode(
+        bstate, tables, jnp.asarray([8]), jnp.asarray([True]), block_size=8)
+    assert bool(stalled[0])
+    assert int(t2[0, 1]) == -1            # chain unchanged: nothing granted
+
+
+def test_release_chain_respects_shared_refcounts():
+    bstate = paging.init_blocks(4)
+    tables = paging.init_block_tables(2, 2)
+    # chains: slot0 = [0, 1], slot1 = [0, 2]; block 0 shared (ref 2)
+    bstate = paging.admit_chains(bstate, jnp.asarray([0, 1, 0, 2]),
+                                 jnp.asarray([0, 1, 2]))
+    tables = jnp.asarray([[0, 1], [0, 2]], jnp.int32)
+    paging.check_invariants(bstate, tables)
+    bstate, tables = paging.release_chain(bstate, tables, 0)
+    assert [int(x) for x in bstate.refcount] == [1, 0, 1, 0]
+    free = np.asarray(bstate.pool.free)
+    assert not free[0] and free[1] and not free[2]   # shared block survives
+    bstate, tables = paging.release_chain(bstate, tables, 1)
+    assert int(paging.blocks_in_use(bstate)) == 0
+    paging.check_invariants(bstate, tables)
+
+
+# ---------------------------------------------------------------------------
+# model-level parity: one cache API, two layouts, identical tokens
+# ---------------------------------------------------------------------------
+
+def test_paged_prefill_decode_matches_contiguous():
+    cfg = _cfg(n_layers=2)
+    params = _params(cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (3, 7), 1, cfg.vocab)
+    lengths = jnp.asarray([7, 4, 6], jnp.int32)
+    batch = {"tokens": toks}
+    lc, cc = model.prefill(params, batch, cfg, 32, lengths=lengths)
+    layout = model.PagedLayout(block_size=8, n_blocks=16)
+    lp, pc = model.prefill(params, batch, cfg, 32, lengths=lengths,
+                           layout=layout)
+    np.testing.assert_array_equal(np.asarray(lc), np.asarray(lp))
+    tok = jnp.argmax(lc, -1).astype(jnp.int32)
+    for _ in range(12):    # crosses block boundaries at pos 8 and 16
+        lc, cc = model.decode_step(params, tok, cc, cfg)
+        lp, pc = model.decode_step(params, tok, pc, cfg)
+        np.testing.assert_array_equal(np.asarray(lc), np.asarray(lp))
+        tok = jnp.argmax(lc, -1).astype(jnp.int32)
+
+
+def test_paged_layout_rejects_recurrent_families():
+    cfg = reduced(get_arch("mamba2-780m"))
+    with pytest.raises(ValueError):
+        model.init_cache(cfg, 2, 32, layout=model.PagedLayout(8, 8))
+
+
+# ---------------------------------------------------------------------------
+# engine parity: full continuous batching, paged vs contiguous
+# ---------------------------------------------------------------------------
+
+def _requests(seed=0, n=8):
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(1, 100,
+                                    size=int(rng.integers(4, 12)))
+                    .astype(np.int32),
+                    max_new=int(rng.integers(4, 12))) for i in range(n)]
+
+
+def test_paged_engine_token_exact_vs_contiguous():
+    cfg = _cfg()
+    params = _params(cfg)
+    e_c = ServingEngine(params, cfg, n_slots=3, max_seq=48)
+    done_c, _ = e_c.run_to_completion(_requests())
+    e_p = ServingEngine(params, cfg, n_slots=3, max_seq=48, paged=True,
+                        block_size=8, n_blocks=12)
+    done_p, _ = e_p.run_to_completion(_requests())
+    assert {r.rid: r.out for r in done_c} == {r.rid: r.out for r in done_p}
+    assert e_p.stalls == 0
+    # every chain returned, invariants hold, KV strictly cheaper
+    assert e_p.pool.used == 0
+    assert int(paging.blocks_in_use(e_p.bstate)) == 0
+    paging.check_invariants(e_p.bstate, e_p.cache["block_tables"])
+    assert e_p.kv_stats()["kv_bytes_per_token"] < \
+        e_c.kv_stats()["kv_bytes_per_token"]
+
+
+def test_shared_prefix_blocks_are_rented_once():
+    cfg = _cfg()
+    params = _params(cfg)
+    base = np.arange(1, 17, dtype=np.int32)          # two full 8-blocks
+    reqs = [Request(0, base, max_new=6),
+            Request(1, base.copy(), max_new=6),
+            Request(2, np.concatenate([base, [77, 78]]).astype(np.int32),
+                    max_new=6)]
+    eng = ServingEngine(params, cfg, n_slots=4, max_seq=48, paged=True,
+                        block_size=8, n_blocks=16)
+    done, _ = eng.run_to_completion(reqs)
+    assert len(done) == 3
+    assert eng.shared_block_hits == 4       # 2 blocks × 2 sharing chains
+    # outputs must equal the unshared run
+    solo = ServingEngine(params, cfg, n_slots=4, max_seq=48, paged=True,
+                         block_size=8, n_blocks=16, prefix_sharing=False)
+    done_s, _ = solo.run_to_completion(
+        [Request(r.rid, r.prompt, max_new=6) for r in reqs])
+    assert {r.rid: r.out for r in done} == {r.rid: r.out for r in done_s}
+    assert solo.shared_block_hits == 0
+    paging.check_invariants(eng.bstate, eng.cache["block_tables"])
+
+
+def test_block_pressure_defers_admission():
+    """Two 2-block requests over a 3-block pool: the §5.1 reservation
+    serializes them instead of letting decode growth starve."""
+    cfg = _cfg()
+    params = _params(cfg)
+    eng = ServingEngine(params, cfg, n_slots=2, max_seq=16, paged=True,
+                        block_size=8, n_blocks=3, prefix_sharing=False)
+    done, _ = eng.run_to_completion([
+        Request(0, np.arange(1, 10, dtype=np.int32), max_new=3),
+        Request(1, np.arange(2, 11, dtype=np.int32), max_new=3)])
+    assert {r.rid for r in done} == {0, 1}
+    assert eng.stalls == 0
+    assert int(paging.blocks_in_use(eng.bstate)) == 0
+
+
+def test_impossible_request_raises_instead_of_hanging():
+    cfg = _cfg()
+    params = _params(cfg)
+    eng = ServingEngine(params, cfg, n_slots=2, max_seq=16, paged=True,
+                        block_size=8, n_blocks=1)
+    with pytest.raises(RuntimeError, match="stuck"):
+        eng.run_to_completion(
+            [Request(0, np.arange(1, 11, dtype=np.int32), max_new=2)])
+
+
+def test_plan_serve_paged_lowers_with_shardings():
+    """ClusterSupervisor lowers the paged serve tick: pages + tables +
+    donated block-pool state, all with explicit shardings."""
+    from jax.sharding import Mesh
+    from repro.configs import ShapeConfig
+    from repro.runtime.supervisor import ClusterSupervisor
+
+    cfg = _cfg()
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    shape = ShapeConfig("serve_tiny", 48, 4, "serve")
+    sup = ClusterSupervisor(mesh, cfg, shape, dtype=jnp.float32)
+    plan = sup.plan_serve(paged=model.PagedLayout(block_size=8,
+                                                  n_blocks=24))
+    assert plan.kind == "serve"
+    assert plan.donate_argnums == (2, 3)   # cache AND block pool donated
+    lowered = jax.jit(plan.step_fn, in_shardings=plan.in_shardings,
+                      out_shardings=plan.out_shardings,
+                      donate_argnums=plan.donate_argnums) \
+        .lower(*plan.abstract_args)
+    assert lowered.compile() is not None

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_arch, reduced
 from repro.models import model
@@ -107,6 +108,66 @@ def test_plan_serve_lowers_with_shardings():
                       donate_argnums=plan.donate_argnums) \
         .lower(*plan.abstract_args)
     assert lowered.compile() is not None
+
+
+def test_pow2_bucket_clamps_over_cap_lengths():
+    """Regression: over-cap lengths used to return raw `n`, compiling a
+    fresh prefill per distinct over-cap prompt length."""
+    from repro.runtime.serve import _pow2_bucket
+    assert _pow2_bucket(5, 64) == 8
+    assert _pow2_bucket(64, 64) == 64
+    assert _pow2_bucket(65, 64) == 64      # clamped, not raw
+    assert _pow2_bucket(1000, 64) == 64
+
+
+def test_admit_rejects_prompt_longer_than_max_seq():
+    eng = _engine(n_slots=2, max_seq=16)
+    with pytest.raises(ValueError, match="does not fit max_seq"):
+        eng.admit(Request(0, np.arange(1, 20, dtype=np.int32), max_new=4))
+    assert eng.pool.used == 0              # nothing rented on the way out
+
+
+def test_admit_prompt_exactly_max_seq():
+    """A full-cache prompt is admissible: the budget clamps to the one
+    token the prefill argmax already produced — no decode write can land
+    past the cache."""
+    eng = _engine(n_slots=2, max_seq=16)
+    r = Request(0, np.arange(1, 17, dtype=np.int32), max_new=8)
+    done, _ = eng.run_to_completion([r])
+    assert len(done) == 1 and len(done[0].out) == 1
+    assert eng.pool.used == 0
+
+
+def test_admit_max_new_zero_completes_instantly():
+    eng = _engine(n_slots=1)
+    r0 = Request(0, np.arange(1, 5, dtype=np.int32), max_new=0)
+    r1 = Request(1, np.arange(1, 5, dtype=np.int32), max_new=3)
+    done, _ = eng.run_to_completion([r0, r1])
+    out = {r.rid: r.out for r in done}
+    assert out[0] == []                    # no slot spent, no tokens
+    assert len(out[1]) == 3
+    assert eng.pool.created_total == 1     # only rid 1 rented the slot
+
+
+def test_readmit_retired_rid_is_clean():
+    eng = _engine(n_slots=1)
+    done1, _ = eng.run_to_completion(
+        [Request(7, np.arange(1, 6, dtype=np.int32), max_new=3)])
+    done2, _ = eng.run_to_completion(
+        [Request(7, np.arange(1, 6, dtype=np.int32), max_new=3)])
+    assert done1[0].out == done2[0].out    # same rid, same slot, same tokens
+    assert eng.pool.created_total == 2 and eng.pool.used == 0
+
+
+def test_admission_when_pool_exhausted_defers_not_drops():
+    eng = _engine(n_slots=2)
+    reqs = [Request(i, np.arange(1, 5, dtype=np.int32), max_new=3)
+            for i in range(5)]
+    assert eng.admit_many(reqs) == 2       # slots gate the front of the queue
+    # draining also finishes the two already-admitted requests
+    done, _ = eng.run_to_completion(reqs[2:])
+    assert eng.pool.used == 0
+    assert {r.rid for r in done} == set(range(5))
 
 
 def test_prefill_writes_correct_slot():
