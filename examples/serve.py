@@ -89,6 +89,17 @@ def main():
           f"({kv_c['kv_bytes_per_token'] / kv_p['kv_bytes_per_token']:.1f}x"
           f" smaller)")
 
+    # chunked prefill: prompts are outsourced fragment by fragment (the
+    # paper's cores never hand over a whole job), so a long prompt can't
+    # head-of-line-block the decoders — and tokens stay exact
+    out_f, _ = run(
+        ServingEngine(params, cfg, n_slots=4, max_seq=96, chunk=8,
+                      paged=True, block_size=16, n_blocks=16,
+                      chunked_prefill=True, prefill_chunk_tokens=16),
+        make_requests(cfg), "paged blocks + chunked prefill")
+    assert out_f == out_c, "chunked prefill must be token-exact"
+    print("token-exact with chunked prefill (fragments of 16)")
+
 
 if __name__ == "__main__":
     main()

@@ -69,6 +69,12 @@ class CorePool:
     def parent_of(self, unit: int) -> int:
         return int(self.state.parent[unit])
 
+    def phase_of(self, unit: int) -> int:
+        """Lifecycle phase of a unit: PHASE_IDLE / PHASE_PREFILL /
+        PHASE_DECODE (a QT is fed fragments before it runs)."""
+        self._check_unit(unit)
+        return int(self.state.phase[unit])
+
     def ready(self) -> bool:
         """The SV's 'ALU avail' signal: ready while ≥1 core is free (§3.1)."""
         return self.available > 0
@@ -117,6 +123,14 @@ class CorePool:
         if status == pool_lib.ERR_BAD_UNIT:
             raise IndexError(f"unit {unit} out of range for pool({self.n})")
         self.state = new_state
+
+    def set_phase(self, unit: int, phase: int) -> None:
+        """Move a rented unit between lifecycle phases (PREFILL while its
+        prompt is outsourced fragment by fragment, DECODE once it runs)."""
+        self._check_unit(unit)
+        if bool(self.state.free[unit]):
+            raise ValueError(f"unit {unit} is not rented")
+        self.state = pool_lib.set_phase(self.state, unit, phase)
 
     def disable(self, unit: int) -> None:
         """A unit becomes unavailable ('overheating' / failed host)."""

@@ -135,6 +135,48 @@ def decode_attention(q, k_cache, v_cache, cache_len):
     return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
 
 
+def chunk_attention(q, k_cache, v_cache, q_pos):
+    """Prefill-continuation attention: q (B, C, H, D) at absolute positions
+    ``q_pos`` (B, C) against a (B, Smax, Hkv, D) cache whose rows already
+    hold the chunk's own K/V (write-then-attend, like decode).
+
+    Causal through the offset: key position ``kpos`` is visible to query
+    column j iff ``kpos <= q_pos[:, j]`` — the position-offset causal mask
+    that makes an incrementally outsourced prompt fragment exact against
+    the cache built by earlier fragments.  ``decode_attention`` is the
+    C == 1 special case (``q_pos = cache_len - 1``); the masked tail
+    contributes exact zeros to the softmax, so chunked prefill reproduces
+    the monolithic prefill bit for bit (same reduction argument as the
+    paged/contiguous parity).
+    """
+    b, c, h, d = q.shape
+    hkv = k_cache.shape[2]
+    k = _repeat_kv(k_cache, h // hkv)
+    v = _repeat_kv(v_cache, h // hkv)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(d))
+    kpos = jnp.arange(k.shape[1])
+    s = jnp.where(kpos[None, None, None, :] <= q_pos[:, None, :, None],
+                  s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+
+
+def paged_chunk_attention(q, k_pages, v_pages, block_tables, q_pos):
+    """:func:`chunk_attention` over a paged cache: gather each row's chain
+    back into the contiguous layout (element order identical to the
+    contiguous cache, so parity is exact) and apply the position-offset
+    causal mask.  Chunk ticks are rare next to decode chunks, so the
+    pure-jnp gather is the only path for now (a fused Pallas variant can
+    follow the paged_attention kernel's schedule later)."""
+    n_pages, bs, _, d = k_pages.shape
+    b, nb = block_tables.shape
+    t = jnp.clip(block_tables, 0, n_pages - 1)
+    k = k_pages[t].reshape(b, nb * bs, k_pages.shape[2], d)
+    v = v_pages[t].reshape(b, nb * bs, v_pages.shape[2], d)
+    return chunk_attention(q, k, v, q_pos)
+
+
 def paged_decode_attention(q, k_pages, v_pages, block_tables, cache_len,
                            use_kernel=None):
     """Single-token decode over a paged cache: q (B, 1, H, D) against

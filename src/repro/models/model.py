@@ -875,6 +875,101 @@ def decode_step(params, token, cache, cfg: ArchConfig):
     return logits, cache
 
 
+def prefill_chunk(params, tokens, lengths, cache, cfg: ArchConfig,
+                  skip_until=None):
+    """Prefill *continuation*: consume one left-aligned prompt fragment
+    per row against an existing cache, at each row's position offset.
+
+    The paper's cores outsource fragments, not whole jobs — this is that
+    discipline for prompts: instead of one monolithic prefill, the prompt
+    is fed in ``(B, C)`` chunks, each writing K/V at positions
+    ``cache["pos"] .. cache["pos"] + length - 1`` and attending causally
+    through the position-offset mask (:func:`attention.chunk_attention`).
+
+    * ``tokens`` (B, C) int32, ``lengths`` (B,) int32 — rows with length
+      0 are untouched (no writes, ``pos`` unchanged, logits garbage);
+      a length-1 row is exactly a decode step, so one call advances a
+      mix of prefilling and decoding rows (the serving engine's unified
+      tick).
+    * ``skip_until`` (B,) int32 — optional write fence: positions below
+      it are *not* stored (they live in shared prefix blocks an earlier
+      chain already wrote); attention still reads them from the cache.
+    * Works on both cache layouts from :func:`init_cache` (contiguous
+      and paged).  Causal-attention families only (dense/moe): recurrent
+      state absorbs tokens sequentially and a frontend's prepended
+      embeddings are not in token space — both keep the monolithic path.
+
+    Returns ``(logits (B, V) at each row's last valid column, advanced
+    cache)``.
+    """
+    if cfg.family not in PAGED_FAMILIES or cfg.frontend:
+        raise ValueError(
+            f"chunked prefill supports causal attention caches "
+            f"{PAGED_FAMILIES} without a frontend, not "
+            f"{cfg.family!r} (frontend={cfg.frontend!r})")
+    bsz, span = tokens.shape
+    lengths = jnp.asarray(lengths, jnp.int32)
+    pos0 = cache["pos"]
+    cols = jnp.arange(span, dtype=jnp.int32)
+    q_pos = pos0[:, None] + cols[None, :]           # (B, C) absolute
+    valid = cols[None, :] < lengths[:, None]
+    if skip_until is not None:
+        valid = valid & (q_pos >= jnp.asarray(skip_until,
+                                              jnp.int32)[:, None])
+    x = layers.embed(params["embed"]["tok"], tokens)
+    if cfg.pos_embed == "learned":
+        x = x + layers.learned_pos_embed(params["embed"]["pos"], q_pos)
+
+    paged = "block_tables" in cache
+    if paged:
+        tables = cache["block_tables"]
+        n_pages, blk_size = cache["k"].shape[1], cache["k"].shape[2]
+        nb = tables.shape[1]
+        blk_idx = q_pos // blk_size
+        blk = jnp.take_along_axis(tables, jnp.clip(blk_idx, 0, nb - 1),
+                                  axis=1)
+        blk = jnp.where(blk_idx < nb, blk, -1)
+        # invalid columns (and chain holes) -> out of range -> dropped
+        wblk = jnp.where(valid & (blk >= 0), blk, n_pages)
+        off = q_pos % blk_size
+    else:
+        smax = cache["k"].shape[2]
+        wpos = jnp.where(valid, q_pos, smax)
+        bidx = jnp.arange(bsz)[:, None]
+
+    def body(carry, inp):
+        lp, k_l, v_l = inp
+        h_in = layers.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h_in, lp["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h_in, lp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h_in, lp["wv"])
+        if cfg.pos_embed == "rope":
+            q = layers.apply_rope(q, q_pos, cfg.rope_theta)
+            k = layers.apply_rope(k, q_pos, cfg.rope_theta)
+        # write-then-attend: the fragment's own K/V are in the cache
+        # before the position-offset causal mask reads them
+        if paged:
+            k_l = k_l.at[wblk, off].set(k.astype(k_l.dtype), mode="drop")
+            v_l = v_l.at[wblk, off].set(v.astype(v_l.dtype), mode="drop")
+            o = attn_lib.paged_chunk_attention(q, k_l, v_l, tables, q_pos)
+        else:
+            k_l = k_l.at[bidx, wpos].set(k.astype(k_l.dtype), mode="drop")
+            v_l = v_l.at[bidx, wpos].set(v.astype(v_l.dtype), mode="drop")
+            o = attn_lib.chunk_attention(q, k_l, v_l, q_pos)
+        h = jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+        y = carry + h
+        f, _ = _ffn(layers.rms_norm(y, lp["ln2"], cfg.norm_eps), lp, cfg)
+        return y + f, (k_l, v_l)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                         cache["v"]))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    x_last = x[jnp.arange(bsz), jnp.clip(lengths - 1, 0, span - 1)]
+    logits = _logits(x_last, params, cfg)
+    cache = dict(cache, k=ks, v=vs, pos=pos0 + lengths)
+    return logits, cache
+
+
 # ===========================================================================
 # Accounting (roofline's MODEL_FLOPS)
 # ===========================================================================

@@ -98,6 +98,30 @@ def admit_chains(state: BlockPoolState, chain_blocks: jax.Array,
         refcount=refcount)
 
 
+def extend_chains(state: BlockPoolState, tables: jax.Array,
+                  cols: jax.Array, blocks: jax.Array):
+    """Chunk-granular rent: commit one prefill *fragment's* blocks per
+    slot — rent each host-picked block, take its chain reference, and
+    append it to the slot's table at the given column, all in one pure
+    transition inside the mixed tick.
+
+    ``blocks`` / ``cols`` are (n_slots, K) int32, NO_BLOCK-padded.  The
+    host supervisor picked the ids from its free-list mirror and its
+    §5.1 worst-case reservation guarantees they are grantable, so unlike
+    :func:`grow_for_decode` this commit cannot stall.  This is what
+    replaces whole-chain-at-admission renting: a chain grows as its
+    prompt fragments are outsourced, never faster.
+
+    Returns ``(state, tables)``.
+    """
+    blk = jnp.asarray(blocks, jnp.int32)
+    rows = jnp.arange(tables.shape[0])[:, None]
+    c = jnp.where(blk >= 0, jnp.asarray(cols, jnp.int32), tables.shape[1])
+    tables = tables.at[rows, c].set(blk, mode="drop")
+    flat = blk.reshape(-1)
+    return admit_chains(state, flat, flat), tables
+
+
 def grow_for_decode(state: BlockPoolState, tables: jax.Array,
                     pos: jax.Array, active: jax.Array, *, block_size: int):
     """One decode tick's block growth, fully on device.

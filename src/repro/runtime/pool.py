@@ -38,6 +38,15 @@ ERR_NOT_RENTED = 1          # ValueError on the host wrapper
 ERR_LIVE_CHILDREN = 2       # RuntimeError: §4.3 blocks parent termination
 ERR_BAD_UNIT = 3
 
+# lifecycle phase of a rented unit: the paper's QT does not receive its
+# whole job at once — it is fed *fragments* (the companion EMPA paper's
+# quasi-thread discipline), so a unit is either still being loaded
+# (PREFILL: consuming prompt fragments) or running (DECODE).  Free units
+# are IDLE by invariant.
+PHASE_IDLE = 0
+PHASE_PREFILL = 1
+PHASE_DECODE = 2
+
 IntLike = Union[int, jax.Array]
 
 
@@ -50,6 +59,7 @@ class SlotPoolState(NamedTuple):
     disabled: jax.Array       # (n,) bool — 'overheated' units (§4.1.2)
     created_total: jax.Array  # () int32 — rents ever granted
     peak_used: jax.Array      # () int32 — high-water mark
+    phase: jax.Array          # (n,) int32 — PHASE_* of each rented unit
 
     @property
     def n(self) -> int:
@@ -64,6 +74,7 @@ def init_pool(n: int) -> SlotPoolState:
         disabled=jnp.zeros((n,), bool),
         created_total=jnp.int32(0),
         peak_used=jnp.int32(0),
+        phase=jnp.zeros((n,), jnp.int32),
     )
 
 
@@ -127,7 +138,9 @@ def release(state: SlotPoolState, unit: IntLike):
     # clear any prealloc claims on this unit
     pre = jnp.where(ok, state.prealloc.at[:, u].set(False), state.prealloc)
     free = jnp.where(ok, state.free.at[u].set(True), state.free)
-    return state._replace(free=free, parent=par, prealloc=pre), status
+    phase = jnp.where(ok, state.phase.at[u].set(PHASE_IDLE), state.phase)
+    return state._replace(free=free, parent=par, prealloc=pre,
+                          phase=phase), status
 
 
 @jax.jit
@@ -178,7 +191,9 @@ def release_many(state: SlotPoolState, mask: jax.Array) -> SlotPoolState:
     free = state.free | rel
     parent = jnp.where(rel, NO_PARENT, state.parent)
     prealloc = state.prealloc & ~rel[None, :]
-    return state._replace(free=free, parent=parent, prealloc=prealloc)
+    phase = jnp.where(rel, PHASE_IDLE, state.phase)
+    return state._replace(free=free, parent=parent, prealloc=prealloc,
+                          phase=phase)
 
 
 @jax.jit
@@ -196,6 +211,20 @@ def preallocate(state: SlotPoolState, parent: IntLike, k: IntLike):
     take = valid & cand & (jnp.cumsum(cand) <= jnp.asarray(k, jnp.int32))
     pre = state.prealloc.at[p].set(state.prealloc[p] | take)
     return state._replace(prealloc=pre), take
+
+
+@jax.jit
+def set_phase(state: SlotPoolState, unit: IntLike,
+              phase: IntLike) -> SlotPoolState:
+    """Record the lifecycle phase of a rented unit (PREFILL while its QT
+    is still being fed prompt fragments, DECODE once it runs).  Total
+    function: an out-of-range or free unit leaves the state unchanged
+    (the host wrapper raises)."""
+    unit = jnp.asarray(unit, jnp.int32)
+    u = jnp.clip(unit, 0, state.n - 1)
+    valid = (unit >= 0) & (unit < state.n) & ~state.free[u]
+    new = state.phase.at[u].set(jnp.asarray(phase, jnp.int32))
+    return state._replace(phase=jnp.where(valid, new, state.phase))
 
 
 @jax.jit
@@ -218,8 +247,10 @@ def check_invariants(state: SlotPoolState) -> None:
     parent = np.asarray(state.parent)
     prealloc = np.asarray(state.prealloc)
     disabled = np.asarray(state.disabled)
+    phase = np.asarray(state.phase)
     n = free.shape[0]
     assert parent.shape == (n,) and prealloc.shape == (n, n)
+    assert np.all(phase[free] == PHASE_IDLE), "free unit with a phase"
     for u in range(n):
         p = int(parent[u])
         assert -1 <= p < n

@@ -33,9 +33,31 @@ to its actual sequence, not to ``max_seq``:
 * retirement releases the whole chain; refcount-zero blocks return to
   the pool.
 
+**Chunked prefill** (``ServingEngine(chunked_prefill=True)``) applies the
+paper's *fragment outsourcing* to prompts: a core never receives its
+whole job at once — the supervisor feeds it fragments as capacity
+appears (the companion EMPA paper's quasi-thread discipline).  Instead
+of one monolithic admission prefill (which stalls every active decode
+slot behind the longest prompt and compiles one variant per pow2 length
+bucket), an admitted slot enters ``PHASE_PREFILL`` and the **unified
+mixed tick** (`build_mixed_tick`) advances all slots together:
+
+* a PREFILLING slot consumes one prompt fragment (≤ ``prefill_chunk_
+  tokens``), written into its cache at its position offset;
+* a DECODING slot advances one token — the *same* ``model.prefill_
+  chunk`` forward treats it as a length-1 fragment;
+* paged chains rent blocks chunk-granularly as fragments land
+  (`paging.extend_chains`), never faster — the §5.1 worst-case
+  reservation is still taken at admission, so lazy growth cannot
+  starve; a fully-written shared prefix is skipped, not recomputed;
+* one compile total, one host sync per tick, per-tick latency bounded
+  by one fragment — no head-of-line blocking, and the outputs stay
+  token-exact vs monolithic admission.
+
 Host Python keeps only what must be host-side: the rent/return ledger
 (`core/supervisor.CorePool`, itself a thin wrapper over the same jittable
-`runtime/pool` transitions), the prefix-hash map, and the request queue.
+`runtime/pool` transitions), the prefix-hash map, the per-slot fragment
+cursors, and the request queue.
 """
 from __future__ import annotations
 
@@ -212,6 +234,104 @@ def build_decode_chunk(cfg: ArchConfig, *, chunk: int, eos_id: int,
     return jax.jit(chunk_fn_paged, donate_argnums=(2, 3))
 
 
+def build_mixed_tick(cfg: ArchConfig, *, chunk_tokens: int, eos_id: int,
+                     rules: Optional[ShardingRules] = None,
+                     jit: bool = True,
+                     paged: Optional[PagedLayout] = None):
+    """Jitted unified prefill/decode tick (the fragment-outsourcing step).
+
+    One call advances *every* rented slot exactly one quantum: a slot in
+    ``PHASE_PREFILL`` consumes its next prompt fragment (up to
+    ``chunk_tokens`` tokens, written into the cache at its position
+    offset), a slot in ``PHASE_DECODE`` advances one token — both through
+    the same ``model.prefill_chunk`` forward, where a decode step is just
+    a length-1 fragment.  One compile (no per-prompt-length buckets), one
+    host sync per tick, per-tick latency bounded by one fragment's cost.
+
+    Contiguous: ``fn(params, state, cache, frag_tokens (n, C), frag_len
+    (n,), frag_last (n,), frag_max_new (n,)) -> (state, cache, emitted
+    (n, 1))``.  ``emitted`` carries the decode token per active slot and
+    the *first* token for rows whose final fragment just ran (the prefill
+    argmax), ``NO_TOKEN`` elsewhere.
+
+    Paged: ``fn(params, state, cache, bstate, frag_tokens, frag_len,
+    frag_last, frag_max_new, frag_skip, frag_cols, frag_rent) -> (state,
+    cache, bstate, emitted, stalls)``.  ``frag_rent``/``frag_cols``
+    commit this tick's chunk-granular block rents
+    (:func:`paging.extend_chains` — host-picked, reservation-backed),
+    ``frag_skip`` fences writes below it (shared prefix blocks an
+    earlier chain already stored), and decode rows still grow their
+    chains on device via :func:`paging.grow_for_decode`.
+
+    The cache (and block state) is donated: the engine ticks in place.
+    """
+
+    def run(params, state: DecodeState, cache, decode_rows, frag_tokens,
+            frag_len, frag_last, frag_max_new, frag_skip):
+        """Shared tail: one prefill_chunk forward + QT bookkeeping."""
+        # trace-time check: the compiled width IS the fragment width
+        assert frag_tokens.shape[1] == chunk_tokens, \
+            (frag_tokens.shape, chunk_tokens)
+        # a decoding slot is a length-1 fragment whose token lives in
+        # device state; a prefilling slot's fragment comes from the host
+        first_col = jnp.where(decode_rows, state.tokens, frag_tokens[:, 0])
+        tokens = jnp.concatenate([first_col[:, None], frag_tokens[:, 1:]],
+                                 axis=1)
+        lengths = jnp.where(decode_rows, 1, frag_len)
+        with use_rules(rules):
+            logits, cache = model_lib.prefill_chunk(
+                params, tokens, lengths, cache, cfg, skip_until=frag_skip)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        prefill_rows = frag_len > 0
+        done_pref = prefill_rows & frag_last
+        emit = decode_rows | done_pref
+        tok = jnp.where(emit, nxt, state.tokens)
+        n_out = jnp.where(done_pref, 1,
+                          state.n_out + decode_rows.astype(jnp.int32))
+        max_new = jnp.where(done_pref, frag_max_new, state.max_new)
+        # same retirement rule as the decode chunk; like monolithic
+        # admission, the first token is emitted without an EOS check and
+        # a budget of 1 is already spent by it
+        retire = decode_rows & ((tok == eos_id) | (n_out >= max_new))
+        active = (decode_rows & ~retire) | (done_pref & (max_new > 1))
+        emitted = jnp.where(emit, tok, NO_TOKEN)[:, None]
+        return DecodeState(tok, n_out, max_new, active), cache, emitted
+
+    if paged is None:
+        def tick(params, state: DecodeState, cache, frag_tokens, frag_len,
+                 frag_last, frag_max_new):
+            frag_skip = jnp.zeros_like(frag_len)
+            return run(params, state, cache, state.active, frag_tokens,
+                       frag_len, frag_last, frag_max_new, frag_skip)
+
+        if not jit:
+            return tick
+        return jax.jit(tick, donate_argnums=(2,))
+
+    def tick_paged(params, state: DecodeState, cache, bstate, frag_tokens,
+                   frag_len, frag_last, frag_max_new, frag_skip, frag_cols,
+                   frag_rent):
+        # 1. commit this tick's fragment blocks (host-picked, cannot
+        #    stall under the §5.1 reservation)
+        bstate, tables = paging.extend_chains(
+            bstate, cache["block_tables"], frag_cols, frag_rent)
+        # 2. decode rows crossing a block boundary rent on device
+        bstate, tables, stalled = paging.grow_for_decode(
+            bstate, tables, cache["pos"], state.active,
+            block_size=paged.block_size)
+        decode_rows = state.active & ~stalled
+        stalls = jnp.sum(stalled).astype(jnp.int32)
+        cache = dict(cache, block_tables=tables)
+        state, cache, emitted = run(params, state, cache, decode_rows,
+                                    frag_tokens, frag_len, frag_last,
+                                    frag_max_new, frag_skip)
+        return state, cache, bstate, emitted, stalls
+
+    if not jit:
+        return tick_paged
+    return jax.jit(tick_paged, donate_argnums=(2, 3))
+
+
 def build_admit_step(cfg: ArchConfig, max_seq: int,
                      rules: Optional[ShardingRules] = None):
     """Jitted packed admission: batched prefill + scatter into rented slots.
@@ -351,6 +471,22 @@ class _ChainPlan:
     worst_total: int       # §5.1 reservation: blocks the chain may reach
 
 
+@dataclasses.dataclass
+class _PrefillJob:
+    """Host cursor for one slot's incrementally outsourced prompt.
+
+    The request's prompt is fed to the mixed tick fragment by fragment;
+    ``cursor`` counts consumed tokens, ``registered`` the prefix-map
+    blocks published so far (a block becomes shareable only once the
+    fragment that writes it has been dispatched — a later chain must
+    never attend to an unwritten shared block)."""
+
+    req: Request
+    max_new_eff: int
+    cursor: int = 0
+    registered: int = 0
+
+
 class ServingEngine:
     """Batched greedy decoding with rent/return slot semantics.
 
@@ -375,7 +511,10 @@ class ServingEngine:
                  rules: Optional[ShardingRules] = None,
                  paged: bool = False, block_size: int = 16,
                  n_blocks: Optional[int] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 chunked_prefill: bool = False,
+                 prefill_chunk_tokens: int = 16,
+                 max_prefill_tokens_per_tick: Optional[int] = None):
         self.params, self.cfg = params, cfg
         self.max_seq, self.eos_id, self.chunk = max_seq, eos_id, chunk
         self.pool = CorePool(n_slots)
@@ -417,6 +556,25 @@ class ServingEngine:
             self._block_hash: dict = {}      # block id -> prefix key
             self._plans: dict[int, _ChainPlan] = {}   # slot -> plan
         self._packed = cfg.family in PACKED_PREFILL_FAMILIES
+        self.chunked = chunked_prefill
+        if chunked_prefill:
+            if cfg.family not in model_lib.PAGED_FAMILIES or cfg.frontend:
+                raise ValueError(
+                    f"chunked prefill supports causal attention caches "
+                    f"{model_lib.PAGED_FAMILIES} without a frontend, not "
+                    f"{cfg.family!r} (frontend={cfg.frontend!r})")
+            if prefill_chunk_tokens < 1:
+                raise ValueError("prefill_chunk_tokens must be >= 1")
+            if max_prefill_tokens_per_tick is not None \
+                    and max_prefill_tokens_per_tick < 1:
+                raise ValueError(
+                    "max_prefill_tokens_per_tick must be >= 1")
+            self._pchunk = int(prefill_chunk_tokens)
+            self._tick_budget = max_prefill_tokens_per_tick
+            self._jobs: dict[int, _PrefillJob] = {}
+            self._mixed_fn = build_mixed_tick(
+                cfg, chunk_tokens=self._pchunk, eos_id=eos_id, rules=rules,
+                paged=self.layout)
         self._finished_instant: list[Request] = []
         # accounting: host round-trips vs the one-sync-per-slot-per-tick
         # baseline an un-refactored engine would have paid
@@ -451,7 +609,16 @@ class ServingEngine:
         families); recurrent families fall back to one exact-length
         prefill per request through the same jitted path.
 
+        With ``chunked_prefill`` the prompt is *not* prefilled at
+        admission at all: the slot enters ``PHASE_PREFILL`` and the mixed
+        tick feeds it one fragment per tick (paged blocks are rented
+        chunk-granularly as fragments land, under the same §5.1
+        worst-case reservation taken here).
+
         Edge cases (all host-side, before any compile):
+        * an empty prompt raises ``ValueError`` (a packed prefill row of
+          length 0 would gather its "last token" from row -1 — garbage
+          as the first token);
         * a prompt longer than ``max_seq`` raises ``ValueError``;
         * a prompt of exactly ``max_seq`` is admitted with an effective
           budget of 1 (the prefill argmax) — no decode write can land
@@ -461,6 +628,11 @@ class ServingEngine:
         # validate the whole batch before renting anything: a rejection
         # must never leave earlier requests granted-but-unprefilled
         for req in requests:
+            if len(req.prompt) == 0:
+                raise ValueError(
+                    f"request {req.rid}: empty prompt; there is no last "
+                    f"prompt token to gather first-token logits from — "
+                    f"reject upstream")
             if len(req.prompt) + self._offset > self.max_seq:
                 raise ValueError(
                     f"request {req.rid}: prompt length {len(req.prompt)}"
@@ -480,15 +652,40 @@ class ServingEngine:
             if slot is None:
                 break                     # pool exhausted: queue upstream
             if self.layout is not None:
-                plan = self._plan_chain(req, plen)
+                plan = self._plan_chain(req, plen,
+                                        rent_now=not self.chunked)
                 if plan is None:          # block pool exhausted
                     self.pool.release(slot)
                     break
-                self._commit_plan(slot, plan, req)
+                if self.chunked:
+                    self._commit_plan_chunked(slot, plan)
+                else:
+                    self._commit_plan(slot, plan, req)
             req.slot = slot
             granted.append(req)
             consumed += 1
         if not granted:
+            return consumed
+        if self.chunked:
+            # no device prefill here: the slot's QT starts in the
+            # fragment-feeding phase and the mixed tick does the rest
+            for req in granted:
+                slot, plen = req.slot, len(req.prompt)
+                job = _PrefillJob(
+                    req=req, max_new_eff=self._max_new_eff(req, plen))
+                if self.layout is not None:
+                    plan = self._plans[slot]
+                    # a fully-shared prefix needs no recompute: fast-
+                    # forward past it (but keep >= 1 token so the final
+                    # fragment has a last position to take logits from)
+                    job.cursor = min(plan.n_shared * self.layout.block_size,
+                                     plen - 1)
+                    job.registered = plan.n_shared
+                self.cache["pos"] = self.cache["pos"].at[slot].set(
+                    job.cursor)
+                self.active[slot] = req
+                self._jobs[slot] = job
+                self.pool.set_phase(slot, pool_lib.PHASE_PREFILL)
             return consumed
         groups = [granted] if self._packed else [[r] for r in granted]
         for group in groups:
@@ -496,6 +693,7 @@ class ServingEngine:
         for req in granted:
             self.active[req.slot] = req
             self._need_first.add(req.slot)
+            self.pool.set_phase(req.slot, pool_lib.PHASE_DECODE)
         return consumed
 
     def _max_new_eff(self, req: Request, plen: int) -> int:
@@ -503,10 +701,17 @@ class ServingEngine:
         plen..plen+max_new-2, which must stay inside max_seq."""
         return min(req.max_new, self.max_seq - plen + 1)
 
-    def _plan_chain(self, req: Request, plen: int) -> Optional[_ChainPlan]:
+    def _plan_chain(self, req: Request, plen: int,
+                    rent_now: bool = True) -> Optional[_ChainPlan]:
         """Pick the request's blocks from the host mirror: reuse shared
         prompt-prefix blocks, rent new ones, and check the §5.1
-        reservation (worst-case chain) against the unreserved pool."""
+        reservation (worst-case chain) against the unreserved pool.
+
+        With ``rent_now=False`` (chunked prefill) no new blocks are
+        picked — the chain holds only the shared prefix and grows
+        chunk-granularly as fragments are outsourced; the worst-case
+        reservation is still taken here, so lazy growth can never
+        starve."""
         lo = self.layout
         bs = lo.block_size
         n_full = plen // bs
@@ -526,6 +731,10 @@ class ServingEngine:
         budget = lo.n_blocks - used - reserve
         if worst_total - len(shared) > budget:
             return None
+        if not rent_now:
+            return _ChainPlan(chain=list(shared), new_blocks=[],
+                              n_shared=len(shared),
+                              worst_total=worst_total)
         free_ids = np.flatnonzero(self._ref_host == 0)
         new_blocks = [int(b) for b in free_ids[:total_now - len(shared)]]
         return _ChainPlan(chain=shared + new_blocks, new_blocks=new_blocks,
@@ -545,6 +754,26 @@ class ServingEngine:
         row[:] = -1
         row[:len(plan.chain)] = plan.chain
         self._register_prefixes(req, plan)
+
+    def _commit_plan_chunked(self, slot: int, plan: _ChainPlan) -> None:
+        """Chunked admission commits only the *shared prefix*: reference
+        it on the device immediately (a retiring source chain must never
+        free blocks this request still needs) and seed the slot's block
+        table with it; everything else is rented fragment by fragment
+        inside the mixed tick (`paging.extend_chains`)."""
+        self._plans[slot] = plan
+        self.shared_block_hits += plan.n_shared
+        row = self._tables_host[slot]
+        row[:] = -1
+        for b in plan.chain:
+            self._ref_host[b] += 1
+        row[:len(plan.chain)] = plan.chain
+        if plan.chain:
+            shared = jnp.asarray(plan.chain, jnp.int32)
+            self.bstate = paging.admit_chains(
+                self.bstate, shared, jnp.zeros((0,), jnp.int32))
+            self.cache["block_tables"] = self.cache["block_tables"] \
+                .at[slot, :len(plan.chain)].set(shared)
 
     def _prefix_key(self, prompt: np.ndarray, j: int):
         """Key for chain block j: its content is a pure function of the
@@ -612,14 +841,141 @@ class ServingEngine:
         # un-refactored baseline: one argmax sync per admitted request
         self.baseline_syncs += g
 
+    # -- chunked prefill: fragment scheduler + unified tick ------------------
+    def _schedule_fragments(self):
+        """Pick this tick's prompt fragments (host side): one fragment of
+        up to ``prefill_chunk_tokens`` per PREFILLING slot, oldest job
+        first, bounded by the per-tick token budget.  Paged jobs also get
+        their fragment's blocks picked from the free mirror here — the
+        §5.1 reservation taken at admission guarantees the pick succeeds,
+        and the ids are committed on device by the tick itself
+        (`paging.extend_chains`), so host and device free lists cannot
+        race."""
+        n = self.pool.n
+        C = self._pchunk
+        ft = np.zeros((n, C), np.int32)
+        fl = np.zeros((n,), np.int32)
+        flast = np.zeros((n,), bool)
+        fmax = np.zeros((n,), np.int32)
+        fskip = np.zeros((n,), np.int32)
+        paged = self.layout is not None
+        if paged:
+            bs = self.layout.block_size
+            frent = np.full((n, C // bs + 2), -1, np.int32)
+            fcols = np.zeros((n, C // bs + 2), np.int32)
+        budget = self._tick_budget if self._tick_budget is not None \
+            else C * n
+        finishing: list[int] = []
+        for slot, job in list(self._jobs.items()):
+            if budget <= 0:
+                break                 # token budget spent: rest wait a tick
+            prompt = job.req.prompt
+            plen = len(prompt)
+            take = min(C, plen - job.cursor, budget)
+            if take <= 0:
+                continue
+            ft[slot, :take] = prompt[job.cursor:job.cursor + take]
+            fl[slot] = take
+            fmax[slot] = job.max_new_eff
+            last = job.cursor + take >= plen
+            flast[slot] = last
+            if paged:
+                plan = self._plans[slot]
+                fskip[slot] = plan.n_shared * bs
+                need = (job.cursor + take - 1) // bs + 1
+                k_i = 0
+                while len(plan.chain) < need:
+                    blk = int(np.flatnonzero(self._ref_host == 0)[0])
+                    col = len(plan.chain)
+                    self._ref_host[blk] += 1
+                    self._tables_host[slot, col] = blk
+                    frent[slot, k_i] = blk
+                    fcols[slot, k_i] = col
+                    plan.chain.append(blk)
+                    k_i += 1
+                if self._prefix_sharing:
+                    # publish prefix-map entries for the full blocks this
+                    # fragment completes: a block becomes shareable only
+                    # once its writing tick is dispatched
+                    done_full = min((job.cursor + take) // bs, plen // bs)
+                    for j in range(job.registered, done_full):
+                        key = self._prefix_key(prompt, j)
+                        self._prefix_map[key] = plan.chain[j]
+                        self._block_hash[plan.chain[j]] = key
+                    job.registered = max(job.registered, done_full)
+            job.cursor += take
+            budget -= take
+            if last:
+                finishing.append(slot)
+        out = (ft, fl, flast, fmax, fskip)
+        if paged:
+            out = out + (fcols, frent)
+        return out, finishing
+
+    def _mixed_step(self) -> list[Request]:
+        """One unified prefill/decode tick: every PREFILLING slot eats a
+        fragment, every DECODING slot one token; one host sync."""
+        sched, finishing = self._schedule_fragments()
+        if self.layout is None:
+            ft, fl, flast, fmax, _ = sched
+            self.dstate, self.cache, emitted = self._mixed_fn(
+                self.params, self.dstate, self.cache, jnp.asarray(ft),
+                jnp.asarray(fl), jnp.asarray(flast), jnp.asarray(fmax))
+            em, active_mask = jax.device_get((emitted, self.dstate.active))
+        else:
+            ft, fl, flast, fmax, fskip, fcols, frent = sched
+            (self.dstate, self.cache, self.bstate, emitted,
+             stalls) = self._mixed_fn(
+                self.params, self.dstate, self.cache, self.bstate,
+                jnp.asarray(ft), jnp.asarray(fl), jnp.asarray(flast),
+                jnp.asarray(fmax), jnp.asarray(fskip), jnp.asarray(fcols),
+                jnp.asarray(frent))
+            em, active_mask, stalls, tables_d, ref_d = jax.device_get(
+                (emitted, self.dstate.active, stalls,
+                 self.cache["block_tables"], self.bstate.refcount))
+            self._tables_host = np.asarray(tables_d).copy()
+            self._ref_host = np.asarray(ref_d).copy()
+            self.stalls += int(stalls)
+        self.host_syncs += 1
+        self.device_ticks += 1
+        fin_set = set(finishing)
+        for slot in finishing:
+            # PREFILL -> DECODE: the final fragment's argmax is the first
+            # token (what monolithic admission paid one sync for)
+            del self._jobs[slot]
+            self.pool.set_phase(slot, pool_lib.PHASE_DECODE)
+            self.baseline_syncs += 1
+        finished: list[Request] = []
+        for slot, req in list(self.active.items()):
+            if slot in self._jobs:
+                continue               # mid-prefill: nothing emitted yet
+            new_toks = [int(t) for t in em[slot] if t != NO_TOKEN]
+            req.out.extend(new_toks)
+            if slot not in fin_set:
+                self.decode_tokens += len(new_toks)
+                self.baseline_syncs += len(new_toks)
+            if not active_mask[slot]:
+                finished.append(req)
+                del self.active[slot]
+                self._retire_slot(slot, req)
+        return finished
+
     # -- one decode chunk over all active slots -----------------------------
     def step(self) -> list[Request]:
-        """Advance every active slot up to `chunk` tokens; one host sync."""
+        """Advance every active slot up to `chunk` tokens; one host sync.
+
+        With chunked prefill, while any slot is still consuming prompt
+        fragments the engine ticks the unified prefill/decode step
+        instead (one token per decoding slot, one fragment per
+        prefilling slot, bounded latency); once every prompt is absorbed
+        it returns to multi-token decode chunks."""
         finished: list[Request] = []
         if self._finished_instant:
             finished, self._finished_instant = self._finished_instant, []
         if not self.active:
             return finished
+        if self.chunked and self._jobs:
+            return finished + self._mixed_step()
         if self.layout is None:
             self.dstate, self.cache, emitted, iters = self._chunk_fn(
                 self.params, self.dstate, self.cache)
@@ -684,7 +1040,13 @@ class ServingEngine:
 
     def run_to_completion(self, requests: list[Request], max_ticks=10_000):
         """Continuous batching: admit whenever slots free up, decode in
-        device-resident chunks.  Returns (done, device decode ticks)."""
+        device-resident chunks.  Returns (done, device decode ticks).
+
+        Raises ``RuntimeError`` when ``max_ticks`` is exhausted with
+        requests still pending or active — the pre-fix behavior silently
+        returned only the finished subset, so a too-small budget looked
+        like a successful (shorter) run.  Partial outputs stay on the
+        undrained ``Request`` objects for inspection."""
         pending = list(requests)
         done = []
         start_ticks = self.device_ticks
@@ -700,6 +1062,17 @@ class ServingEngine:
                         f"drain")
                 break
             done += self.step()
+        if self._finished_instant:     # complete, just not yet reported
+            done += self._finished_instant
+            self._finished_instant = []
+        if pending or self.active:
+            rids = sorted([r.rid for r in self.active.values()] +
+                          [r.rid for r in pending])
+            raise RuntimeError(
+                f"max_ticks={max_ticks} exhausted with {len(self.active)} "
+                f"active and {len(pending)} pending requests undrained "
+                f"(rids {rids}); partial outputs remain on the Request "
+                f"objects")
         return done, self.device_ticks - start_ticks
 
     # -- accounting ---------------------------------------------------------

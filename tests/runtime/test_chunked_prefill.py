@@ -1,0 +1,289 @@
+"""Chunked prefill: the prompt as outsourced fragments.
+
+The paper's cores never receive a whole job at once — fragments are
+outsourced incrementally as capacity appears.  The contract under test:
+
+* ``model.prefill_chunk`` is bit-exact against the monolithic prefill on
+  both cache layouts, fragment size be damned (aligned or not with the
+  block size), and a length-1 fragment is exactly a decode step;
+* the chunked-prefill engine is token-exact against monolithic
+  admission on mixed long/short workloads — including a long prompt
+  admitted mid-decode, which must not perturb the tokens of
+  already-active slots;
+* paged chains grow chunk-granularly under the §5.1 worst-case
+  reservation, and prefix-block sharing keeps working when the shared
+  prefix spans a chunk boundary;
+* the per-tick token budget bounds how much prefill one tick absorbs;
+* slots move PHASE_PREFILL -> PHASE_DECODE -> PHASE_IDLE through the
+  pool ledger.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models import model
+from repro.runtime import paging
+from repro.runtime import pool as pool_lib
+from repro.runtime.serve import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=1, d_model=64,
+                  vocab=128)
+    params = model.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    return cfg, params
+
+
+def _mixed_requests(n_short=4, long_len=30):
+    """Short prompts plus one long one (the head-of-line blocker)."""
+    rng = np.random.default_rng(5)
+    reqs = [Request(i, rng.integers(1, 100,
+                                    size=int(rng.integers(4, 12)))
+                    .astype(np.int32),
+                    max_new=int(rng.integers(4, 10)))
+            for i in range(n_short)]
+    reqs.append(Request(n_short,
+                        rng.integers(1, 100, size=long_len)
+                        .astype(np.int32), max_new=6))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# model level: fragment-by-fragment == monolithic, bit for bit
+# ---------------------------------------------------------------------------
+
+def _drive_chunks(params, cfg, cache, toks, lengths, C):
+    """Feed left-aligned fragments until every row consumed its prompt;
+    returns the final-fragment logits per row."""
+    bsz = toks.shape[0]
+    cur = np.zeros(bsz, np.int32)
+    last_logits = np.zeros((bsz, cfg.vocab_padded), np.float32)
+    while np.any(cur < lengths):
+        frag = np.zeros((bsz, C), np.int32)
+        fl = np.zeros(bsz, np.int32)
+        for b in range(bsz):
+            take = min(C, int(lengths[b] - cur[b]))
+            if take > 0:
+                frag[b, :take] = toks[b, cur[b]:cur[b] + take]
+                fl[b] = take
+        lg, cache = model.prefill_chunk(params, jnp.asarray(frag),
+                                        jnp.asarray(fl), cache, cfg)
+        lg = np.asarray(lg)
+        for b in range(bsz):
+            if fl[b] and cur[b] + fl[b] >= lengths[b]:
+                last_logits[b] = lg[b]
+            cur[b] += fl[b]
+    return last_logits, cache
+
+
+@pytest.mark.parametrize("C", [4, 5])
+def test_prefill_chunk_matches_monolithic_contiguous(setup, C):
+    cfg, params = setup
+    max_seq = 32
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (3, 11),
+                                         1, cfg.vocab), np.int32)
+    lengths = np.asarray([11, 5, 8], np.int32)
+    lm, cm = model.prefill(params, {"tokens": jnp.asarray(toks)}, cfg,
+                           max_seq, lengths=jnp.asarray(lengths))
+    cache = model.init_cache(cfg, 3, max_seq, dtype=jnp.float32)
+    lc, cache = _drive_chunks(params, cfg, cache, toks, lengths, C)
+    np.testing.assert_array_equal(np.asarray(lm), lc)
+    np.testing.assert_array_equal(np.asarray(cm["pos"]),
+                                  np.asarray(cache["pos"]))
+    for b, s in enumerate(lengths):
+        np.testing.assert_array_equal(np.asarray(cm["k"])[:, b, :s],
+                                      np.asarray(cache["k"])[:, b, :s])
+    # decode continuation from the chunk-built cache is a decode step
+    tok = jnp.argmax(lm, -1).astype(jnp.int32)
+    l1, _ = model.decode_step(params, tok, cm, cfg)
+    l2, _ = model.decode_step(params, tok, cache, cfg)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_prefill_chunk_matches_monolithic_paged(setup):
+    cfg, params = setup
+    max_seq, bs = 32, 8
+    layout = model.PagedLayout(block_size=bs, n_blocks=16)
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (2, 11),
+                                         1, cfg.vocab), np.int32)
+    lengths = np.asarray([11, 9], np.int32)
+    lm, cm = model.prefill(params, {"tokens": jnp.asarray(toks)}, cfg,
+                           max_seq, lengths=jnp.asarray(lengths))
+    cache = model.init_cache(cfg, 2, max_seq, dtype=jnp.float32,
+                             layout=layout)
+    # identity chains, like the static paged prefill
+    cache["block_tables"] = jnp.arange(8, dtype=jnp.int32).reshape(2, 4)
+    lc, cache = _drive_chunks(params, cfg, cache, toks, lengths, C=4)
+    np.testing.assert_array_equal(np.asarray(lm), lc)
+    tok = jnp.argmax(lm, -1).astype(jnp.int32)
+    for _ in range(10):        # crosses a block boundary
+        l1, cm = model.decode_step(params, tok, cm, cfg)
+        l2, cache = model.decode_step(params, tok, cache, cfg)
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+        tok = jnp.argmax(l1, -1).astype(jnp.int32)
+
+
+def test_prefill_chunk_rejects_unsupported_families(setup):
+    cfg_ssm = reduced(get_arch("mamba2-780m"))
+    with pytest.raises(ValueError, match="chunked prefill"):
+        model.prefill_chunk({}, jnp.zeros((1, 4), jnp.int32),
+                            jnp.ones((1,), jnp.int32), {}, cfg_ssm)
+
+
+# ---------------------------------------------------------------------------
+# engine level: token-exact continuous batching, no head-of-line stalls
+# ---------------------------------------------------------------------------
+
+def test_chunked_engine_token_exact_vs_monolithic(setup):
+    cfg, params = setup
+    e_m = ServingEngine(params, cfg, n_slots=3, max_seq=48)
+    done_m, _ = e_m.run_to_completion(_mixed_requests())
+    e_c = ServingEngine(params, cfg, n_slots=3, max_seq=48,
+                        chunked_prefill=True, prefill_chunk_tokens=8)
+    done_c, _ = e_c.run_to_completion(_mixed_requests())
+    assert {r.rid: r.out for r in done_m} == {r.rid: r.out for r in done_c}
+    assert e_c.pool.used == 0
+    # one compile for every prompt length (no pow2 span buckets), and the
+    # engine returned to multi-token decode chunks once prompts drained
+    assert not e_c._jobs
+
+
+@pytest.mark.parametrize("C", [8, 5])
+def test_chunked_engine_token_exact_paged(setup, C):
+    """Paged chunk-granular renting: exact tokens, clean pool, no stalls
+    — with the fragment size aligned and unaligned to the block size."""
+    cfg, params = setup
+    e_m = ServingEngine(params, cfg, n_slots=3, max_seq=48, paged=True,
+                        block_size=8, n_blocks=20)
+    done_m, _ = e_m.run_to_completion(_mixed_requests())
+    e_c = ServingEngine(params, cfg, n_slots=3, max_seq=48, paged=True,
+                        block_size=8, n_blocks=20, chunked_prefill=True,
+                        prefill_chunk_tokens=C)
+    done_c, _ = e_c.run_to_completion(_mixed_requests())
+    assert {r.rid: r.out for r in done_m} == {r.rid: r.out for r in done_c}
+    assert e_c.stalls == 0
+    assert e_c.pool.used == 0
+    assert int(paging.blocks_in_use(e_c.bstate)) == 0
+    paging.check_invariants(e_c.bstate, e_c.cache["block_tables"])
+
+
+def test_long_prompt_mid_decode_does_not_perturb_active_slots(setup):
+    """The mixed tick's whole point: outsourcing a long prompt fragment
+    by fragment must leave already-active slots' token streams exactly
+    as a decode-only run produces them."""
+    cfg, params = setup
+    short = [Request(i, np.arange(1 + i, 9 + i, dtype=np.int32),
+                     max_new=10) for i in range(2)]
+
+    e_solo = ServingEngine(params, cfg, n_slots=4, max_seq=64,
+                           chunked_prefill=True, prefill_chunk_tokens=8)
+    done_solo, _ = e_solo.run_to_completion(
+        [Request(r.rid, r.prompt, max_new=r.max_new) for r in short])
+    solo = {r.rid: r.out for r in done_solo}
+
+    eng = ServingEngine(params, cfg, n_slots=4, max_seq=64,
+                        chunked_prefill=True, prefill_chunk_tokens=8)
+    assert eng.admit_many(short) == 2
+    eng.step()                       # both actives are decoding
+    long_req = Request(9, np.arange(1, 41, dtype=np.int32), max_new=4)
+    assert eng.admit(long_req)       # 40 tokens: 5 fragment ticks
+    done = []
+    while eng.active:
+        done += eng.step()
+    got = {r.rid: r.out for r in done}
+    assert {0, 1, 9} == set(got)
+    assert got[0] == solo[0] and got[1] == solo[1]
+
+
+def test_prefix_sharing_across_chunk_boundary(setup):
+    """A chain becomes shareable only once written: admit the source,
+    let its prefill finish, then admit a sharer whose 2-block shared
+    prefix spans two fragments — the sharer skips the shared recompute
+    and both streams stay exact vs the unshared engine."""
+    cfg, params = setup
+    base = np.arange(1, 21, dtype=np.int32)      # 2 full 8-blocks + tail
+    tail = np.concatenate([base, [77, 78]]).astype(np.int32)
+
+    def run(sharing):
+        eng = ServingEngine(params, cfg, n_slots=3, max_seq=48,
+                            paged=True, block_size=8, n_blocks=20,
+                            chunked_prefill=True, prefill_chunk_tokens=8,
+                            prefix_sharing=sharing)
+        r0 = Request(0, base, max_new=12)
+        assert eng.admit(r0)
+        for _ in range(4):           # drain r0's 3 fragments + decode
+            eng.step()
+        r1 = Request(1, tail, max_new=6)
+        assert eng.admit(r1)
+        done = []
+        while eng.active:
+            done += eng.step()
+        paging.check_invariants(eng.bstate, eng.cache["block_tables"])
+        assert int(paging.blocks_in_use(eng.bstate)) == 0
+        return {r.rid: r.out for r in done}, eng
+
+    out_s, eng_s = run(True)
+    out_u, eng_u = run(False)
+    assert out_s == out_u
+    assert eng_s.shared_block_hits == 2          # both prefix blocks
+    assert eng_u.shared_block_hits == 0
+    assert eng_s.stalls == 0
+
+
+def test_tick_token_budget_bounds_prefill_per_tick(setup):
+    """Two long prompts under a one-fragment budget: the scheduler
+    serializes them (bounded per-tick latency) and outputs are still
+    exact vs the unbudgeted engine."""
+    cfg, params = setup
+    reqs = [Request(0, np.arange(1, 25, dtype=np.int32), max_new=4),
+            Request(1, np.arange(2, 26, dtype=np.int32), max_new=4)]
+
+    eng = ServingEngine(params, cfg, n_slots=2, max_seq=48,
+                        chunked_prefill=True, prefill_chunk_tokens=8,
+                        max_prefill_tokens_per_tick=8)
+    assert eng.admit_many([Request(r.rid, r.prompt, max_new=r.max_new)
+                           for r in reqs]) == 2
+    eng.step()
+    # one fragment granted, the other job starved this tick
+    cursors = sorted(j.cursor for j in eng._jobs.values())
+    assert cursors == [0, 8]
+    done = []
+    while eng.active:
+        done += eng.step()
+
+    free = ServingEngine(params, cfg, n_slots=2, max_seq=48,
+                         chunked_prefill=True, prefill_chunk_tokens=8)
+    done_f, _ = free.run_to_completion(reqs)
+    assert {r.rid: r.out for r in done} == {r.rid: r.out for r in done_f}
+
+
+def test_phase_ledger_tracks_fragment_lifecycle(setup):
+    """PHASE_PREFILL while fragments are outsourced, PHASE_DECODE once
+    the prompt is absorbed, PHASE_IDLE after retirement."""
+    cfg, params = setup
+    eng = ServingEngine(params, cfg, n_slots=2, max_seq=48,
+                        chunked_prefill=True, prefill_chunk_tokens=8)
+    req = Request(0, np.arange(1, 21, dtype=np.int32), max_new=3)
+    assert eng.admit(req)
+    slot = req.slot
+    assert eng.pool.phase_of(slot) == pool_lib.PHASE_PREFILL
+    eng.step()                                   # fragment 1 of 3
+    assert eng.pool.phase_of(slot) == pool_lib.PHASE_PREFILL
+    while eng._jobs:
+        eng.step()
+    assert eng.pool.phase_of(slot) == pool_lib.PHASE_DECODE
+    while eng.active:
+        eng.step()
+    assert eng.pool.phase_of(slot) == pool_lib.PHASE_IDLE
+    pool_lib.check_invariants(eng.pool.state)
+
+
+def test_chunked_rejects_unsupported_families(setup):
+    cfg_ssm = reduced(get_arch("mamba2-780m"))
+    params = model.init(jax.random.PRNGKey(0), cfg_ssm, jnp.float32)
+    with pytest.raises(ValueError, match="chunked prefill"):
+        ServingEngine(params, cfg_ssm, n_slots=2, max_seq=32,
+                      chunked_prefill=True)

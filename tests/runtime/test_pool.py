@@ -199,3 +199,53 @@ def test_serving_engine_pool_is_shared_discipline():
     assert int(pool_lib.used(eng.pool.state)) == 0
     pool_lib.check_invariants(eng.pool.state)
     pool_lib.check_invariants(em.pool_state)
+
+
+def test_set_phase_lifecycle_and_release_reset():
+    """Phase follows the fragment lifecycle: IDLE on a free unit (by
+    invariant), PREFILL/DECODE while rented, reset to IDLE by release."""
+    state = pool_lib.init_pool(3)
+    state, u = pool_lib.rent(state)
+    u = int(u)
+    assert int(state.phase[u]) == pool_lib.PHASE_IDLE
+    state = pool_lib.set_phase(state, u, pool_lib.PHASE_PREFILL)
+    assert int(state.phase[u]) == pool_lib.PHASE_PREFILL
+    state = pool_lib.set_phase(state, u, pool_lib.PHASE_DECODE)
+    assert int(state.phase[u]) == pool_lib.PHASE_DECODE
+    pool_lib.check_invariants(state)
+    state, status = pool_lib.release(state, u)
+    assert int(status) == pool_lib.OK
+    assert int(state.phase[u]) == pool_lib.PHASE_IDLE
+    pool_lib.check_invariants(state)
+
+
+def test_set_phase_total_on_free_or_bad_units():
+    """set_phase is a total transition: free or out-of-range units leave
+    the state unchanged (the host wrapper raises instead)."""
+    state = pool_lib.init_pool(2)
+    s2 = pool_lib.set_phase(state, 0, pool_lib.PHASE_DECODE)   # free unit
+    assert int(s2.phase[0]) == pool_lib.PHASE_IDLE
+    s3 = pool_lib.set_phase(state, 7, pool_lib.PHASE_DECODE)   # bad unit
+    np.testing.assert_array_equal(np.asarray(s3.phase),
+                                  np.asarray(state.phase))
+    from repro.core.supervisor import CorePool
+    pool = CorePool(2)
+    with pytest.raises(ValueError, match="not rented"):
+        pool.set_phase(0, pool_lib.PHASE_DECODE)
+    u = pool.rent()
+    pool.set_phase(u, pool_lib.PHASE_PREFILL)
+    assert pool.phase_of(u) == pool_lib.PHASE_PREFILL
+    pool.release(u)
+    assert pool.phase_of(u) == pool_lib.PHASE_IDLE
+    pool.check_invariants()
+
+
+def test_release_many_resets_phase():
+    state = pool_lib.init_pool(3)
+    state, units = pool_lib.rent_many(state, jnp.ones((3,), bool))
+    for u in units:
+        state = pool_lib.set_phase(state, int(u), pool_lib.PHASE_DECODE)
+    state = pool_lib.release_many(state, jnp.asarray([True, True, False]))
+    assert [int(p) for p in state.phase] == \
+        [pool_lib.PHASE_IDLE, pool_lib.PHASE_IDLE, pool_lib.PHASE_DECODE]
+    pool_lib.check_invariants(state)

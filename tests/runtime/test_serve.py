@@ -138,6 +138,46 @@ def test_admit_prompt_exactly_max_seq():
     assert eng.pool.used == 0
 
 
+@pytest.mark.parametrize("paged", [False, True])
+def test_admit_rejects_empty_prompt(paged):
+    """Regression: lengths[i] = 0 in the packed prefill gathered the
+    'last token' from row -1 — a garbage first token.  Both layouts
+    reject up front, renting nothing."""
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=1, d_model=64,
+                  vocab=128)
+    params = model.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    kw = dict(paged=True, block_size=8, n_blocks=12) if paged else {}
+    eng = ServingEngine(params, cfg, n_slots=2, max_seq=48, **kw)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.admit(Request(0, np.zeros((0,), np.int32), max_new=4))
+    assert eng.pool.used == 0
+    # a valid batch containing one empty prompt rejects wholesale,
+    # before anything is rented or prefilled
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.admit_many([
+            Request(1, np.arange(1, 5, dtype=np.int32), max_new=4),
+            Request(2, np.zeros((0,), np.int32), max_new=4)])
+    assert eng.pool.used == 0
+
+
+def test_run_to_completion_max_ticks_raises_not_partial():
+    """Regression: exhausting max_ticks used to silently return only the
+    finished subset — pending/active requests vanished from the report."""
+    eng = _engine(n_slots=1, max_seq=64)
+    reqs = [Request(i, np.arange(1, 6, dtype=np.int32), max_new=20)
+            for i in range(3)]
+    with pytest.raises(RuntimeError, match="max_ticks=.* exhausted"):
+        eng.run_to_completion(reqs, max_ticks=5)
+    # partial outputs stay inspectable on the Request objects
+    assert len(reqs[0].out) > 0
+    # a sufficient budget still completes cleanly
+    eng2 = _engine(n_slots=1, max_seq=64)
+    done, _ = eng2.run_to_completion(
+        [Request(i, np.arange(1, 6, dtype=np.int32), max_new=20)
+         for i in range(3)])
+    assert {r.rid for r in done} == {0, 1, 2}
+
+
 def test_admit_max_new_zero_completes_instantly():
     eng = _engine(n_slots=1)
     r0 = Request(0, np.arange(1, 5, dtype=np.int32), max_new=0)
