@@ -26,12 +26,43 @@ def _time(fn, *args, reps=3):
 def run() -> list[str]:
     from repro.kernels.flash_attention import flash_attention
     from repro.kernels.massmap import massmap
+    from repro.kernels.paged_attention import (paged_attention,
+                                               paged_attention_ref)
     from repro.kernels.ssd_scan import ssd_chunked_kernel
     from repro.kernels.sumup import sumup
 
     rows = ["kernels.header,name,shape,us_per_call_interp,flops,bytes,"
             "intensity,bound_at_spec"]
     key = jax.random.PRNGKey(0)
+
+    # paged attention: block-table decode (PR 2's kernel) vs the ref.py
+    # oracle — GQA 4:1, 16-position blocks, random disjoint chains
+    b, h, hkv, d, n_pages, bs, nb = 4, 8, 2, 64, 32, 16, 4
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
+    kp = jax.random.normal(ks[1], (n_pages, bs, hkv, d), jnp.float32)
+    vp = jax.random.normal(ks[2], (n_pages, bs, hkv, d), jnp.float32)
+    rng = np.random.default_rng(0)
+    lengths = jnp.asarray(rng.integers(bs, nb * bs + 1, size=b), jnp.int32)
+    tables = np.full((b, nb), -1, np.int32)
+    perm = rng.permutation(n_pages)
+    i = 0
+    for r in range(b):
+        for j in range(-(-int(lengths[r]) // bs)):
+            tables[r, j] = perm[i]
+            i += 1
+    tables = jnp.asarray(tables)
+    got = paged_attention(q, kp, vp, tables, lengths)
+    want = paged_attention_ref(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    us = _time(paged_attention, q, kp, vp, tables, lengths)
+    skv = int(jnp.sum(lengths))
+    fl = 4.0 * h * d * skv                      # QK^T + PV over the chains
+    by = 2.0 * skv * hkv * d * 4                # the K/V pages streamed in
+    rows.append(f"kernels,paged_attention,({b}x{h}x{d};bs={bs}),{us:.0f},"
+                f"{fl:.0f},{by:.0f},{fl / by:.2f},"
+                f"{'memory' if fl / by < RIDGE else 'compute'}")
 
     # sumup: N floats -> 1; intensity ~ 1/4 (stream-bound by design)
     x = jax.random.normal(key, (8, 8192), jnp.float32)

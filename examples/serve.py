@@ -100,6 +100,21 @@ def main():
     assert out_f == out_c, "chunked prefill must be token-exact"
     print("token-exact with chunked prefill (fragments of 16)")
 
+    # speculative decoding: a drafter core (n-gram prompt lookup) runs
+    # ahead, one verify forward accepts up to spec_k+1 tokens per slot —
+    # greedy argmax verification keeps the output bit-exact, so the only
+    # possible outcome is fewer memory-bound decode forwards
+    spec_eng = ServingEngine(params, cfg, n_slots=4, max_seq=96, chunk=8,
+                             paged=True, block_size=16, n_blocks=16,
+                             speculative=True, spec_k=4)
+    out_s, _ = run(spec_eng, make_requests(cfg),
+                   "paged blocks + speculative decode")
+    assert out_s == out_c, "speculative decode must be token-exact"
+    st = spec_eng.spec_stats()
+    print(f"token-exact with speculative decode (spec_k=4): "
+          f"{st['tokens_per_forward']:.2f} tokens/forward at "
+          f"{st['acceptance_rate']:.2f} draft acceptance")
+
 
 if __name__ == "__main__":
     main()

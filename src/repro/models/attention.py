@@ -135,29 +135,44 @@ def decode_attention(q, k_cache, v_cache, cache_len):
     return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
 
 
+def offset_causal_mask(scores, q_pos):
+    """Position-offset causal mask: key position ``kpos`` is visible to
+    query column j iff ``kpos <= q_pos[:, j]``.
+
+    One mask, three consumers: prefill-continuation fragments
+    (:func:`chunk_attention`), their paged twin
+    (:func:`paged_chunk_attention`), and the **speculative verify
+    forward** — a draft fragment scored through this mask sees, at
+    column j, exactly the keys a sequential decode step at position
+    ``q_pos[:, j]`` would see, which is what makes greedy verification
+    bit-exact on both cache layouts.  ``scores`` is (B, H, C, Skv),
+    ``q_pos`` (B, C) absolute.
+    """
+    kpos = jnp.arange(scores.shape[-1])
+    return jnp.where(kpos[None, None, None, :] <= q_pos[:, None, :, None],
+                     scores, NEG_INF)
+
+
 def chunk_attention(q, k_cache, v_cache, q_pos):
     """Prefill-continuation attention: q (B, C, H, D) at absolute positions
     ``q_pos`` (B, C) against a (B, Smax, Hkv, D) cache whose rows already
     hold the chunk's own K/V (write-then-attend, like decode).
 
-    Causal through the offset: key position ``kpos`` is visible to query
-    column j iff ``kpos <= q_pos[:, j]`` — the position-offset causal mask
-    that makes an incrementally outsourced prompt fragment exact against
-    the cache built by earlier fragments.  ``decode_attention`` is the
-    C == 1 special case (``q_pos = cache_len - 1``); the masked tail
-    contributes exact zeros to the softmax, so chunked prefill reproduces
-    the monolithic prefill bit for bit (same reduction argument as the
-    paged/contiguous parity).
+    Causal through :func:`offset_causal_mask` — the mask that makes an
+    incrementally outsourced prompt fragment (or a speculative draft
+    fragment under verification) exact against the cache built by
+    earlier fragments.  ``decode_attention`` is the C == 1 special case
+    (``q_pos = cache_len - 1``); the masked tail contributes exact zeros
+    to the softmax, so chunked prefill reproduces the monolithic prefill
+    bit for bit (same reduction argument as the paged/contiguous
+    parity).
     """
     b, c, h, d = q.shape
     hkv = k_cache.shape[2]
     k = _repeat_kv(k_cache, h // hkv)
     v = _repeat_kv(v_cache, h // hkv)
     s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
-    s = s / jnp.sqrt(jnp.float32(d))
-    kpos = jnp.arange(k.shape[1])
-    s = jnp.where(kpos[None, None, None, :] <= q_pos[:, None, :, None],
-                  s, NEG_INF)
+    s = offset_causal_mask(s / jnp.sqrt(jnp.float32(d)), q_pos)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
 

@@ -876,7 +876,7 @@ def decode_step(params, token, cache, cfg: ArchConfig):
 
 
 def prefill_chunk(params, tokens, lengths, cache, cfg: ArchConfig,
-                  skip_until=None):
+                  skip_until=None, all_logits: bool = False):
     """Prefill *continuation*: consume one left-aligned prompt fragment
     per row against an existing cache, at each row's position offset.
 
@@ -900,7 +900,11 @@ def prefill_chunk(params, tokens, lengths, cache, cfg: ArchConfig,
       embeddings are not in token space — both keep the monolithic path.
 
     Returns ``(logits (B, V) at each row's last valid column, advanced
-    cache)``.
+    cache)``.  With ``all_logits=True`` the logits are returned for
+    *every* fragment column — ``(B, C, V)`` — which is what the
+    speculative verify tick needs: one forward scores all k+1 candidate
+    positions at once (columns past a row's length carry garbage; the
+    caller masks by length).
     """
     if cfg.family not in PAGED_FAMILIES or cfg.frontend:
         raise ValueError(
@@ -964,8 +968,11 @@ def prefill_chunk(params, tokens, lengths, cache, cfg: ArchConfig,
     x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"],
                                          cache["v"]))
     x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    x_last = x[jnp.arange(bsz), jnp.clip(lengths - 1, 0, span - 1)]
-    logits = _logits(x_last, params, cfg)
+    if all_logits:
+        logits = _logits(x, params, cfg)                   # (B, C, V)
+    else:
+        x_last = x[jnp.arange(bsz), jnp.clip(lengths - 1, 0, span - 1)]
+        logits = _logits(x_last, params, cfg)
     cache = dict(cache, k=ks, v=vs, pos=pos0 + lengths)
     return logits, cache
 

@@ -1,0 +1,139 @@
+"""Device-resident n-gram drafter: the cheap core that runs ahead.
+
+The paper's central pattern is a core outsourcing part of its job to a
+neighbour and reconciling the result through the supervisor (PAPER.md
+§§4-5).  Speculative decoding is that pattern on the decode hot path:
+this module is the *drafter core* — it proposes up to ``spec_k``
+candidate continuation tokens per decoding slot by prompt-lookup
+(n-gram matching against the slot's own recent token stream), and the
+verify forward (`serve.build_spec_tick`) is the supervisor-coordinated
+reconciliation that accepts the longest correct prefix.
+
+The drafter is deliberately model-free: a bigram match over a per-slot
+ring of recent tokens costs a few vectorized compares — nothing next to
+one transformer forward — and greedy-argmax verification makes the
+scheme *bit-exact*: a wrong draft costs speculated work, never a wrong
+token.  The fallback when no n-gram matches is an empty draft, which
+degrades the spec tick to exactly the status-quo single greedy step.
+
+State discipline mirrors the serving supervisor: every field is a
+fixed-shape device array, every transition is pure and jittable, and
+the invariant is
+
+    ``hist[slot]`` holds the slot's consumed token stream (prompt +
+    emitted tokens), newest last, EXCLUDING the pending input token
+    ``DecodeState.tokens[slot]`` — so the match context is the bigram
+    ``(hist[:, -1], tokens)`` and a proposed continuation starts right
+    after an earlier occurrence of that bigram.
+
+``count`` tracks how many trailing positions of each row are valid;
+a freshly rented slot resets to 0, which disables matching entirely.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class DraftState(NamedTuple):
+    """Per-slot drafter state; fixed shapes, device-resident."""
+
+    hist: jax.Array    # (n_slots, H) int32 — token stream, newest at end
+    count: jax.Array   # (n_slots,) int32 — valid trailing positions (<= H)
+
+    @property
+    def hist_len(self) -> int:
+        return self.hist.shape[1]
+
+
+def init_draft_state(n_slots: int, hist_len: int) -> DraftState:
+    return DraftState(hist=jnp.zeros((n_slots, hist_len), jnp.int32),
+                      count=jnp.zeros((n_slots,), jnp.int32))
+
+
+def abstract_draft_state(n_slots: int, hist_len: int) -> DraftState:
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+        init_draft_state(n_slots, hist_len))
+
+
+def push_tokens(state: DraftState, tokens: jax.Array,
+                counts: jax.Array) -> DraftState:
+    """Append ``counts[i]`` leading tokens of ``tokens[i]`` to row i.
+
+    ``tokens`` is (n_slots, W) left-aligned (the tick's consumed
+    fragment); rows with ``counts == 0`` are untouched.  The append is a
+    shift-free gather: concatenate and take the last H of the stream.
+    """
+    n, h = state.hist.shape
+    w = tokens.shape[1]
+    c = jnp.clip(jnp.asarray(counts, jnp.int32), 0, w)
+    merged = jnp.concatenate([state.hist, jnp.asarray(tokens, jnp.int32)],
+                             axis=1)                       # (n, H + W)
+    # the valid stream of row i ends at column H + c[i] - 1; keep its
+    # trailing H positions: columns c[i] .. c[i] + H - 1
+    cols = c[:, None] + jnp.arange(h, dtype=jnp.int32)[None, :]
+    hist = jnp.take_along_axis(merged, cols, axis=1)
+    return DraftState(hist=hist, count=jnp.minimum(state.count + c, h))
+
+
+def propose(state: DraftState, tokens: jax.Array, spec_k: int):
+    """Draft up to ``spec_k`` continuation tokens per slot.
+
+    ``tokens`` (n_slots,) is each slot's pending input token.  The match
+    context is the bigram ``(hist[:, -1], tokens)``; the draft is the
+    ``spec_k`` tokens that followed its *latest* earlier occurrence in
+    the history.  Returns ``(draft (n, spec_k) int32, draft_len (n,)
+    int32)`` — ``draft_len == 0`` (no match / too little history) is the
+    single-greedy-step fallback, so acceptance can never fall below the
+    non-speculative status quo.
+    """
+    hist, count = state.hist, state.count
+    n, h = hist.shape
+    tokens = jnp.asarray(tokens, jnp.int32)
+    # candidate positions j: bigram (hist[j], hist[j+1]) == (hist[-1],
+    # tokens), both inside the valid window, with at least one
+    # continuation token available inside hist (j + 2 <= H - 1)
+    j = jnp.arange(h - 2, dtype=jnp.int32)                 # (H-2,)
+    valid_from = h - count                                  # (n,)
+    match = (hist[:, :-2] == hist[:, -1:]) \
+        & (hist[:, 1:-1] == tokens[:, None]) \
+        & (j[None, :] >= valid_from[:, None]) \
+        & (count[:, None] >= 3)       # need context + >=1 continuation
+    # among matches, prefer the one with the longest usable continuation
+    # (a constant run's *latest* occurrence sits at the history edge
+    # with almost nothing after it), breaking ties toward recency
+    len_j = jnp.minimum(h - 2 - j, spec_k)                  # (H-2,)
+    score = jnp.where(match, len_j[None, :] * h + j[None, :], -1)
+    pick = jnp.argmax(score, axis=1).astype(jnp.int32)      # (n,)
+    have = jnp.max(score, axis=1) >= 0
+    best = jnp.where(have, pick, 0)
+    # continuation tokens hist[best+2 .. ]; clamp gathers for no-match rows
+    cols = best[:, None] + 2 + jnp.arange(spec_k, dtype=jnp.int32)[None, :]
+    draft = jnp.take_along_axis(hist, jnp.clip(cols, 0, h - 1), axis=1)
+    avail = h - best - 2                                    # tokens in hist
+    draft_len = jnp.where(have, jnp.minimum(avail, spec_k), 0) \
+        .astype(jnp.int32)
+    return draft, draft_len
+
+
+# -- host-side admission helpers ---------------------------------------------
+
+def reset_slot(state: DraftState, slot: int) -> DraftState:
+    """A freshly rented slot starts with no history (matching disabled
+    until fragments/tokens are pushed)."""
+    return state._replace(count=state.count.at[slot].set(0))
+
+
+def seed_slot(state: DraftState, slot: int, prompt) -> DraftState:
+    """Monolithic admission: the whole prompt was consumed by one
+    prefill call, so the slot's history is the prompt tail (the pending
+    input token — the prefill argmax — stays out, per the invariant)."""
+    h = state.hist_len
+    tail = np.asarray(prompt, np.int32)[-h:]
+    hist = state.hist.at[slot, h - len(tail):].set(jnp.asarray(tail))
+    return DraftState(hist=hist,
+                      count=state.count.at[slot].set(len(tail)))

@@ -122,32 +122,59 @@ def extend_chains(state: BlockPoolState, tables: jax.Array,
     return admit_chains(state, flat, flat), tables
 
 
-def grow_for_decode(state: BlockPoolState, tables: jax.Array,
-                    pos: jax.Array, active: jax.Array, *, block_size: int):
-    """One decode tick's block growth, fully on device.
+def grow_to_cover(state: BlockPoolState, tables: jax.Array,
+                  last_pos: jax.Array, active: jax.Array, *,
+                  block_size: int, max_rounds: int = 1):
+    """Rent blocks until each active chain covers write position
+    ``last_pos`` (inclusive), fully on device.
 
-    Every active slot whose next write position ``pos`` falls in a block
-    its chain doesn't cover yet rents exactly one block via a single
-    vectorized :func:`pool.rent_many`.  Returns
-    ``(state, tables, stalled)`` where ``stalled`` marks slots that
-    needed a block the pool couldn't grant (the engine's admission-time
-    reservation makes this unreachable; it is the safety valve, not the
-    plan — a stalled slot must be retired, never written).
+    One decode step needs at most one new block per tick
+    (:func:`grow_for_decode` is the ``max_rounds=1`` special case), but
+    a **speculative verify fragment** writes up to ``spec_k + 1``
+    positions at once and may cross several block boundaries — hence
+    the static loop of vectorized :func:`pool.rent_many` rounds, each
+    granting one block per still-deficient chain and appending it at
+    the chain's current end.  Rollback safety: a rewound (rejected)
+    draft leaves its blocks rented — they sit inside the admission-time
+    §5.1 worst-case reservation, are overwritten by the next fragment's
+    write-then-attend, and are released with the chain at retirement,
+    so speculation introduces no new stall mode.
+
+    Returns ``(state, tables, stalled)`` where ``stalled`` marks slots
+    whose target is still uncovered after ``max_rounds`` (unreachable
+    under the reservation; the safety valve, not the plan — a stalled
+    slot must not be written).
     """
     n_slots, max_blocks = tables.shape
-    need_idx = pos // block_size
-    have = jnp.sum(tables >= 0, axis=1).astype(jnp.int32)
-    need = jnp.asarray(active, bool) & (need_idx >= have)
-    pool, units = pool_lib.rent_many(state.pool, need)
-    granted = units >= 0
+    need_blocks = (jnp.asarray(last_pos, jnp.int32) // block_size + 1)
+    active = jnp.asarray(active, bool)
     row = jnp.arange(n_slots)
-    col = jnp.where(granted, jnp.clip(need_idx, 0, max_blocks - 1),
-                    max_blocks)
-    tables = tables.at[row, col].set(units, mode="drop")
-    refcount = state.refcount.at[
-        jnp.where(granted, units, state.n_blocks)].set(1, mode="drop")
-    stalled = need & ~granted
+    refcount = state.refcount
+    pool = state.pool
+    for _ in range(max_rounds):
+        have = jnp.sum(tables >= 0, axis=1).astype(jnp.int32)
+        need = active & (need_blocks > have)
+        pool, units = pool_lib.rent_many(pool, need)
+        granted = units >= 0
+        col = jnp.where(granted, jnp.clip(have, 0, max_blocks - 1),
+                        max_blocks)
+        tables = tables.at[row, col].set(units, mode="drop")
+        refcount = refcount.at[
+            jnp.where(granted, units, state.n_blocks)].set(1, mode="drop")
+    have = jnp.sum(tables >= 0, axis=1).astype(jnp.int32)
+    stalled = active & (need_blocks > have)
     return BlockPoolState(pool=pool, refcount=refcount), tables, stalled
+
+
+def grow_for_decode(state: BlockPoolState, tables: jax.Array,
+                    pos: jax.Array, active: jax.Array, *, block_size: int):
+    """One decode tick's block growth: every active slot whose next
+    write position ``pos`` falls in a block its chain doesn't cover yet
+    rents exactly one block via a single vectorized
+    :func:`pool.rent_many` (the ``max_rounds=1`` case of
+    :func:`grow_to_cover`)."""
+    return grow_to_cover(state, tables, pos, active,
+                         block_size=block_size, max_rounds=1)
 
 
 @jax.jit

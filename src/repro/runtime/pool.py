@@ -262,3 +262,10 @@ def check_invariants(state: SlotPoolState) -> None:
     n_used = int(np.sum(~free))
     n_avail = int(np.sum(free & ~disabled))
     assert n_used + n_avail + int(np.sum(disabled & free)) == n
+    # counter monotonicity: the high-water mark bounds current usage and
+    # never exceeds the rents ever granted.  Rollback-relevant: a
+    # speculative rewind releases nothing (rejected blocks stay rented
+    # until the chain retires), so `used` may only shrink through
+    # release transitions — these bounds catch a rewind that forged a
+    # free bit without going through one.
+    assert 0 <= n_used <= int(state.peak_used) <= int(state.created_total)

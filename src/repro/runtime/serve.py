@@ -54,6 +54,28 @@ mixed tick** (`build_mixed_tick`) advances all slots together:
   by one fragment — no head-of-line blocking, and the outputs stay
   token-exact vs monolithic admission.
 
+**Speculative decoding** (``ServingEngine(speculative=True)``) applies
+the paper's outsourcing pattern to the decode hot path itself: decode
+is memory-bound at one token per forward, so a cheap *drafter core*
+(`runtime/draft.py` — a device-resident n-gram matcher over each slot's
+recent token stream) runs ahead and proposes up to ``spec_k`` candidate
+tokens per DECODING slot, and the supervisor-coordinated **verify
+forward** (`build_spec_tick`) scores all slots' draft fragments in one
+``model.prefill_chunk`` call through the same position-offset causal
+mask chunked prefill uses — on both cache layouts:
+
+* acceptance takes the longest prefix where draft == argmax, plus the
+  bonus token the forward produced anyway: 1..``spec_k + 1`` tokens per
+  slot per forward, **bit-exact** vs non-speculative greedy decode (a
+  wrong draft costs speculated work, never a wrong token);
+* ``cache["pos"]`` rewinds past rejected drafts; the speculatively
+  written KV rows/pages are left dead — overwritten by the next
+  fragment's write-then-attend before the mask can read them, and paged
+  chains stay inside the admission-time §5.1 worst-case reservation, so
+  speculation adds no stall mode;
+* PREFILLING slots keep consuming prompt fragments in the same tick —
+  speculation composes with chunked prefill.
+
 Host Python keeps only what must be host-side: the rent/return ledger
 (`core/supervisor.CorePool`, itself a thin wrapper over the same jittable
 `runtime/pool` transitions), the prefix-hash map, the per-slot fragment
@@ -73,6 +95,7 @@ from repro.configs.base import ArchConfig
 from repro.core.supervisor import CorePool
 from repro.models import model as model_lib
 from repro.models.model import PagedLayout
+from repro.runtime import draft as draft_lib
 from repro.runtime import paging
 from repro.runtime import pool as pool_lib
 from repro.runtime.sharding import ShardingRules, use_rules
@@ -332,6 +355,383 @@ def build_mixed_tick(cfg: ArchConfig, *, chunk_tokens: int, eos_id: int,
     return jax.jit(tick_paged, donate_argnums=(2, 3))
 
 
+def build_spec_tick(cfg: ArchConfig, *, spec_k: int, chunk_tokens: int,
+                    eos_id: int, hist_len: int = 64,
+                    rules: Optional[ShardingRules] = None,
+                    jit: bool = True,
+                    paged: Optional[PagedLayout] = None):
+    """Jitted speculative decode tick: drafter cores run ahead, one
+    verify forward accepts k tokens per slot.
+
+    The paper's outsourcing pattern on the decode hot path: a cheap
+    device-resident n-gram drafter (`runtime/draft.py`) proposes up to
+    ``spec_k`` continuation tokens per DECODING slot, and a single
+    ``model.prefill_chunk`` forward over the ``(n_slots, W)`` draft
+    fragments (``W = chunk_tokens >= spec_k + 1``) scores every slot's
+    candidates at once through the same position-offset causal mask the
+    chunked-prefill machinery already uses — on both cache layouts.
+    Acceptance takes the longest prefix where draft == argmax plus the
+    one *bonus* token the verify forward produced anyway, so each
+    forward emits between 1 (drafter whiffed — the status quo) and
+    ``spec_k + 1`` tokens, and greedy argmax verification makes the
+    output **bit-exact** vs non-speculative decode.
+
+    Rollback: the fragment wrote K/V at ``pos0 .. pos0 + dlen``;
+    ``cache["pos"]`` rewinds to ``pos0 + n_emit`` and the rows past it
+    are left dead — the next fragment's write-then-attend overwrites
+    them before the mask can read them, and (paged) the chain stays
+    within the admission-time §5.1 worst-case reservation, so no new
+    stall mode appears.
+
+    Speculation composes with chunked prefill: PREFILLING slots keep
+    consuming host-scheduled prompt fragments in the same tick, exactly
+    as in :func:`build_mixed_tick`.
+
+    Contiguous: ``fn(params, state, dstate, cache, frag_tokens (n, W),
+    frag_len, frag_last, frag_max_new) -> (state, dstate, cache,
+    emitted (n, W), drafted, accepted)``.  Paged adds ``bstate`` after
+    ``cache`` plus ``frag_skip/frag_cols/frag_rent`` and returns a
+    ``stalls`` scalar.  ``drafted``/``accepted`` are per-tick totals of
+    proposed and accepted draft tokens (the acceptance-rate numerator /
+    denominator).  The cache (and block state) is donated.
+    """
+    assert chunk_tokens >= spec_k + 1, (chunk_tokens, spec_k)
+    W = chunk_tokens
+    propose, run = _spec_core(cfg, spec_k=spec_k, width=W, eos_id=eos_id,
+                              rules=rules)
+
+    if paged is None:
+        def tick(params, state: DecodeState, dstate, cache, frag_tokens,
+                 frag_len, frag_last, frag_max_new):
+            decode_rows = state.active
+            draft, dlen = propose(state, dstate, decode_rows)
+            frag_skip = jnp.zeros_like(frag_len)
+            return run(params, state, dstate, cache, decode_rows, draft,
+                       dlen, frag_tokens, frag_len, frag_last, frag_max_new,
+                       frag_skip)
+
+        if not jit:
+            return tick
+        return jax.jit(tick, donate_argnums=(2, 3))
+
+    def tick_paged(params, state: DecodeState, dstate, cache, bstate,
+                   frag_tokens, frag_len, frag_last, frag_max_new,
+                   frag_skip, frag_cols, frag_rent):
+        # 1. commit this tick's prompt-fragment blocks (host-picked)
+        bstate, tables = paging.extend_chains(
+            bstate, cache["block_tables"], frag_cols, frag_rent)
+        # 2. drafter proposal, then cover the whole verify fragment's
+        #    write span — it may cross several block boundaries
+        draft, dlen = propose(state, dstate, state.active)
+        bstate, tables, stalled = paging.grow_to_cover(
+            bstate, tables, cache["pos"] + dlen, state.active,
+            block_size=paged.block_size,
+            max_rounds=spec_k // paged.block_size + 1)
+        decode_rows = state.active & ~stalled
+        dlen = jnp.where(decode_rows, dlen, 0)
+        stalls = jnp.sum(stalled).astype(jnp.int32)
+        cache = dict(cache, block_tables=tables)
+        state, dstate, cache, emitted, drafted, accepted = run(
+            params, state, dstate, cache, decode_rows, draft, dlen,
+            frag_tokens, frag_len, frag_last, frag_max_new, frag_skip)
+        return state, dstate, cache, bstate, emitted, drafted, accepted, \
+            stalls
+
+    if not jit:
+        return tick_paged
+    return jax.jit(tick_paged, donate_argnums=(2, 3, 4))
+
+
+def _spec_core(cfg: ArchConfig, *, spec_k: int, width: int, eos_id: int,
+               rules: Optional[ShardingRules]):
+    """The draft/verify/accept core shared by the single spec tick
+    (:func:`build_spec_tick`, which composes with prompt fragments) and
+    the multi-iteration spec chunk (:func:`build_spec_chunk`).  Returns
+    ``(propose, run)`` closures."""
+    W = width
+
+    def propose(state: DecodeState, dstate: draft_lib.DraftState,
+                decode_rows):
+        draft, dlen = draft_lib.propose(dstate, state.tokens, spec_k)
+        # budget clamp: emitting dlen + 1 tokens must stay within
+        # max_new, so the fragment's writes stay inside the §5.1
+        # reservation (and max_seq) the engine took at admission
+        cap = jnp.maximum(state.max_new - state.n_out - 1, 0)
+        dlen = jnp.where(decode_rows, jnp.minimum(dlen, cap), 0)
+        return draft, dlen
+
+    def run(params, state: DecodeState, dstate, cache, decode_rows, draft,
+            dlen, frag_tokens, frag_len, frag_last, frag_max_new,
+            frag_skip):
+        assert frag_tokens.shape[1] == W, (frag_tokens.shape, W)
+        pos0 = cache["pos"]
+        # fragment assembly: a decoding slot runs [pending token,
+        # draft_1 .. draft_dlen]; a prefilling slot runs its
+        # host-scheduled prompt fragment
+        first_col = jnp.where(decode_rows, state.tokens, frag_tokens[:, 0])
+        dec_tail = jnp.pad(draft, ((0, 0), (0, W - 1 - spec_k)))
+        tail = jnp.where(decode_rows[:, None], dec_tail, frag_tokens[:, 1:])
+        tokens = jnp.concatenate([first_col[:, None], tail], axis=1)
+        lengths = jnp.where(decode_rows, 1 + dlen, frag_len)
+        with use_rules(rules):
+            logits, cache = model_lib.prefill_chunk(
+                params, tokens, lengths, cache, cfg, skip_until=frag_skip,
+                all_logits=True)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (n, W)
+
+        # -- verify: longest accepted prefix + bonus token ----------------
+        jcol = jnp.arange(spec_k, dtype=jnp.int32)
+        ok = (draft == greedy[:, :spec_k]) & (jcol[None, :] < dlen[:, None])
+        acc = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+        wcol = jnp.arange(W, dtype=jnp.int32)
+        # sequential greedy stops at the first EOS: truncate there
+        cand = wcol[None, :] <= acc[:, None]
+        is_eos = (greedy == eos_id) & cand
+        first_eos = jnp.min(jnp.where(is_eos, wcol[None, :], W), axis=1)
+        m = jnp.minimum(acc, first_eos)          # accepted draft tokens
+        n_emit = jnp.where(decode_rows, m + 1, 0)
+        emit_mask = decode_rows[:, None] & (wcol[None, :] < n_emit[:, None])
+        last_tok = jnp.take_along_axis(
+            greedy, jnp.clip(n_emit - 1, 0, W - 1)[:, None], axis=1)[:, 0]
+
+        # -- prefill rows: same bookkeeping as the mixed tick -------------
+        prefill_rows = ~decode_rows & (frag_len > 0)
+        done_pref = prefill_rows & frag_last
+        pref_tok = jnp.take_along_axis(
+            greedy, jnp.clip(frag_len - 1, 0, W - 1)[:, None], axis=1)[:, 0]
+        tok = jnp.where(decode_rows, last_tok,
+                        jnp.where(done_pref, pref_tok, state.tokens))
+        n_out = jnp.where(done_pref, 1,
+                          state.n_out + jnp.where(decode_rows, n_emit, 0))
+        max_new = jnp.where(done_pref, frag_max_new, state.max_new)
+        retire = decode_rows & ((tok == eos_id) | (n_out >= max_new))
+        active = (decode_rows & ~retire) | (done_pref & (max_new > 1))
+
+        emitted = jnp.where(
+            emit_mask, greedy,
+            jnp.where(done_pref[:, None] & (wcol[None, :] == 0),
+                      tok[:, None], NO_TOKEN))
+        # rewind: prefill_chunk advanced decode rows by 1 + dlen; the
+        # true position is pos0 + n_emit (rows past it are dead — the
+        # next fragment overwrites before the mask can read them)
+        cache = dict(cache, pos=jnp.where(decode_rows, pos0 + n_emit,
+                                          cache["pos"]))
+        # history: push the consumed inputs (pending token + accepted
+        # drafts) — the new pending token `tok` stays out, per the
+        # drafter's invariant.  Prompt history is seeded host-side at
+        # the PREFILL -> DECODE transition, so prefill rows push 0.
+        dstate = draft_lib.push_tokens(
+            dstate, tokens, jnp.where(decode_rows, n_emit, 0))
+        drafted = jnp.sum(jnp.where(decode_rows, dlen, 0))
+        accepted = jnp.sum(jnp.where(decode_rows, m, 0))
+        return (DecodeState(tok, n_out, max_new, active), dstate, cache,
+                emitted, drafted, accepted)
+
+    return propose, run
+
+
+def build_spec_chunk(cfg: ArchConfig, *, spec_k: int, eos_id: int,
+                     iters: int,
+                     rules: Optional[ShardingRules] = None,
+                     jit: bool = True,
+                     paged: Optional[PagedLayout] = None):
+    """Multi-iteration speculative decode chunk: up to ``iters`` verify
+    forwards per host sync — PR 1's sync economy composed with the
+    drafter, for the pure-decode phase (no prompt fragments pending).
+
+    Every loop iteration is one draft → verify → accept/rewind cycle
+    over all active slots (the :func:`_spec_core` the single tick also
+    runs); the loop exits early when every slot retires.  Contiguous:
+    ``fn(params, state, dstate, cache) -> (state, dstate, cache,
+    emitted (n, iters*(spec_k+1)), fwd, slot_fwd, drafted, accepted)``
+    where ``fwd`` counts executed verify forwards and ``slot_fwd`` the
+    decoding-slot forwards (the tokens-per-forward denominator).  Paged
+    adds the donated ``bstate`` and a ``stalls`` scalar.  The cache
+    (and block state) is donated.
+    """
+    W = spec_k + 1
+    propose, run = _spec_core(cfg, spec_k=spec_k, width=W, eos_id=eos_id,
+                              rules=rules)
+
+    def zero_frags(n):
+        return (jnp.zeros((n, W), jnp.int32), jnp.zeros((n,), jnp.int32),
+                jnp.zeros((n,), bool), jnp.zeros((n,), jnp.int32))
+
+    def iteration(params, st, ds, cache, bstate, decode_rows, draft, dlen):
+        ft, fl, flast, fmax = zero_frags(st.tokens.shape[0])
+        st, ds, cache, em, d_i, a_i = run(
+            params, st, ds, cache, decode_rows, draft, dlen, ft, fl,
+            flast, fmax, fl)        # frag_skip == zeros == fl
+        return st, ds, cache, em, d_i, a_i
+
+    if paged is None:
+        def chunk_fn(params, state: DecodeState, dstate, cache):
+            n = state.tokens.shape[0]
+            emitted0 = jnp.full((n, iters * W), NO_TOKEN, jnp.int32)
+            zeros = jnp.int32(0)
+
+            def cond(carry):
+                i, st = carry[0], carry[1]
+                return (i < iters) & jnp.any(st.active)
+
+            def body(carry):
+                i, st, ds, cache, emitted, sf, dr, ac = carry
+                decode_rows = st.active
+                draft, dlen = propose(st, ds, decode_rows)
+                st, ds, cache, em, d_i, a_i = iteration(
+                    params, st, ds, cache, None, decode_rows, draft, dlen)
+                emitted = jax.lax.dynamic_update_slice(emitted, em,
+                                                       (0, i * W))
+                sf = sf + jnp.sum(decode_rows).astype(jnp.int32)
+                return (i + jnp.int32(1), st, ds, cache, emitted, sf,
+                        dr + d_i, ac + a_i)
+
+            (fwd, state, dstate, cache, emitted, slot_fwd, drafted,
+             accepted) = jax.lax.while_loop(
+                cond, body, (zeros, state, dstate, cache, emitted0, zeros,
+                             zeros, zeros))
+            return (state, dstate, cache, emitted, fwd, slot_fwd, drafted,
+                    accepted)
+
+        if not jit:
+            return chunk_fn
+        return jax.jit(chunk_fn, donate_argnums=(2, 3))
+
+    def chunk_fn_paged(params, state: DecodeState, dstate, cache, bstate):
+        n = state.tokens.shape[0]
+        emitted0 = jnp.full((n, iters * W), NO_TOKEN, jnp.int32)
+        zeros = jnp.int32(0)
+
+        def cond(carry):
+            i, st = carry[0], carry[1]
+            return (i < iters) & jnp.any(st.active)
+
+        def body(carry):
+            i, st, ds, cache, bstate, emitted, sf, dr, ac, stalls = carry
+            draft, dlen = propose(st, ds, st.active)
+            bstate, tables, stalled = paging.grow_to_cover(
+                bstate, cache["block_tables"], cache["pos"] + dlen,
+                st.active, block_size=paged.block_size,
+                max_rounds=spec_k // paged.block_size + 1)
+            decode_rows = st.active & ~stalled
+            dlen = jnp.where(decode_rows, dlen, 0)
+            stalls = stalls + jnp.sum(stalled).astype(jnp.int32)
+            cache = dict(cache, block_tables=tables)
+            st, ds, cache, em, d_i, a_i = iteration(
+                params, st, ds, cache, bstate, decode_rows, draft, dlen)
+            emitted = jax.lax.dynamic_update_slice(emitted, em, (0, i * W))
+            sf = sf + jnp.sum(decode_rows).astype(jnp.int32)
+            return (i + jnp.int32(1), st, ds, cache, bstate, emitted, sf,
+                    dr + d_i, ac + a_i, stalls)
+
+        (fwd, state, dstate, cache, bstate, emitted, slot_fwd, drafted,
+         accepted, stalls) = jax.lax.while_loop(
+            cond, body, (zeros, state, dstate, cache, bstate, emitted0,
+                         zeros, zeros, zeros, zeros))
+        return (state, dstate, cache, bstate, emitted, fwd, slot_fwd,
+                drafted, accepted, stalls)
+
+    if not jit:
+        return chunk_fn_paged
+    return jax.jit(chunk_fn_paged, donate_argnums=(2, 3, 4))
+
+
+def build_solo_prefill_tick(cfg: ArchConfig, *, chunk_tokens: int,
+                            rules: Optional[ShardingRules] = None,
+                            jit: bool = True,
+                            paged: Optional[PagedLayout] = None):
+    """Cold-start fast path: with *no* slot decoding there is nobody to
+    protect from head-of-line blocking, so instead of a full-batch
+    fragment tick (which pays ``n_slots`` rows of compute for one
+    prefilling job) the engine packs up to ``chunk_tokens`` prompt
+    tokens for ONE job and runs them through a single-row
+    ``prefill_chunk`` against that slot's cache view.
+
+    Contiguous: ``fn(params, state, cache, slot, frag_tokens (1, Wp),
+    frag_len (1,), frag_last (1,), frag_max_new (1,)) -> (state, cache,
+    emitted (1,))`` — ``emitted`` carries the first token when the
+    packed chunk finished the prompt, else ``NO_TOKEN``.  Paged adds
+    ``bstate`` plus ``frag_skip/frag_cols/frag_rent`` (the cols/rent
+    arrays are full ``(n_slots, K)`` with only ``slot``'s row set, so
+    :func:`paging.extend_chains` is reused verbatim).  ``slot`` is a
+    traced scalar: one compile covers every slot.
+    """
+    W = chunk_tokens
+
+    def finish(state: DecodeState, slot, logits, frag_len, frag_last,
+               frag_max_new):
+        ftok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
+        done = frag_last[0]
+        mnew = frag_max_new[0]
+        state = DecodeState(
+            tokens=jnp.where(done, state.tokens.at[slot].set(ftok),
+                             state.tokens),
+            n_out=jnp.where(done, state.n_out.at[slot].set(1), state.n_out),
+            max_new=jnp.where(done, state.max_new.at[slot].set(mnew),
+                              state.max_new),
+            active=jnp.where(done, state.active.at[slot].set(mnew > 1),
+                             state.active))
+        emitted = jnp.where(done, ftok, NO_TOKEN)[None]
+        return state, emitted
+
+    if paged is None:
+        def tick(params, state: DecodeState, cache, slot, frag_tokens,
+                 frag_len, frag_last, frag_max_new):
+            assert frag_tokens.shape == (1, W), frag_tokens.shape
+            sub = {
+                "k": jax.lax.dynamic_slice_in_dim(cache["k"], slot, 1, 1),
+                "v": jax.lax.dynamic_slice_in_dim(cache["v"], slot, 1, 1),
+                "pos": jax.lax.dynamic_slice_in_dim(cache["pos"], slot, 1,
+                                                    0),
+            }
+            with use_rules(rules):
+                logits, sub = model_lib.prefill_chunk(
+                    params, frag_tokens, frag_len, sub, cfg)
+            cache = dict(
+                cache,
+                k=jax.lax.dynamic_update_slice_in_dim(cache["k"], sub["k"],
+                                                      slot, 1),
+                v=jax.lax.dynamic_update_slice_in_dim(cache["v"], sub["v"],
+                                                      slot, 1),
+                pos=jax.lax.dynamic_update_slice_in_dim(
+                    cache["pos"], sub["pos"], slot, 0))
+            state, emitted = finish(state, slot, logits, frag_len,
+                                    frag_last, frag_max_new)
+            return state, cache, emitted
+
+        if not jit:
+            return tick
+        return jax.jit(tick, donate_argnums=(2,))
+
+    def tick_paged(params, state: DecodeState, cache, bstate, slot,
+                   frag_tokens, frag_len, frag_last, frag_max_new,
+                   frag_skip, frag_cols, frag_rent):
+        assert frag_tokens.shape == (1, W), frag_tokens.shape
+        bstate, tables = paging.extend_chains(
+            bstate, cache["block_tables"], frag_cols, frag_rent)
+        # pages are global — only the bookkeeping rows need slicing
+        sub = {
+            "k": cache["k"], "v": cache["v"],
+            "pos": jax.lax.dynamic_slice_in_dim(cache["pos"], slot, 1, 0),
+            "block_tables": jax.lax.dynamic_slice_in_dim(tables, slot, 1,
+                                                         0),
+        }
+        with use_rules(rules):
+            logits, sub = model_lib.prefill_chunk(
+                params, frag_tokens, frag_len, sub, cfg,
+                skip_until=frag_skip)
+        cache = dict(cache, k=sub["k"], v=sub["v"], block_tables=tables,
+                     pos=jax.lax.dynamic_update_slice_in_dim(
+                         cache["pos"], sub["pos"], slot, 0))
+        state, emitted = finish(state, slot, logits, frag_len, frag_last,
+                                frag_max_new)
+        return state, cache, bstate, emitted
+
+    if not jit:
+        return tick_paged
+    return jax.jit(tick_paged, donate_argnums=(2, 3))
+
+
 def build_admit_step(cfg: ArchConfig, max_seq: int,
                      rules: Optional[ShardingRules] = None):
     """Jitted packed admission: batched prefill + scatter into rented slots.
@@ -514,7 +914,9 @@ class ServingEngine:
                  prefix_sharing: bool = True,
                  chunked_prefill: bool = False,
                  prefill_chunk_tokens: int = 16,
-                 max_prefill_tokens_per_tick: Optional[int] = None):
+                 max_prefill_tokens_per_tick: Optional[int] = None,
+                 speculative: bool = False, spec_k: int = 4,
+                 spec_hist: int = 64):
         self.params, self.cfg = params, cfg
         self.max_seq, self.eos_id, self.chunk = max_seq, eos_id, chunk
         self.pool = CorePool(n_slots)
@@ -575,6 +977,43 @@ class ServingEngine:
             self._mixed_fn = build_mixed_tick(
                 cfg, chunk_tokens=self._pchunk, eos_id=eos_id, rules=rules,
                 paged=self.layout)
+            # cold-start fast path: when no slot is decoding there is no
+            # fairness to protect, so ONE job gets its fragments packed
+            # up to the per-tick token budget through a single-row tick
+            # instead of paying n_slots rows per fragment
+            budget_eff = self._tick_budget if self._tick_budget is not None \
+                else self._pchunk * n_slots
+            self._solo_width = max(self._pchunk, min(budget_eff, max_seq))
+            self._solo_fn = build_solo_prefill_tick(
+                cfg, chunk_tokens=self._solo_width, rules=rules,
+                paged=self.layout)
+        self.spec = speculative
+        if speculative:
+            if cfg.family not in model_lib.PAGED_FAMILIES or cfg.frontend:
+                raise ValueError(
+                    f"speculative decoding rides the chunked-prefill "
+                    f"forward: causal attention caches "
+                    f"{model_lib.PAGED_FAMILIES} without a frontend only, "
+                    f"not {cfg.family!r} (frontend={cfg.frontend!r})")
+            if spec_k < 1:
+                raise ValueError("spec_k must be >= 1")
+            if spec_hist < 4:
+                raise ValueError("spec_hist must be >= 4 (bigram context "
+                                 "+ at least one continuation token)")
+            self._spec_k = int(spec_k)
+            self._spec_width = max(spec_k + 1,
+                                   self._pchunk if chunked_prefill else 0)
+            self.draft_state = draft_lib.init_draft_state(n_slots,
+                                                          int(spec_hist))
+            # the single tick composes with prompt fragments; the chunk
+            # runs up to `chunk` verify forwards per host sync once the
+            # engine is in the pure-decode phase (PR 1's sync economy)
+            self._spec_fn = build_spec_tick(
+                cfg, spec_k=self._spec_k, chunk_tokens=self._spec_width,
+                eos_id=eos_id, rules=rules, paged=self.layout)
+            self._spec_chunk_fn = build_spec_chunk(
+                cfg, spec_k=self._spec_k, eos_id=eos_id, iters=chunk,
+                rules=rules, paged=self.layout)
         self._finished_instant: list[Request] = []
         # accounting: host round-trips vs the one-sync-per-slot-per-tick
         # baseline an un-refactored engine would have paid
@@ -586,6 +1025,14 @@ class ServingEngine:
         self.shared_block_hits = 0
         self.kv_bytes_allocated = 0
         self.tokens_finished = 0
+        # speculative decode economics: verify forwards that had >= 1
+        # decoding slot, the decode tokens they emitted, and the
+        # drafted/accepted token totals (acceptance rate)
+        self.spec_forwards = 0
+        self.spec_slot_forwards = 0
+        self.spec_decode_tokens = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
         # per-slot / per-block KV footprint (all cache leaves that scale
         # with the slot or block count; `pos`/tables bookkeeping excluded)
         if self.layout is None:
@@ -694,6 +1141,11 @@ class ServingEngine:
             self.active[req.slot] = req
             self._need_first.add(req.slot)
             self.pool.set_phase(req.slot, pool_lib.PHASE_DECODE)
+            if self.spec:
+                # the drafter's match window is the consumed stream;
+                # the pending first token (device-side argmax) stays out
+                self.draft_state = draft_lib.seed_slot(
+                    self.draft_state, req.slot, req.prompt)
         return consumed
 
     def _max_new_eff(self, req: Request, plen: int) -> int:
@@ -842,17 +1294,20 @@ class ServingEngine:
         self.baseline_syncs += g
 
     # -- chunked prefill: fragment scheduler + unified tick ------------------
-    def _schedule_fragments(self):
+    def _schedule_fragments(self, width: Optional[int] = None,
+                            only_slot: Optional[int] = None):
         """Pick this tick's prompt fragments (host side): one fragment of
-        up to ``prefill_chunk_tokens`` per PREFILLING slot, oldest job
-        first, bounded by the per-tick token budget.  Paged jobs also get
-        their fragment's blocks picked from the free mirror here — the
-        §5.1 reservation taken at admission guarantees the pick succeeds,
-        and the ids are committed on device by the tick itself
-        (`paging.extend_chains`), so host and device free lists cannot
-        race."""
+        up to ``width`` (default ``prefill_chunk_tokens``) per PREFILLING
+        slot, oldest job first, bounded by the per-tick token budget.
+        With ``only_slot`` given, only that job is scheduled (the
+        cold-start solo path packs one job up to the tick budget).
+        Paged jobs also get their fragment's blocks picked from the free
+        mirror here — the §5.1 reservation taken at admission guarantees
+        the pick succeeds, and the ids are committed on device by the
+        tick itself (`paging.extend_chains`), so host and device free
+        lists cannot race."""
         n = self.pool.n
-        C = self._pchunk
+        C = self._pchunk if width is None else int(width)
         ft = np.zeros((n, C), np.int32)
         fl = np.zeros((n,), np.int32)
         flast = np.zeros((n,), bool)
@@ -867,6 +1322,8 @@ class ServingEngine:
             else C * n
         finishing: list[int] = []
         for slot, job in list(self._jobs.items()):
+            if only_slot is not None and slot != only_slot:
+                continue
             if budget <= 0:
                 break                 # token budget spent: rest wait a tick
             prompt = job.req.prompt
@@ -912,6 +1369,187 @@ class ServingEngine:
             out = out + (fcols, frent)
         return out, finishing
 
+    def _refresh_block_mirrors(self, tables_d, ref_d) -> None:
+        """Host mirrors of the device block state, refreshed at every
+        paged tick sync — admission never blocks on the device."""
+        self._tables_host = np.asarray(tables_d).copy()
+        self._ref_host = np.asarray(ref_d).copy()
+
+    def _decoding_slots(self) -> list[int]:
+        """Active slots currently in the decode phase (not mid-prefill)."""
+        if not self.chunked:
+            return list(self.active)
+        return [s for s in self.active if s not in self._jobs]
+
+    def _solo_step(self) -> list[Request]:
+        """Cold-start packed prefill: no slot is decoding, so one job's
+        fragments are packed up to the per-tick budget and run through a
+        single-row tick — no fairness to protect, no n_slots-row tax."""
+        slot = next(iter(self._jobs))          # oldest job first
+        sched, finishing = self._schedule_fragments(
+            width=self._solo_width, only_slot=slot)
+        s1 = slice(slot, slot + 1)
+        if self.layout is None:
+            ft, fl, flast, fmax, _ = sched
+            self.dstate, self.cache, emitted = self._solo_fn(
+                self.params, self.dstate, self.cache, jnp.int32(slot),
+                jnp.asarray(ft[s1]), jnp.asarray(fl[s1]),
+                jnp.asarray(flast[s1]), jnp.asarray(fmax[s1]))
+            em, active_mask = jax.device_get((emitted, self.dstate.active))
+        else:
+            ft, fl, flast, fmax, fskip, fcols, frent = sched
+            (self.dstate, self.cache, self.bstate,
+             emitted) = self._solo_fn(
+                self.params, self.dstate, self.cache, self.bstate,
+                jnp.int32(slot), jnp.asarray(ft[s1]), jnp.asarray(fl[s1]),
+                jnp.asarray(flast[s1]), jnp.asarray(fmax[s1]),
+                jnp.asarray(fskip[s1]), jnp.asarray(fcols),
+                jnp.asarray(frent))
+            em, active_mask, tables_d, ref_d = jax.device_get(
+                (emitted, self.dstate.active, self.cache["block_tables"],
+                 self.bstate.refcount))
+            self._refresh_block_mirrors(tables_d, ref_d)
+        self.host_syncs += 1
+        self.device_ticks += 1
+        finished: list[Request] = []
+        for s in finishing:                    # at most [slot]
+            del self._jobs[s]
+            self.pool.set_phase(s, pool_lib.PHASE_DECODE)
+            self.baseline_syncs += 1
+            if self.spec:
+                self.draft_state = draft_lib.seed_slot(
+                    self.draft_state, s, self.active[s].prompt)
+            req = self.active[s]
+            tok = int(em[0])
+            if tok != NO_TOKEN:
+                req.out.append(tok)
+            if not active_mask[s]:             # max_new == 1 retires now
+                finished.append(req)
+                del self.active[s]
+                self._retire_slot(s, req)
+        return finished
+
+    def _spec_chunk_step(self) -> list[Request]:
+        """Pure-decode speculation: up to ``chunk`` draft/verify/accept
+        cycles inside one jitted loop — one host sync."""
+        if self.layout is None:
+            (self.dstate, self.draft_state, self.cache, emitted, fwd,
+             slot_fwd, drafted, accepted) = self._spec_chunk_fn(
+                self.params, self.dstate, self.draft_state, self.cache)
+            (em, active_mask, first, fwd, slot_fwd, drafted,
+             accepted) = jax.device_get(
+                (emitted, self.dstate.active, self._first, fwd, slot_fwd,
+                 drafted, accepted))
+        else:
+            (self.dstate, self.draft_state, self.cache, self.bstate,
+             emitted, fwd, slot_fwd, drafted, accepted,
+             stalls) = self._spec_chunk_fn(
+                self.params, self.dstate, self.draft_state, self.cache,
+                self.bstate)
+            (em, active_mask, first, fwd, slot_fwd, drafted, accepted,
+             stalls, tables_d, ref_d) = jax.device_get(
+                (emitted, self.dstate.active, self._first, fwd, slot_fwd,
+                 drafted, accepted, stalls, self.cache["block_tables"],
+                 self.bstate.refcount))
+            self._refresh_block_mirrors(tables_d, ref_d)
+            self.stalls += int(stalls)
+        self.host_syncs += 1
+        self.device_ticks += int(fwd)
+        self.spec_forwards += int(fwd)
+        self.spec_slot_forwards += int(slot_fwd)
+        self.spec_drafted += int(drafted)
+        self.spec_accepted += int(accepted)
+        finished: list[Request] = []
+        for slot, req in list(self.active.items()):
+            if slot in self._need_first:
+                req.out.append(int(first[slot]))
+                self._need_first.discard(slot)
+            new_toks = [int(t) for t in em[slot] if t != NO_TOKEN]
+            req.out.extend(new_toks)
+            self.decode_tokens += len(new_toks)
+            self.spec_decode_tokens += len(new_toks)
+            self.baseline_syncs += len(new_toks)
+            if not active_mask[slot]:
+                finished.append(req)
+                del self.active[slot]
+                self._retire_slot(slot, req)
+        return finished
+
+    def _spec_step(self) -> list[Request]:
+        """One speculative tick: every DECODING slot drafts ahead and
+        gets up to ``spec_k + 1`` tokens verified in the shared forward;
+        PREFILLING slots keep consuming prompt fragments; one host
+        sync."""
+        # pure decode goes through _spec_chunk_step; this tick only runs
+        # while prompt fragments are still being outsourced
+        assert self.chunked and self._jobs
+        W = self._spec_width
+        decoding = self._decoding_slots()
+        sched, finishing = self._schedule_fragments()
+        if self.layout is None:
+            ft, fl, flast, fmax, _ = sched
+        else:
+            ft, fl, flast, fmax, fskip, fcols, frent = sched
+        if W > self._pchunk:
+            ft = np.pad(ft, ((0, 0), (0, W - self._pchunk)))
+        if self.layout is None:
+            (self.dstate, self.draft_state, self.cache, emitted, drafted,
+             accepted) = self._spec_fn(
+                self.params, self.dstate, self.draft_state, self.cache,
+                jnp.asarray(ft), jnp.asarray(fl), jnp.asarray(flast),
+                jnp.asarray(fmax))
+            em, active_mask, first, drafted, accepted = jax.device_get(
+                (emitted, self.dstate.active, self._first, drafted,
+                 accepted))
+        else:
+            (self.dstate, self.draft_state, self.cache, self.bstate,
+             emitted, drafted, accepted, stalls) = self._spec_fn(
+                self.params, self.dstate, self.draft_state, self.cache,
+                self.bstate, jnp.asarray(ft), jnp.asarray(fl),
+                jnp.asarray(flast), jnp.asarray(fmax), jnp.asarray(fskip),
+                jnp.asarray(fcols), jnp.asarray(frent))
+            (em, active_mask, first, drafted, accepted, stalls, tables_d,
+             ref_d) = jax.device_get(
+                (emitted, self.dstate.active, self._first, drafted,
+                 accepted, stalls, self.cache["block_tables"],
+                 self.bstate.refcount))
+            self._refresh_block_mirrors(tables_d, ref_d)
+            self.stalls += int(stalls)
+        self.host_syncs += 1
+        self.device_ticks += 1
+        if decoding:
+            self.spec_forwards += 1
+            self.spec_slot_forwards += len(decoding)
+            self.spec_drafted += int(drafted)
+            self.spec_accepted += int(accepted)
+        fin_set = set(finishing)
+        for slot in finishing:
+            del self._jobs[slot]
+            self.pool.set_phase(slot, pool_lib.PHASE_DECODE)
+            self.baseline_syncs += 1
+            # the whole prompt is consumed: seed the drafter's history
+            # (the pending first token, device-side, stays out)
+            self.draft_state = draft_lib.seed_slot(
+                self.draft_state, slot, self.active[slot].prompt)
+        finished: list[Request] = []
+        for slot, req in list(self.active.items()):
+            if self.chunked and slot in self._jobs:
+                continue               # mid-prefill: nothing emitted yet
+            if slot in self._need_first:
+                req.out.append(int(first[slot]))
+                self._need_first.discard(slot)
+            new_toks = [int(t) for t in em[slot] if t != NO_TOKEN]
+            req.out.extend(new_toks)
+            if slot not in fin_set:
+                self.decode_tokens += len(new_toks)
+                self.spec_decode_tokens += len(new_toks)
+                self.baseline_syncs += len(new_toks)
+            if not active_mask[slot]:
+                finished.append(req)
+                del self.active[slot]
+                self._retire_slot(slot, req)
+        return finished
+
     def _mixed_step(self) -> list[Request]:
         """One unified prefill/decode tick: every PREFILLING slot eats a
         fragment, every DECODING slot one token; one host sync."""
@@ -933,8 +1571,7 @@ class ServingEngine:
             em, active_mask, stalls, tables_d, ref_d = jax.device_get(
                 (emitted, self.dstate.active, stalls,
                  self.cache["block_tables"], self.bstate.refcount))
-            self._tables_host = np.asarray(tables_d).copy()
-            self._ref_host = np.asarray(ref_d).copy()
+            self._refresh_block_mirrors(tables_d, ref_d)
             self.stalls += int(stalls)
         self.host_syncs += 1
         self.device_ticks += 1
@@ -974,6 +1611,14 @@ class ServingEngine:
             finished, self._finished_instant = self._finished_instant, []
         if not self.active:
             return finished
+        if self.chunked and self._jobs and not self._decoding_slots():
+            # nobody decoding -> no fairness to protect: pack one job's
+            # fragments up to the tick budget through the solo tick
+            return finished + self._solo_step()
+        if self.spec:
+            if self.chunked and self._jobs:
+                return finished + self._spec_step()
+            return finished + self._spec_chunk_step()
         if self.chunked and self._jobs:
             return finished + self._mixed_step()
         if self.layout is None:
@@ -990,8 +1635,7 @@ class ServingEngine:
                 (emitted, self.dstate.active, self._first, iters, stalls,
                  self.cache["block_tables"], self.bstate.refcount))
             # refresh the host mirrors with the chunk's on-device growth
-            self._tables_host = np.asarray(tables_d).copy()
-            self._ref_host = np.asarray(ref_d).copy()
+            self._refresh_block_mirrors(tables_d, ref_d)
             self.stalls += int(stalls)
         self.host_syncs += 1
         self.device_ticks += int(iters)
@@ -1087,6 +1731,9 @@ class ServingEngine:
         self.shared_block_hits = 0
         self.kv_bytes_allocated = 0
         self.tokens_finished = 0
+        self.spec_forwards = self.spec_slot_forwards = 0
+        self.spec_decode_tokens = 0
+        self.spec_drafted = self.spec_accepted = 0
         if self.layout is not None:
             # the block high-water mark restarts from what is in use now
             pool = self.bstate.pool
@@ -1105,6 +1752,26 @@ class ServingEngine:
             "baseline_syncs_per_100_tokens":
                 100.0 * self.baseline_syncs / tokens,
             "sync_reduction_x": self.baseline_syncs / max(1, self.host_syncs),
+        }
+
+    def spec_stats(self) -> dict:
+        """Speculative decode economics.  ``tokens_per_forward`` is
+        decode tokens emitted per *slot-forward* (one decoding slot in
+        one verify tick) — exactly 1.0 for the non-speculative engine,
+        ``1 + accepted drafts`` here, so it is the per-slot decode
+        multiplier the drafter buys.  ``acceptance_rate`` is accepted /
+        proposed draft tokens."""
+        return {
+            "spec_k": getattr(self, "_spec_k", 0),
+            "spec_forwards": int(self.spec_forwards),
+            "spec_slot_forwards": int(self.spec_slot_forwards),
+            "spec_decode_tokens": int(self.spec_decode_tokens),
+            "tokens_per_forward":
+                self.spec_decode_tokens / max(1, self.spec_slot_forwards),
+            "drafted": int(self.spec_drafted),
+            "accepted": int(self.spec_accepted),
+            "acceptance_rate":
+                self.spec_accepted / max(1, self.spec_drafted),
         }
 
     def kv_stats(self) -> dict:

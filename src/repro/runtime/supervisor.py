@@ -148,7 +148,9 @@ class ClusterSupervisor:
             rules=self.rules, qt_graph=self.qt_graph(), notes=self._notes())
 
     def plan_serve(self, *, chunk: int = 8, eos_id: int = 1,
-                   paged: Optional[model_lib.PagedLayout] = None) -> Plan:
+                   paged: Optional[model_lib.PagedLayout] = None,
+                   speculative: Optional[int] = None,
+                   spec_hist: int = 64) -> Plan:
         """The device-resident continuous-batching tick (serve_lib): one
         jitted chunk advances every slot up to `chunk` tokens with the
         supervisor state (active mask, budgets) resident on device.  The
@@ -157,9 +159,20 @@ class ClusterSupervisor:
         With ``paged`` given, the tick also carries the donated block
         pool state and grows block chains on device: the step signature
         becomes (params, state, cache, bstate) and the cache holds pages
-        plus per-slot block tables (see `_cache_specs(paged=True)`)."""
+        plus per-slot block tables (see `_cache_specs(paged=True)`).
+
+        With ``speculative`` given (the draft length ``spec_k``), the
+        lowered step is the **speculative verify tick**
+        (`serve_lib.build_spec_tick`): drafter state rides along
+        (donated, per-slot sharded like the decode state) and the step
+        consumes per-slot fragment inputs, emitting up to ``spec_k + 1``
+        tokens per slot per forward."""
         cfg, shape = self.cfg, self.shape
         n_slots = shape.global_batch
+        if speculative is not None:
+            return self._plan_serve_spec(spec_k=speculative,
+                                         spec_hist=spec_hist,
+                                         eos_id=eos_id, paged=paged)
         step = serve_lib.build_decode_chunk(
             cfg, chunk=chunk, eos_id=eos_id, rules=self.rules, jit=False,
             paged=paged)
@@ -188,6 +201,68 @@ class ClusterSupervisor:
             out_sh.append(self._sh(bspec))
             donate = (2, 3)             # ... and the block pool with it
         out_sh += [self._sh(emitted_spec), self._sh(P())]
+        if paged is not None:
+            out_sh.append(self._sh(P()))     # stall counter
+        return Plan(
+            name=f"{cfg.name}/{shape.name}", kind="serve", step_fn=step,
+            abstract_args=tuple(abstract_args),
+            in_shardings=tuple(in_sh),
+            out_shardings=tuple(out_sh),
+            donate_argnums=donate,
+            rules=self.rules, qt_graph=self.qt_graph(), notes=self._notes())
+
+    def _plan_serve_spec(self, *, spec_k: int, spec_hist: int, eos_id: int,
+                         paged: Optional[model_lib.PagedLayout]) -> Plan:
+        """Lower the speculative verify tick with explicit shardings:
+        drafter history is per-slot state (sharded like the decode
+        state), the cache — and, paged, the block pool — is donated."""
+        from repro.runtime import draft as draft_lib
+
+        cfg, shape = self.cfg, self.shape
+        n_slots = shape.global_batch
+        w = spec_k + 1
+        step = serve_lib.build_spec_tick(
+            cfg, spec_k=spec_k, chunk_tokens=w, eos_id=eos_id,
+            rules=self.rules, jit=False, paged=paged)
+        params = model_lib.abstract(cfg, self.dtype)
+        pspec = train_lib.state_specs(cfg, self.rules)["params"]
+        state = serve_lib.abstract_decode_state(n_slots)
+        slot_spec = self.rules.spec(("cache_batch",), (n_slots,))
+        sspec = serve_lib.DecodeState(*([slot_spec] * len(state)))
+        dstate = draft_lib.abstract_draft_state(n_slots, spec_hist)
+        dspec = draft_lib.DraftState(
+            hist=self.rules.spec(("cache_batch", None),
+                                 (n_slots, spec_hist)),
+            count=slot_spec)
+        cache = model_lib.init_cache(cfg, n_slots, shape.seq_len,
+                                     dtype=self.dtype, abstract_only=True,
+                                     layout=paged)
+        cspec = self._cache_specs(cache, paged=paged is not None)
+        row_spec = self.rules.spec(("cache_batch", None), (n_slots, w))
+        i32 = lambda s: jax.ShapeDtypeStruct(s, jnp.int32)  # noqa: E731
+        frag = [i32((n_slots, w)), i32((n_slots,)),
+                jax.ShapeDtypeStruct((n_slots,), jnp.bool_),
+                i32((n_slots,))]
+        frag_sh = [row_spec, slot_spec, slot_spec, slot_spec]
+        abstract_args = [params, state, dstate, cache]
+        in_sh = [self._sh(pspec), self._sh(sspec), self._sh(dspec),
+                 self._sh(cspec)]
+        out_sh = [self._sh(sspec), self._sh(dspec), self._sh(cspec)]
+        donate = (2, 3)      # drafter state + cache stream in place
+        if paged is not None:
+            from repro.runtime import paging
+            bstate = paging.abstract_blocks(paged.n_blocks)
+            bspec = jax.tree_util.tree_map(lambda _: P(), bstate)
+            abstract_args.append(bstate)
+            in_sh.append(self._sh(bspec))
+            out_sh.append(self._sh(bspec))
+            donate = (2, 3, 4)
+            row1 = self.rules.spec(("cache_batch", None), (n_slots, 1))
+            frag += [i32((n_slots,)), i32((n_slots, 1)), i32((n_slots, 1))]
+            frag_sh += [slot_spec, row1, row1]
+        abstract_args += frag
+        in_sh += [self._sh(s) for s in frag_sh]
+        out_sh += [self._sh(row_spec), self._sh(P()), self._sh(P())]
         if paged is not None:
             out_sh.append(self._sh(P()))     # stall counter
         return Plan(

@@ -214,8 +214,14 @@ def test_prefix_sharing_across_chunk_boundary(setup):
                             prefix_sharing=sharing)
         r0 = Request(0, base, max_new=12)
         assert eng.admit(r0)
-        for _ in range(4):           # drain r0's 3 fragments + decode
+        # with nobody decoding, the cold-start solo tick packs r0's whole
+        # prompt into one step; one more step starts decoding (r0 must
+        # still be active when the sharer arrives, or its refcount-zero
+        # prefix blocks would be dropped from the map at retirement)
+        while eng._jobs:
             eng.step()
+        eng.step()
+        assert eng.active
         r1 = Request(1, tail, max_new=6)
         assert eng.admit(r1)
         done = []

@@ -127,6 +127,107 @@ def test_grow_exhaustion_stalls_not_corrupts():
     assert int(t2[0, 1]) == -1            # chain unchanged: nothing granted
 
 
+def test_grow_to_cover_rents_across_multiple_boundaries():
+    """A speculative verify fragment can cross several block boundaries
+    in one tick: grow_to_cover rents exactly the deficit, appended in
+    chain order."""
+    bs = 4
+    bstate = paging.init_blocks(8)
+    tables = paging.init_block_tables(2, 6)
+    bstate = paging.admit_chains(bstate, jnp.asarray([0]), jnp.asarray([0]))
+    tables = tables.at[0, 0].set(0)
+    # slot 0 writes through position 10 (blocks 0..2): needs 2 more
+    b2, t2, stalled = paging.grow_to_cover(
+        bstate, tables, jnp.asarray([10, 0]), jnp.asarray([True, False]),
+        block_size=bs, max_rounds=3)
+    assert not bool(jnp.any(stalled))
+    chain = [int(x) for x in t2[0] if int(x) >= 0]
+    assert len(chain) == 3 and chain[0] == 0
+    assert int(t2[1, 0]) == -1                  # inactive slot untouched
+    paging.check_invariants(b2, t2)
+    # insufficient rounds: target uncovered -> stalled, never corrupted
+    _, _, stalled = paging.grow_to_cover(
+        bstate, tables, jnp.asarray([10, 0]), jnp.asarray([True, False]),
+        block_size=bs, max_rounds=1)
+    assert bool(stalled[0])
+
+
+pytest.importorskip("hypothesis")   # real lib or the conftest fallback
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 10**6), min_size=1, max_size=40),
+       st.integers(0, 10**6))
+def test_block_pool_invariants_across_spec_cycles(ops, seed):
+    """Refcount/free-count invariants hold across speculative
+    accept/reject/rewind + retire cycles.
+
+    The speculative tick's life cycle against the block pool: admit a
+    chain, overshoot it with grow_to_cover (the verify fragment's write
+    span), *accept* a random prefix (pos advances part way — a rewind
+    leaves the overshoot blocks rented but dead), decode-grow, retire.
+    After every transition the device refcounts, the free mask and the
+    tables must agree exactly, and the pool counters must stay
+    monotone (`pool.check_invariants` runs inside
+    `paging.check_invariants`)."""
+    rng = np.random.default_rng(seed % (2**32))
+    n_blocks, n_slots, bs, max_blocks = 10, 3, 4, 5
+    bstate = paging.init_blocks(n_blocks)
+    tables = paging.init_block_tables(n_slots, max_blocks)
+    pos = np.zeros(n_slots, np.int64)        # next write position
+    live = [False] * n_slots
+
+    for v in ops:
+        op = v % 4
+        slot = v % n_slots
+        if op == 0 and not live[slot]:            # admit a 1-block chain
+            free = np.flatnonzero(np.asarray(bstate.pool.free))
+            if len(free) == 0:
+                continue
+            blk = jnp.asarray([int(free[0])])
+            bstate = paging.admit_chains(bstate, blk, blk)
+            tables = tables.at[slot, 0].set(int(free[0]))
+            pos[slot] = int(rng.integers(0, bs))
+            live[slot] = True
+        elif op == 1 and live[slot]:              # speculative overshoot
+            overshoot = int(rng.integers(0, 6))
+            target = min(pos[slot] + overshoot, max_blocks * bs - 1)
+            bstate, tables, stalled = paging.grow_to_cover(
+                bstate, tables, jnp.asarray([target if s == slot else 0
+                                             for s in range(n_slots)]),
+                jnp.asarray([s == slot for s in range(n_slots)]),
+                block_size=bs, max_rounds=overshoot // bs + 1)
+            if not bool(stalled[slot]):
+                # accept a random prefix; the rest is the rewind — the
+                # overshoot blocks stay rented (dead) until retirement
+                pos[slot] = int(rng.integers(pos[slot], target + 1))
+        elif op == 2 and live[slot]:              # retire: release chain
+            bstate, tables = paging.release_chain(bstate, tables, slot)
+            live[slot] = False
+            pos[slot] = 0
+        elif op == 3 and live[slot]:              # plain decode growth
+            if pos[slot] < max_blocks * bs - 1:
+                bstate, tables, stalled = paging.grow_for_decode(
+                    bstate, tables, jnp.asarray([pos[slot]] * n_slots),
+                    jnp.asarray([s == slot for s in range(n_slots)]),
+                    block_size=bs)
+                if not bool(stalled[slot]):
+                    pos[slot] += 1
+        paging.check_invariants(bstate, tables)
+        # conservation: rented blocks == blocks referenced by tables
+        t = np.asarray(tables)
+        assert int(np.sum(~np.asarray(bstate.pool.free))) == \
+            int(np.sum(t >= 0))
+
+    # drain everything: the pool must come back whole
+    for slot in range(n_slots):
+        if live[slot]:
+            bstate, tables = paging.release_chain(bstate, tables, slot)
+    paging.check_invariants(bstate, tables)
+    assert int(paging.blocks_in_use(bstate)) == 0
+
+
 def test_release_chain_respects_shared_refcounts():
     bstate = paging.init_blocks(4)
     tables = paging.init_block_tables(2, 2)

@@ -1,0 +1,324 @@
+"""Speculative decode: drafter cores run ahead, the supervisor verifies.
+
+The contract under test mirrors the paper's outsourcing discipline:
+
+* the n-gram drafter (`runtime/draft.py`) proposes continuations from a
+  slot's own history and degrades to an empty draft (single greedy
+  step) when nothing matches — acceptance can never fall below the
+  status quo;
+* the speculative engine is **token-exact** vs non-speculative greedy
+  decode on both cache layouts, with and without chunked prefill, for
+  accepting and never-accepting models alike (greedy argmax verify ⇒
+  bit-exact);
+* on a drafter-friendly (repetitive) stream it emits > 1 token per
+  slot-forward — the decode multiplier the whole scheme exists for;
+* rewinds leave the pools clean: every chain is released at retirement
+  and the block invariants hold even though rejected speculative pages
+  were written and abandoned;
+* the cluster supervisor lowers the spec tick with shardings and
+  donation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models import model
+from repro.runtime import draft as draft_lib
+from repro.runtime import paging
+from repro.runtime.serve import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=1, d_model=64,
+                  vocab=128)
+    params = model.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    return cfg, params
+
+
+def _copy_model(params, cfg):
+    """Params whose forward copies its input token: every block's
+    residual contribution is zeroed and the unembedding is tied, so
+    argmax(logits(t)) == t.  Greedy decode becomes a constant stream —
+    the perfectly repetitive regime where the n-gram drafter should
+    reach full acceptance, through a real transformer forward."""
+    p = dict(params)
+    p["layers"] = dict(p["layers"],
+                       wo=jnp.zeros_like(p["layers"]["wo"]),
+                       w_down=jnp.zeros_like(p["layers"]["w_down"]))
+    if not cfg.tie_embeddings:
+        p["unembed"] = p["embed"]["tok"]
+    return p
+
+
+def _random_requests(n=5, seed=5):
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(2, 100,
+                                    size=int(rng.integers(4, 12)))
+                    .astype(np.int32),
+                    max_new=int(rng.integers(4, 12))) for i in range(n)]
+
+
+def _repetitive_requests(n=5, seed=3):
+    """Prompts ending in a constant run: the drafter's bread and
+    butter once the model continues the repetition."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        head = rng.integers(2, 100,
+                            size=int(rng.integers(3, 8))).astype(np.int32)
+        tail = np.full(int(rng.integers(4, 9)),
+                       int(rng.integers(2, 100)), np.int32)
+        out.append(Request(i, np.concatenate([head, tail]),
+                           max_new=int(rng.integers(8, 20))))
+    return out
+
+
+ENGINE_CONFIGS = [
+    {},
+    dict(paged=True, block_size=8, n_blocks=24),
+    dict(chunked_prefill=True, prefill_chunk_tokens=4),
+    dict(paged=True, block_size=8, n_blocks=24, chunked_prefill=True,
+         prefill_chunk_tokens=4),
+]
+
+
+# ---------------------------------------------------------------------------
+# drafter unit behavior
+# ---------------------------------------------------------------------------
+
+def test_propose_continues_periodic_stream():
+    st = draft_lib.init_draft_state(1, 32)
+    st = draft_lib.seed_slot(st, 0, np.asarray([1, 2, 3, 4] * 3, np.int32))
+    # stream ...3 4 1 2 3 4 | pending 1 -> bigram (4, 1) -> 2 3 4 ...
+    draft, dlen = draft_lib.propose(st, jnp.asarray([1], jnp.int32), 4)
+    assert int(dlen[0]) == 4
+    assert [int(t) for t in draft[0]] == [2, 3, 4, 1]
+
+
+def test_propose_prefers_match_with_longest_continuation():
+    st = draft_lib.init_draft_state(1, 32)
+    st = draft_lib.seed_slot(st, 0, np.asarray([9, 9, 7, 7, 7, 7, 7],
+                                               np.int32))
+    # pending 7: the LATEST (7,7) occurrence has no room after it — the
+    # drafter must pick an earlier one and draft the full constant run
+    draft, dlen = draft_lib.propose(st, jnp.asarray([7], jnp.int32), 4)
+    assert int(dlen[0]) >= 3
+    assert all(int(t) == 7 for t in draft[0][:int(dlen[0])])
+
+
+def test_propose_no_match_falls_back_to_empty_draft():
+    st = draft_lib.init_draft_state(2, 16)
+    st = draft_lib.seed_slot(st, 0, np.asarray([1, 2, 3, 4, 5], np.int32))
+    # slot 0: bigram (5, 99) never occurred; slot 1: no history at all
+    _, dlen = draft_lib.propose(st, jnp.asarray([99, 5], jnp.int32), 4)
+    assert [int(d) for d in dlen] == [0, 0]
+
+
+def test_push_tokens_keeps_trailing_window():
+    st = draft_lib.init_draft_state(2, 6)
+    st = draft_lib.push_tokens(st, jnp.asarray([[1, 2, 3, 0],
+                                                [7, 0, 0, 0]], jnp.int32),
+                               jnp.asarray([3, 0], jnp.int32))
+    assert [int(t) for t in st.hist[0][-3:]] == [1, 2, 3]
+    assert int(st.count[0]) == 3 and int(st.count[1]) == 0
+    # overflow: only the trailing window survives
+    st = draft_lib.push_tokens(st, jnp.asarray([[4, 5, 6, 7],
+                                                [0, 0, 0, 0]], jnp.int32),
+                               jnp.asarray([4, 0], jnp.int32))
+    assert [int(t) for t in st.hist[0]] == [2, 3, 4, 5, 6, 7]
+    assert int(st.count[0]) == 6
+
+
+def test_reset_slot_disables_matching():
+    st = draft_lib.init_draft_state(1, 16)
+    st = draft_lib.seed_slot(st, 0, np.asarray([5, 5, 5, 5, 5], np.int32))
+    _, dlen = draft_lib.propose(st, jnp.asarray([5], jnp.int32), 4)
+    assert int(dlen[0]) > 0
+    st = draft_lib.reset_slot(st, 0)
+    _, dlen = draft_lib.propose(st, jnp.asarray([5], jnp.int32), 4)
+    assert int(dlen[0]) == 0
+
+
+# ---------------------------------------------------------------------------
+# engine: bit-exactness on every layout, accepting or not
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", ENGINE_CONFIGS)
+def test_spec_token_exact_random_model(setup, kw):
+    """A random model never agrees with the drafter — speculation must
+    degrade to the status quo with identical tokens."""
+    cfg, params = setup
+    base = ServingEngine(params, cfg, n_slots=3, max_seq=64, **kw)
+    done_b, _ = base.run_to_completion(_random_requests())
+    spec = ServingEngine(params, cfg, n_slots=3, max_seq=64,
+                         speculative=True, spec_k=4, **kw)
+    done_s, _ = spec.run_to_completion(_random_requests())
+    assert {r.rid: r.out for r in done_b} == {r.rid: r.out for r in done_s}
+    st = spec.spec_stats()
+    assert st["tokens_per_forward"] == pytest.approx(1.0)
+    assert spec.pool.used == 0
+    if spec.layout is not None:
+        assert spec.stalls == 0
+        assert int(paging.blocks_in_use(spec.bstate)) == 0
+        paging.check_invariants(spec.bstate, spec.cache["block_tables"])
+
+
+@pytest.mark.parametrize("kw", ENGINE_CONFIGS)
+def test_spec_token_exact_and_accepting_copy_model(setup, kw):
+    """On a repetitive stream the drafter accepts — tokens stay exact
+    and each verify forward emits > 1.3 tokens per decoding slot."""
+    cfg, params = setup
+    cp = _copy_model(params, cfg)
+    base = ServingEngine(cp, cfg, n_slots=3, max_seq=64, **kw)
+    done_b, _ = base.run_to_completion(_repetitive_requests())
+    spec = ServingEngine(cp, cfg, n_slots=3, max_seq=64,
+                         speculative=True, spec_k=4, **kw)
+    done_s, _ = spec.run_to_completion(_repetitive_requests())
+    assert {r.rid: r.out for r in done_b} == {r.rid: r.out for r in done_s}
+    st = spec.spec_stats()
+    assert st["tokens_per_forward"] > 1.3, st
+    assert st["acceptance_rate"] > 0.5, st
+    assert spec.pool.used == 0
+    if spec.layout is not None:
+        assert spec.stalls == 0
+        assert int(paging.blocks_in_use(spec.bstate)) == 0
+        paging.check_invariants(spec.bstate, spec.cache["block_tables"])
+
+
+def test_spec_eos_inside_draft_truncates_exactly(setup):
+    """A draft running past EOS must emit only through the first EOS —
+    the sequential engine's retirement point."""
+    cfg, params = setup
+    cp = _copy_model(params, cfg)
+    eos = 1
+    # the copy model repeats the last prompt token: EOS itself
+    req = lambda: [Request(0, np.asarray([5, 9, 1, 1, 1, 1], np.int32),  # noqa: E731
+                           max_new=10)]
+    base = ServingEngine(cp, cfg, n_slots=1, max_seq=32, eos_id=eos)
+    done_b, _ = base.run_to_completion(req())
+    spec = ServingEngine(cp, cfg, n_slots=1, max_seq=32, eos_id=eos,
+                         speculative=True, spec_k=4)
+    done_s, _ = spec.run_to_completion(req())
+    assert done_b[0].out == done_s[0].out
+    assert done_s[0].out[-1] == eos
+    assert spec.pool.used == 0
+
+
+@pytest.mark.parametrize("max_new", [1, 2, 3])
+def test_spec_budget_edges(setup, max_new):
+    """Tight budgets: the draft clamp keeps emission within max_new and
+    the KV writes inside the admission-time reservation."""
+    cfg, params = setup
+    cp = _copy_model(params, cfg)
+    mk = lambda: [Request(0, np.asarray([5, 7, 7, 7, 7], np.int32),  # noqa: E731
+                          max_new=max_new)]
+    base = ServingEngine(cp, cfg, n_slots=1, max_seq=32)
+    done_b, _ = base.run_to_completion(mk())
+    spec = ServingEngine(cp, cfg, n_slots=1, max_seq=32,
+                         speculative=True, spec_k=4)
+    done_s, _ = spec.run_to_completion(mk())
+    assert done_b[0].out == done_s[0].out
+    assert len(done_s[0].out) == max_new
+
+
+def test_spec_prompt_exactly_max_seq(setup):
+    """A full-cache prompt admits with budget 1 — the spec tick must not
+    write a single position past the cache."""
+    cfg, params = setup
+    mk = lambda: [Request(0, np.arange(1, 17, dtype=np.int32),  # noqa: E731
+                          max_new=8)]
+    base = ServingEngine(params, cfg, n_slots=1, max_seq=16)
+    done_b, _ = base.run_to_completion(mk())
+    spec = ServingEngine(params, cfg, n_slots=1, max_seq=16,
+                         speculative=True, spec_k=4)
+    done_s, _ = spec.run_to_completion(mk())
+    assert done_b[0].out == done_s[0].out and len(done_s[0].out) == 1
+    assert spec.pool.used == 0
+
+
+def test_spec_long_prompt_mid_decode_composes_with_chunked(setup):
+    """Chunked prefill keeps outsourcing fragments inside the spec tick:
+    a long prompt admitted mid-decode perturbs nothing, speculation
+    keeps running for the active slots."""
+    cfg, params = setup
+    cp = _copy_model(params, cfg)
+    short = [Request(i, np.asarray([3 + i] * 8, np.int32), max_new=14)
+             for i in range(2)]
+
+    def run(spec):
+        kw = dict(speculative=True, spec_k=3) if spec else {}
+        eng = ServingEngine(cp, cfg, n_slots=4, max_seq=64,
+                            chunked_prefill=True, prefill_chunk_tokens=8,
+                            **kw)
+        assert eng.admit_many([Request(r.rid, r.prompt, max_new=r.max_new)
+                               for r in short]) == 2
+        eng.step()
+        long_req = Request(9, np.asarray([2] * 40, np.int32), max_new=4)
+        assert eng.admit(long_req)
+        done = []
+        while eng.active:
+            done += eng.step()
+        return {r.rid: r.out for r in done}, eng
+
+    got_b, _ = run(False)
+    got_s, eng_s = run(True)
+    assert got_b == got_s
+    assert eng_s.spec_stats()["tokens_per_forward"] > 1.0
+
+
+def test_spec_rejects_unsupported_families():
+    cfg_ssm = reduced(get_arch("mamba2-780m"))
+    params = model.init(jax.random.PRNGKey(0), cfg_ssm, jnp.float32)
+    with pytest.raises(ValueError, match="speculative"):
+        ServingEngine(params, cfg_ssm, n_slots=2, max_seq=32,
+                      speculative=True)
+
+
+def test_spec_slot_reuse_is_clean(setup):
+    """A retired slot's history must not leak drafts into the next
+    request rented onto it (seed/reset discipline)."""
+    cfg, params = setup
+    cp = _copy_model(params, cfg)
+    eng = ServingEngine(cp, cfg, n_slots=1, max_seq=48, speculative=True,
+                        spec_k=4)
+    done1, _ = eng.run_to_completion(
+        [Request(0, np.asarray([5, 7, 7, 7, 7], np.int32), max_new=8)])
+    done2, _ = eng.run_to_completion(
+        [Request(1, np.asarray([9, 3, 3, 3, 3], np.int32), max_new=8)])
+    solo = ServingEngine(cp, cfg, n_slots=1, max_seq=48, speculative=True,
+                         spec_k=4)
+    done_s, _ = solo.run_to_completion(
+        [Request(1, np.asarray([9, 3, 3, 3, 3], np.int32), max_new=8)])
+    assert done2[0].out == done_s[0].out
+    assert done1[0].out != done2[0].out     # different streams, really
+
+
+# ---------------------------------------------------------------------------
+# supervisor lowering
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_plan_serve_speculative_lowers_with_shardings(paged):
+    from jax.sharding import Mesh
+    from repro.configs import ShapeConfig
+    from repro.runtime.supervisor import ClusterSupervisor
+
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=1, d_model=64,
+                  vocab=128)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    shape = ShapeConfig("serve_tiny", 48, 4, "serve")
+    sup = ClusterSupervisor(mesh, cfg, shape, dtype=jnp.float32)
+    layout = model.PagedLayout(block_size=8, n_blocks=24) if paged else None
+    plan = sup.plan_serve(speculative=4, paged=layout)
+    assert plan.kind == "serve"
+    # drafter state + cache (+ block pool) stream in place
+    assert plan.donate_argnums == ((2, 3, 4) if paged else (2, 3))
+    lowered = jax.jit(plan.step_fn, in_shardings=plan.in_shardings,
+                      out_shardings=plan.out_shardings,
+                      donate_argnums=plan.donate_argnums) \
+        .lower(*plan.abstract_args)
+    assert lowered.compile() is not None
