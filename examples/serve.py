@@ -10,7 +10,10 @@ per tick.
 The same run then repeats with ``paged=True``: the rented resource drops
 from a whole `max_seq` slot to a fixed-size KV *block* (runtime/paging),
 identical prompt prefixes share blocks, and the outputs stay token-exact
-while the allocated KV bytes per token shrink.
+while the allocated KV bytes per token shrink.  The final section turns
+on ``overcommit=True`` against a pool too small for every worst case:
+the supervisor evicts and resumes requests under KV pressure and the
+streams still match the reserved run token for token.
 
     PYTHONPATH=src python examples/serve.py
 """
@@ -114,6 +117,35 @@ def main():
     print(f"token-exact with speculative decode (spec_k=4): "
           f"{st['tokens_per_forward']:.2f} tokens/forward at "
           f"{st['acceptance_rate']:.2f} draft acceptance")
+
+    # preemptive over-commit: admission takes only what a request needs
+    # *now* (no §5.1 worst-case reservation), and when decode growth
+    # runs the deliberately undersized pool dry the supervisor evicts a
+    # victim — its chain is clawed back, its request parks with its
+    # token history and resumes later by replaying that history through
+    # chunked prefill.  Greedy determinism keeps the stream token-exact.
+    reqs = make_requests(cfg, n=12)
+    for r in reqs:
+        r.max_new = max(r.max_new, 28)        # real decode budgets:
+        #                                       worst case ~3 blocks each
+    base = ServingEngine(params, cfg, n_slots=4, max_seq=96, chunk=4,
+                         paged=True, block_size=16, n_blocks=9,
+                         chunked_prefill=True, prefill_chunk_tokens=16)
+    out_r, _ = run(base, [Request(r.rid, r.prompt, max_new=r.max_new)
+                          for r in reqs], "small pool, reserved admission")
+    oc_eng = ServingEngine(params, cfg, n_slots=4, max_seq=96, chunk=4,
+                           paged=True, block_size=16, n_blocks=9,
+                           chunked_prefill=True, prefill_chunk_tokens=16,
+                           overcommit=True)
+    out_o, _ = run(oc_eng, [Request(r.rid, r.prompt, max_new=r.max_new)
+                            for r in reqs], "small pool, over-commit")
+    assert out_o == out_r, "preempted/resumed requests must be token-exact"
+    occ = oc_eng.occupancy_stats()
+    occ_r = base.occupancy_stats()
+    print(f"token-exact under over-commit: occupancy "
+          f"{occ['occupancy']:.2f} vs {occ_r['occupancy']:.2f} reserved, "
+          f"{occ['preemptions']} preemptions / {occ['resumes']} resumes, "
+          f"{occ['preempted_tokens_recomputed']} tokens recomputed")
 
 
 if __name__ == "__main__":

@@ -71,7 +71,9 @@ class CorePool:
 
     def phase_of(self, unit: int) -> int:
         """Lifecycle phase of a unit: PHASE_IDLE / PHASE_PREFILL /
-        PHASE_DECODE (a QT is fed fragments before it runs)."""
+        PHASE_DECODE / PHASE_PREEMPTED (a QT is fed fragments before it
+        runs, and may be parked mid-flight when the supervisor claws
+        its lent resources back under pressure)."""
         self._check_unit(unit)
         return int(self.state.phase[unit])
 

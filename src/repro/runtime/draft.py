@@ -128,6 +128,15 @@ def reset_slot(state: DraftState, slot: int) -> DraftState:
     return state._replace(count=state.count.at[slot].set(0))
 
 
+def evict_slot(state: DraftState, slot: int) -> DraftState:
+    """Preemption: the drafter's match window dies with the slot's KV.
+    The parked request replays its history through chunked prefill at
+    re-admission and re-seeds via :func:`seed_slot` at the PREFILL ->
+    DECODE transition, so matching stays disabled in between (a stale
+    window must never draft for the slot's next tenant either)."""
+    return reset_slot(state, slot)
+
+
 def seed_slot(state: DraftState, slot: int, prompt) -> DraftState:
     """Monolithic admission: the whole prompt was consumed by one
     prefill call, so the slot's history is the prompt tail (the pending

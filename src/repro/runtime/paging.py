@@ -177,17 +177,45 @@ def grow_for_decode(state: BlockPoolState, tables: jax.Array,
                          block_size=block_size, max_rounds=1)
 
 
-@jax.jit
-def release_chain(state: BlockPoolState, tables: jax.Array, slot):
-    """Retire `slot`: drop one reference per chain block, return
-    refcount-zero blocks to the pool, clear the slot's table row."""
+def _drop_chain(state: BlockPoolState, tables: jax.Array, slot):
+    """The shared chain-drop core: one reference dropped per chain
+    entry, refcount-zero blocks returned to the pool, the slot's table
+    row cleared.  A block another chain still references (a shared
+    prompt prefix) keeps its rent — dropping a chain can never free a
+    neighbour's storage.  Returns ``(state, tables, n_freed)``."""
     n = state.n_blocks
     chain = _sanitize(tables[jnp.asarray(slot, jnp.int32)], n)
     refcount = state.refcount.at[chain].add(-1, mode="drop")
     newly_free = (refcount <= 0) & ~state.pool.free
     pool = pool_lib.release_many(state.pool, newly_free)
     tables = tables.at[jnp.asarray(slot, jnp.int32)].set(NO_BLOCK)
-    return BlockPoolState(pool=pool, refcount=refcount), tables
+    n_freed = jnp.sum(newly_free).astype(jnp.int32)
+    return BlockPoolState(pool=pool, refcount=refcount), tables, n_freed
+
+
+@jax.jit
+def release_chain(state: BlockPoolState, tables: jax.Array, slot):
+    """Retire `slot` (§4.3 terminate): drop one reference per chain
+    block, return refcount-zero blocks to the pool, clear the row."""
+    state, tables, _ = _drop_chain(state, tables, slot)
+    return state, tables
+
+
+@jax.jit
+def evict_chain(state: BlockPoolState, tables: jax.Array, slot):
+    """Preempt `slot`: the supervisor claws a *live* chain back under
+    KV pressure (the paper's rent/terminate cycle applied mid-flight —
+    cheap enough to do while the QT still wants the resources).
+
+    Reference discipline is identical to :func:`release_chain` —
+    refcount-aware, so shared prefix blocks another chain references
+    survive the eviction — but the transition returns ``(state, tables,
+    n_freed)`` so the host loop can tell whether the eviction actually
+    relieved pressure (a fully-shared chain frees nothing).  The evicted
+    request's tokens are *not* lost: the serving engine parks them and
+    replays prompt + generated history through chunked prefill at
+    re-admission, which reconstructs the chain token-exactly."""
+    return _drop_chain(state, tables, slot)
 
 
 # -- queries / invariants ----------------------------------------------------

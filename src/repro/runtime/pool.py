@@ -41,11 +41,15 @@ ERR_BAD_UNIT = 3
 # lifecycle phase of a rented unit: the paper's QT does not receive its
 # whole job at once — it is fed *fragments* (the companion EMPA paper's
 # quasi-thread discipline), so a unit is either still being loaded
-# (PREFILL: consuming prompt fragments) or running (DECODE).  Free units
-# are IDLE by invariant.
+# (PREFILL: consuming prompt fragments), running (DECODE), or parked
+# (PREEMPTED: the supervisor clawed its lent resources back under
+# pressure — §4.3's rent/terminate cycle applied mid-flight — and the
+# QT waits, with its full history, for re-admission).  Free units are
+# IDLE by invariant.
 PHASE_IDLE = 0
 PHASE_PREFILL = 1
 PHASE_DECODE = 2
+PHASE_PREEMPTED = 3
 
 IntLike = Union[int, jax.Array]
 
@@ -250,6 +254,8 @@ def check_invariants(state: SlotPoolState) -> None:
     phase = np.asarray(state.phase)
     n = free.shape[0]
     assert parent.shape == (n,) and prealloc.shape == (n, n)
+    assert np.all((phase >= PHASE_IDLE) & (phase <= PHASE_PREEMPTED)), \
+        "phase outside the QT lifecycle"
     assert np.all(phase[free] == PHASE_IDLE), "free unit with a phase"
     for u in range(n):
         p = int(parent[u])

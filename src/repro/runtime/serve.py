@@ -76,10 +76,36 @@ mask chunked prefill uses — on both cache layouts:
 * PREFILLING slots keep consuming prompt fragments in the same tick —
   speculation composes with chunked prefill.
 
+**Preemptive over-commit** (``ServingEngine(overcommit=True)``) is the
+supervisor's rent/release discipline under pressure: instead of taking
+the §5.1 worst-case block reservation at admission (which caps
+occupancy at what the pool could serve if *every* slot grew to its full
+budget), admission asks only for what the request needs *now* and the
+supervisor claws blocks back mid-flight when growth runs the pool dry:
+
+* when ``extend_chains`` / ``grow_to_cover`` would stall a tick, the
+  host loop picks a **victim** — the slot with the fewest generated
+  tokens, ties broken toward the latest admission — and evicts it:
+  ``paging.evict_chain`` drops the chain (refcount-aware: shared prefix
+  blocks another chain references survive), the drafter window resets,
+  and the request parks in ``PHASE_PREEMPTED`` with its full token
+  history (prompt + everything generated so far);
+* a parked request **resumes** through the existing chunked-prefill
+  path: its replay stream (prompt + generated-so-far) is outsourced
+  fragment by fragment, and greedy determinism makes the recompute
+  replay the stream token-exactly — the final fragment's argmax *is*
+  the token the request was about to decode, so resumption re-emits
+  nothing and continues bit-exact on both cache layouts, greedy and
+  speculative alike;
+* progress is guaranteed: the last non-preempted slot is never evicted
+  and admission rejects requests whose worst-case chain exceeds the
+  whole pool, so the maximal-progress request always runs to
+  retirement and frees its chain.
+
 Host Python keeps only what must be host-side: the rent/return ledger
 (`core/supervisor.CorePool`, itself a thin wrapper over the same jittable
 `runtime/pool` transitions), the prefix-hash map, the per-slot fragment
-cursors, and the request queue.
+cursors, the re-admission queue, and the request queue.
 """
 from __future__ import annotations
 
@@ -173,8 +199,11 @@ def build_decode_chunk(cfg: ArchConfig, *, chunk: int, eos_id: int,
     block chains on device (`paging.grow_for_decode`), then decodes.
     `emitted` is (n_slots, chunk) int32 (NO_TOKEN for idle cells),
     `iters` counts executed loop iterations (early exit when every slot
-    retires) and `stalls` counts slots force-retired because the block
-    pool ran dry (zero under the engine's admission-time reservation).
+    retires) and `stalls` counts slot-iterations that could not advance
+    because the block pool ran dry — zero under the engine's
+    admission-time reservation, and the pressure signal the over-commit
+    supervisor evicts on (a stalled slot stays active and resumes once
+    a chain is clawed back).
     The cache (and block state) is donated: the engine decodes in place.
     """
     decode = decode_fn or build_decode_step(cfg, rules)
@@ -199,7 +228,11 @@ def build_decode_chunk(cfg: ArchConfig, *, chunk: int, eos_id: int,
                          pos=jnp.where(active, new_cache["pos"], pos0))
         emitted = emitted.at[:, i].set(jnp.where(active, tok, NO_TOKEN))
         retire = active & ((tok == eos_id) | (n_out >= st.max_new))
-        return DecodeState(tok, n_out, st.max_new, active & ~retire), \
+        # a slot excluded from `active` by a block-pool stall stays in
+        # st.active: it simply didn't advance this iteration, and the
+        # over-commit supervisor relieves the pressure at the next sync
+        # (eviction) — deactivating it here would silently truncate it
+        return DecodeState(tok, n_out, st.max_new, st.active & ~retire), \
             cache, emitted
 
     if paged is None:
@@ -314,9 +347,11 @@ def build_mixed_tick(cfg: ArchConfig, *, chunk_tokens: int, eos_id: int,
         max_new = jnp.where(done_pref, frag_max_new, state.max_new)
         # same retirement rule as the decode chunk; like monolithic
         # admission, the first token is emitted without an EOS check and
-        # a budget of 1 is already spent by it
+        # a budget of 1 is already spent by it.  A stalled decode row
+        # (in state.active but not decode_rows) stays active — it didn't
+        # advance, and deactivating it would silently truncate it.
         retire = decode_rows & ((tok == eos_id) | (n_out >= max_new))
-        active = (decode_rows & ~retire) | (done_pref & (max_new > 1))
+        active = (state.active & ~retire) | (done_pref & (max_new > 1))
         emitted = jnp.where(emit, tok, NO_TOKEN)[:, None]
         return DecodeState(tok, n_out, max_new, active), cache, emitted
 
@@ -505,7 +540,8 @@ def _spec_core(cfg: ArchConfig, *, spec_k: int, width: int, eos_id: int,
                           state.n_out + jnp.where(decode_rows, n_emit, 0))
         max_new = jnp.where(done_pref, frag_max_new, state.max_new)
         retire = decode_rows & ((tok == eos_id) | (n_out >= max_new))
-        active = (decode_rows & ~retire) | (done_pref & (max_new > 1))
+        # stalled rows (state.active but not decode_rows) stay active
+        active = (state.active & ~retire) | (done_pref & (max_new > 1))
 
         emitted = jnp.where(
             emit_mask, greedy,
@@ -875,16 +911,23 @@ class _ChainPlan:
 class _PrefillJob:
     """Host cursor for one slot's incrementally outsourced prompt.
 
-    The request's prompt is fed to the mixed tick fragment by fragment;
-    ``cursor`` counts consumed tokens, ``registered`` the prefix-map
-    blocks published so far (a block becomes shareable only once the
-    fragment that writes it has been dispatched — a later chain must
-    never attend to an unwritten shared block)."""
+    ``stream`` is the token stream actually fed to the mixed tick —
+    the request's prompt for a fresh admission, or prompt + generated
+    history for a preempted request being resumed (the recompute
+    replay).  ``cursor`` counts consumed tokens, ``registered`` the
+    prefix-map blocks published so far (a block becomes shareable only
+    once the fragment that writes it has been dispatched — a later
+    chain must never attend to an unwritten shared block).  With
+    ``drop_first`` the final fragment's argmax is a *replayed* token
+    the request already emitted before eviction: it seeds the decode
+    state but is not re-delivered."""
 
     req: Request
     max_new_eff: int
+    stream: np.ndarray
     cursor: int = 0
     registered: int = 0
+    drop_first: bool = False
 
 
 class ServingEngine:
@@ -902,6 +945,18 @@ class ServingEngine:
     (runtime/paging.py): admission rents exactly what the prompt needs
     (sharing identical prefix blocks), reserves the worst-case decode
     remainder so growth can't starve, and retirement returns the chain.
+
+    With ``overcommit=True`` the §5.1 worst-case reservation is *not*
+    taken: admission asks only for the blocks a request needs now, so
+    occupancy rises to what the pool can physically hold, and when
+    growth runs the pool dry mid-flight the supervisor evicts a victim
+    (``preempt``) — its chain is clawed back refcount-aware, its request
+    parks in ``PHASE_PREEMPTED`` with its full token history, and it
+    resumes later by replaying that history through the chunked-prefill
+    path, token-exactly (greedy determinism; the engine cross-checks the
+    replayed pending token).  ``preempt(slot)`` is also callable
+    directly — forced eviction is the mechanism priority scheduling and
+    SLA tiers will drive.
     """
 
     def __init__(self, params, cfg: ArchConfig, *, n_slots: int,
@@ -916,7 +971,8 @@ class ServingEngine:
                  prefill_chunk_tokens: int = 16,
                  max_prefill_tokens_per_tick: Optional[int] = None,
                  speculative: bool = False, spec_k: int = 4,
-                 spec_hist: int = 64):
+                 spec_hist: int = 64,
+                 overcommit: bool = False):
         self.params, self.cfg = params, cfg
         self.max_seq, self.eos_id, self.chunk = max_seq, eos_id, chunk
         self.pool = CorePool(n_slots)
@@ -959,21 +1015,40 @@ class ServingEngine:
             self._plans: dict[int, _ChainPlan] = {}   # slot -> plan
         self._packed = cfg.family in PACKED_PREFILL_FAMILIES
         self.chunked = chunked_prefill
-        if chunked_prefill:
-            if cfg.family not in model_lib.PAGED_FAMILIES or cfg.frontend:
-                raise ValueError(
-                    f"chunked prefill supports causal attention caches "
-                    f"{model_lib.PAGED_FAMILIES} without a frontend, not "
-                    f"{cfg.family!r} (frontend={cfg.frontend!r})")
+        self.overcommit = overcommit
+        # preemption rides the fragment machinery (resume = replay the
+        # parked history through chunked prefill), so any causal-cache
+        # family gets it — chunked admission and over-commit merely
+        # require it up front
+        self._can_preempt = cfg.family in model_lib.PAGED_FAMILIES \
+            and not cfg.frontend
+        if chunked_prefill and not self._can_preempt:
+            raise ValueError(
+                f"chunked prefill supports causal attention caches "
+                f"{model_lib.PAGED_FAMILIES} without a frontend, not "
+                f"{cfg.family!r} (frontend={cfg.frontend!r})")
+        if overcommit and not self._can_preempt:
+            raise ValueError(
+                f"over-commit serving resumes preempted requests through "
+                f"the chunked-prefill path: causal attention caches "
+                f"{model_lib.PAGED_FAMILIES} without a frontend only, not "
+                f"{cfg.family!r} (frontend={cfg.frontend!r})")
+        self._jobs: dict[int, _PrefillJob] = {}
+        if self._can_preempt:
             if prefill_chunk_tokens < 1:
                 raise ValueError("prefill_chunk_tokens must be >= 1")
             if max_prefill_tokens_per_tick is not None \
                     and max_prefill_tokens_per_tick < 1:
                 raise ValueError(
                     "max_prefill_tokens_per_tick must be >= 1")
-            self._pchunk = int(prefill_chunk_tokens)
+            pchunk = int(prefill_chunk_tokens)
+            if speculative and not chunked_prefill:
+                # resume fragments ride the spec tick, whose verify
+                # width is spec_k + 1 — match it instead of widening
+                # every verify forward to the prefill fragment size
+                pchunk = max(2, int(spec_k) + 1)
+            self._pchunk = pchunk
             self._tick_budget = max_prefill_tokens_per_tick
-            self._jobs: dict[int, _PrefillJob] = {}
             self._mixed_fn = build_mixed_tick(
                 cfg, chunk_tokens=self._pchunk, eos_id=eos_id, rules=rules,
                 paged=self.layout)
@@ -1002,7 +1077,7 @@ class ServingEngine:
                                  "+ at least one continuation token)")
             self._spec_k = int(spec_k)
             self._spec_width = max(spec_k + 1,
-                                   self._pchunk if chunked_prefill else 0)
+                                   self._pchunk if self._can_preempt else 0)
             self.draft_state = draft_lib.init_draft_state(n_slots,
                                                           int(spec_hist))
             # the single tick composes with prompt fragments; the chunk
@@ -1015,6 +1090,25 @@ class ServingEngine:
                 cfg, spec_k=self._spec_k, eos_id=eos_id, iters=chunk,
                 rules=rules, paged=self.layout)
         self._finished_instant: list[Request] = []
+        # preemption: parked requests keep their slot (PHASE_PREEMPTED)
+        # but hold no KV; the re-admission queue resumes them oldest
+        # eviction first.  _slot_seq orders admissions for the victim
+        # policy's tie-break; _pressure flags a host-side scheduling
+        # shortfall (the device-side signal is the stall counter).
+        self._parked: dict[int, Request] = {}
+        self._park_order: list[int] = []
+        self._admit_seq = 0
+        self._slot_seq: dict[int, int] = {}
+        self._pressure = False
+        self._evicted_recently = False
+        self.preemptions = 0
+        self.resumes = 0
+        self.preempted_tokens = 0
+        self.preempt_replay_mismatches = 0
+        # occupancy: running (non-parked) slots per tick, the over-commit
+        # bench's numerator/denominator
+        self.occ_ticks = 0
+        self.occ_slot_ticks = 0
         # accounting: host round-trips vs the one-sync-per-slot-per-tick
         # baseline an un-refactored engine would have paid
         self.host_syncs = 0
@@ -1099,7 +1193,8 @@ class ServingEngine:
             if slot is None:
                 break                     # pool exhausted: queue upstream
             if self.layout is not None:
-                plan = self._plan_chain(req, plen,
+                plan = self._plan_chain(req.prompt, plen,
+                                        self._max_new_eff(req, plen),
                                         rent_now=not self.chunked)
                 if plan is None:          # block pool exhausted
                     self.pool.release(slot)
@@ -1107,8 +1202,10 @@ class ServingEngine:
                 if self.chunked:
                     self._commit_plan_chunked(slot, plan)
                 else:
-                    self._commit_plan(slot, plan, req)
+                    self._commit_plan(slot, plan, req.prompt)
             req.slot = slot
+            self._admit_seq += 1
+            self._slot_seq[slot] = self._admit_seq
             granted.append(req)
             consumed += 1
         if not granted:
@@ -1119,7 +1216,8 @@ class ServingEngine:
             for req in granted:
                 slot, plen = req.slot, len(req.prompt)
                 job = _PrefillJob(
-                    req=req, max_new_eff=self._max_new_eff(req, plen))
+                    req=req, max_new_eff=self._max_new_eff(req, plen),
+                    stream=np.asarray(req.prompt, np.int32))
                 if self.layout is not None:
                     plan = self._plans[slot]
                     # a fully-shared prefix needs no recompute: fast-
@@ -1153,36 +1251,63 @@ class ServingEngine:
         plen..plen+max_new-2, which must stay inside max_seq."""
         return min(req.max_new, self.max_seq - plen + 1)
 
-    def _plan_chain(self, req: Request, plen: int,
+    def _worst_blocks(self, plen: int, max_new_eff: int) -> int:
+        """The §5.1 worst-case chain: blocks the stream may reach if it
+        spends its whole budget (the last token is emitted, not
+        written)."""
+        return -(-(plen + max_new_eff - 1) // self.layout.block_size)
+
+    def _reserved_blocks(self) -> int:
+        """Blocks promised to in-flight chains beyond what they hold now
+        (reserved admission's un-rented remainder; 0 under over-commit,
+        which takes no reservations)."""
+        return sum(
+            max(0, p.worst_total - int(np.sum(self._tables_host[s] >= 0)))
+            for s, p in self._plans.items())
+
+    def _plan_chain(self, prompt, plen: int, max_new_eff: int,
                     rent_now: bool = True) -> Optional[_ChainPlan]:
-        """Pick the request's blocks from the host mirror: reuse shared
-        prompt-prefix blocks, rent new ones, and check the §5.1
-        reservation (worst-case chain) against the unreserved pool.
+        """Pick a token stream's blocks from the host mirror: reuse
+        shared prefix blocks, rent new ones, and check the admission
+        budget against the pool.  ``prompt`` is the stream actually
+        prefilled — the request's prompt, or the replay stream (prompt +
+        generated history) when a preempted request resumes.
+
+        Reserved admission checks the §5.1 worst-case chain against the
+        unreserved pool, so decode growth can never starve.  With
+        ``self.overcommit`` admission asks only for what the stream
+        needs *now* — the worst case is checked against the pool's total
+        capacity only (a request that couldn't complete even alone is
+        deferred, and `run_to_completion` reports its demand), and
+        mid-flight shortfalls are the preemption path's job.
 
         With ``rent_now=False`` (chunked prefill) no new blocks are
         picked — the chain holds only the shared prefix and grows
-        chunk-granularly as fragments are outsourced; the worst-case
-        reservation is still taken here, so lazy growth can never
-        starve."""
+        chunk-granularly as fragments are outsourced."""
         lo = self.layout
         bs = lo.block_size
         n_full = plen // bs
         shared: list[int] = []
         if self._prefix_sharing:
             for j in range(n_full):
-                blk = self._prefix_map.get(self._prefix_key(req.prompt, j))
+                blk = self._prefix_map.get(self._prefix_key(prompt, j))
                 if blk is None:
                     break
                 shared.append(blk)
         total_now = -(-plen // bs)
-        worst_total = -(-(plen + self._max_new_eff(req, plen) - 1) // bs)
+        worst_total = self._worst_blocks(plen, max_new_eff)
         used = int(np.sum(self._ref_host > 0))
-        reserve = sum(
-            max(0, p.worst_total - int(np.sum(self._tables_host[s] >= 0)))
-            for s, p in self._plans.items())
-        budget = lo.n_blocks - used - reserve
-        if worst_total - len(shared) > budget:
-            return None
+        if self.overcommit:
+            if worst_total > lo.n_blocks:
+                return None     # cannot complete even on an empty pool
+            need_now = (total_now if rent_now else len(shared)) \
+                - len(shared)
+            if need_now > lo.n_blocks - used:
+                return None
+        else:
+            budget = lo.n_blocks - used - self._reserved_blocks()
+            if worst_total - len(shared) > budget:
+                return None
         if not rent_now:
             return _ChainPlan(chain=list(shared), new_blocks=[],
                               n_shared=len(shared),
@@ -1192,8 +1317,7 @@ class ServingEngine:
         return _ChainPlan(chain=shared + new_blocks, new_blocks=new_blocks,
                           n_shared=len(shared), worst_total=worst_total)
 
-    def _commit_plan(self, slot: int, plan: _ChainPlan,
-                     req: Request) -> None:
+    def _commit_plan(self, slot: int, plan: _ChainPlan, prompt) -> None:
         """Host-mirror bookkeeping for a granted chain.  Prefix keys are
         registered here, *before* the group prefill, so later requests
         in the same admission round already share them (the group
@@ -1205,7 +1329,7 @@ class ServingEngine:
         row = self._tables_host[slot]
         row[:] = -1
         row[:len(plan.chain)] = plan.chain
-        self._register_prefixes(req, plan)
+        self._register_prefixes(prompt, plan)
 
     def _commit_plan_chunked(self, slot: int, plan: _ChainPlan) -> None:
         """Chunked admission commits only the *shared prefix*: reference
@@ -1233,13 +1357,13 @@ class ServingEngine:
         end = (j + 1) * self.layout.block_size - self._offset
         return (j, np.asarray(prompt[:max(0, end)], np.int32).tobytes())
 
-    def _register_prefixes(self, req: Request, plan: _ChainPlan) -> None:
+    def _register_prefixes(self, prompt, plan: _ChainPlan) -> None:
         if not self._prefix_sharing:
             return
-        plen = len(req.prompt) + self._offset
+        plen = len(prompt) + self._offset
         n_full = plen // self.layout.block_size
         for j in range(plan.n_shared, n_full):
-            key = self._prefix_key(req.prompt, j)
+            key = self._prefix_key(prompt, j)
             blk = plan.chain[j]
             self._prefix_map[key] = blk
             self._block_hash[blk] = key
@@ -1326,11 +1450,26 @@ class ServingEngine:
                 continue
             if budget <= 0:
                 break                 # token budget spent: rest wait a tick
-            prompt = job.req.prompt
+            prompt = job.stream
             plen = len(prompt)
             take = min(C, plen - job.cursor, budget)
             if take <= 0:
                 continue
+            if paged and self.overcommit:
+                # admit on current need: the fragment may only write
+                # positions the free pool can cover — a shortfall clamps
+                # the fragment (the job waits) and flags pressure so the
+                # host loop evicts a victim at the sync
+                plan = self._plans[slot]
+                need = (job.cursor + take - 1) // bs + 1
+                if need > len(plan.chain):
+                    free_now = int(np.sum(self._ref_host == 0))
+                    cover = (len(plan.chain) + free_now) * bs - job.cursor
+                    if cover < take:
+                        self._pressure = True
+                        take = cover
+                        if take <= 0:
+                            continue
             ft[slot, :take] = prompt[job.cursor:job.cursor + take]
             fl[slot] = take
             fmax[slot] = job.max_new_eff
@@ -1377,9 +1516,42 @@ class ServingEngine:
 
     def _decoding_slots(self) -> list[int]:
         """Active slots currently in the decode phase (not mid-prefill)."""
-        if not self.chunked:
+        if not self._jobs:
             return list(self.active)
         return [s for s in self.active if s not in self._jobs]
+
+    def _finish_jobs(self, finishing: list[int]) -> dict[int, _PrefillJob]:
+        """PREFILL -> DECODE transitions for slots whose final fragment
+        just ran; returns {slot: job} so the emission loop can apply the
+        resume replay-token bookkeeping (``drop_first``)."""
+        fin: dict[int, _PrefillJob] = {}
+        for slot in finishing:
+            job = self._jobs.pop(slot)
+            fin[slot] = job
+            self.pool.set_phase(slot, pool_lib.PHASE_DECODE)
+            self.baseline_syncs += 1
+            if self.spec:
+                # the drafter's match window is the consumed stream —
+                # for a resumed request that is prompt + replayed
+                # history, exactly what it held before eviction
+                self.draft_state = draft_lib.seed_slot(
+                    self.draft_state, slot, job.stream)
+        return fin
+
+    def _emit_row(self, req: Request, slot: int, row,
+                  fin: dict[int, _PrefillJob]) -> int:
+        """Deliver one emitted row to `req`; returns how many *decode*
+        tokens it carried (a finishing fragment's first token is prefill
+        output, and a resumed job's replayed token is dropped — already
+        delivered before eviction — after an exactness check)."""
+        new_toks = [int(t) for t in row if t != NO_TOKEN]
+        job = fin.get(slot)
+        if job is not None and job.drop_first and new_toks:
+            replay = new_toks.pop(0)
+            if not req.out or replay != req.out[-1]:
+                self.preempt_replay_mismatches += 1
+        req.out.extend(new_toks)
+        return 0 if slot in fin else len(new_toks)
 
     def _solo_step(self) -> list[Request]:
         """Cold-start packed prefill: no slot is decoding, so one job's
@@ -1411,18 +1583,11 @@ class ServingEngine:
             self._refresh_block_mirrors(tables_d, ref_d)
         self.host_syncs += 1
         self.device_ticks += 1
+        fin = self._finish_jobs(finishing)
         finished: list[Request] = []
         for s in finishing:                    # at most [slot]
-            del self._jobs[s]
-            self.pool.set_phase(s, pool_lib.PHASE_DECODE)
-            self.baseline_syncs += 1
-            if self.spec:
-                self.draft_state = draft_lib.seed_slot(
-                    self.draft_state, s, self.active[s].prompt)
             req = self.active[s]
-            tok = int(em[0])
-            if tok != NO_TOKEN:
-                req.out.append(tok)
+            self._emit_row(req, s, em, fin)
             if not active_mask[s]:             # max_new == 1 retires now
                 finished.append(req)
                 del self.active[s]
@@ -1481,8 +1646,8 @@ class ServingEngine:
         PREFILLING slots keep consuming prompt fragments; one host
         sync."""
         # pure decode goes through _spec_chunk_step; this tick only runs
-        # while prompt fragments are still being outsourced
-        assert self.chunked and self._jobs
+        # while prompt fragments (admission or resume) are outsourced
+        assert self._jobs
         W = self._spec_width
         decoding = self._decoding_slots()
         sched, finishing = self._schedule_fragments()
@@ -1522,28 +1687,18 @@ class ServingEngine:
             self.spec_slot_forwards += len(decoding)
             self.spec_drafted += int(drafted)
             self.spec_accepted += int(accepted)
-        fin_set = set(finishing)
-        for slot in finishing:
-            del self._jobs[slot]
-            self.pool.set_phase(slot, pool_lib.PHASE_DECODE)
-            self.baseline_syncs += 1
-            # the whole prompt is consumed: seed the drafter's history
-            # (the pending first token, device-side, stays out)
-            self.draft_state = draft_lib.seed_slot(
-                self.draft_state, slot, self.active[slot].prompt)
+        fin = self._finish_jobs(finishing)
         finished: list[Request] = []
         for slot, req in list(self.active.items()):
-            if self.chunked and slot in self._jobs:
+            if slot in self._jobs:
                 continue               # mid-prefill: nothing emitted yet
             if slot in self._need_first:
                 req.out.append(int(first[slot]))
                 self._need_first.discard(slot)
-            new_toks = [int(t) for t in em[slot] if t != NO_TOKEN]
-            req.out.extend(new_toks)
-            if slot not in fin_set:
-                self.decode_tokens += len(new_toks)
-                self.spec_decode_tokens += len(new_toks)
-                self.baseline_syncs += len(new_toks)
+            n_dec = self._emit_row(req, slot, em[slot], fin)
+            self.decode_tokens += n_dec
+            self.spec_decode_tokens += n_dec
+            self.baseline_syncs += n_dec
             if not active_mask[slot]:
                 finished.append(req)
                 del self.active[slot]
@@ -1559,7 +1714,8 @@ class ServingEngine:
             self.dstate, self.cache, emitted = self._mixed_fn(
                 self.params, self.dstate, self.cache, jnp.asarray(ft),
                 jnp.asarray(fl), jnp.asarray(flast), jnp.asarray(fmax))
-            em, active_mask = jax.device_get((emitted, self.dstate.active))
+            em, active_mask, first = jax.device_get(
+                (emitted, self.dstate.active, self._first))
         else:
             ft, fl, flast, fmax, fskip, fcols, frent = sched
             (self.dstate, self.cache, self.bstate, emitted,
@@ -1568,29 +1724,30 @@ class ServingEngine:
                 jnp.asarray(ft), jnp.asarray(fl), jnp.asarray(flast),
                 jnp.asarray(fmax), jnp.asarray(fskip), jnp.asarray(fcols),
                 jnp.asarray(frent))
-            em, active_mask, stalls, tables_d, ref_d = jax.device_get(
-                (emitted, self.dstate.active, stalls,
+            em, active_mask, first, stalls, tables_d, ref_d = jax.device_get(
+                (emitted, self.dstate.active, self._first, stalls,
                  self.cache["block_tables"], self.bstate.refcount))
             self._refresh_block_mirrors(tables_d, ref_d)
             self.stalls += int(stalls)
         self.host_syncs += 1
         self.device_ticks += 1
-        fin_set = set(finishing)
-        for slot in finishing:
-            # PREFILL -> DECODE: the final fragment's argmax is the first
-            # token (what monolithic admission paid one sync for)
-            del self._jobs[slot]
-            self.pool.set_phase(slot, pool_lib.PHASE_DECODE)
-            self.baseline_syncs += 1
+        # PREFILL -> DECODE for finishing slots: the final fragment's
+        # argmax is the first token (what monolithic admission paid one
+        # sync for) — or, resuming, the replayed token dropped below
+        fin = self._finish_jobs(finishing)
         finished: list[Request] = []
         for slot, req in list(self.active.items()):
             if slot in self._jobs:
                 continue               # mid-prefill: nothing emitted yet
-            new_toks = [int(t) for t in em[slot] if t != NO_TOKEN]
-            req.out.extend(new_toks)
-            if slot not in fin_set:
-                self.decode_tokens += len(new_toks)
-                self.baseline_syncs += len(new_toks)
+            if slot in self._need_first:
+                # a monolithically admitted slot decoding through the
+                # mixed tick (resume jobs share it) delivers its
+                # admission-prefill first token here, in order
+                req.out.append(int(first[slot]))
+                self._need_first.discard(slot)
+            n_dec = self._emit_row(req, slot, em[slot], fin)
+            self.decode_tokens += n_dec
+            self.baseline_syncs += n_dec
             if not active_mask[slot]:
                 finished.append(req)
                 del self.active[slot]
@@ -1602,25 +1759,56 @@ class ServingEngine:
         """Advance every active slot up to `chunk` tokens; one host sync.
 
         With chunked prefill, while any slot is still consuming prompt
-        fragments the engine ticks the unified prefill/decode step
-        instead (one token per decoding slot, one fragment per
-        prefilling slot, bounded latency); once every prompt is absorbed
-        it returns to multi-token decode chunks."""
+        fragments (admission *or* a preempted request's resume replay)
+        the engine ticks the unified prefill/decode step instead (one
+        token per decoding slot, one fragment per prefilling slot,
+        bounded latency); once every prompt is absorbed it returns to
+        multi-token decode chunks.
+
+        Over-commit supervision brackets the tick: parked requests are
+        re-admitted up front when the pool can take them back, and a
+        tick that ran the pool dry (device stall or host scheduling
+        shortfall) evicts one victim at the sync."""
         finished: list[Request] = []
         if self._finished_instant:
             finished, self._finished_instant = self._finished_instant, []
+        if self._parked:
+            self._resume_parked(force=not self.active)
         if not self.active:
             return finished
-        if self.chunked and self._jobs and not self._decoding_slots():
+        self.occ_ticks += 1
+        self.occ_slot_ticks += len(self.active)
+        stall_mark = self.stalls
+        if self._jobs and not self._decoding_slots():
             # nobody decoding -> no fairness to protect: pack one job's
             # fragments up to the tick budget through the solo tick
-            return finished + self._solo_step()
-        if self.spec:
-            if self.chunked and self._jobs:
-                return finished + self._spec_step()
-            return finished + self._spec_chunk_step()
-        if self.chunked and self._jobs:
-            return finished + self._mixed_step()
+            finished += self._solo_step()
+        elif self.spec:
+            if self._jobs:
+                finished += self._spec_step()
+            else:
+                finished += self._spec_chunk_step()
+        elif self._jobs:
+            finished += self._mixed_step()
+        else:
+            finished += self._decode_step()
+        if self.overcommit and (self._pressure or self.stalls > stall_mark):
+            # the tick ran the block pool dry: claw chains back until a
+            # block actually came free — a fully-shared victim relieves
+            # nothing (evict_chain frees 0), so parking it alone would
+            # spend a replay without moving the pressure
+            self._pressure = False
+            while True:
+                free0 = int(np.sum(self._ref_host == 0))
+                if self.preempt() is None:
+                    break
+                if int(np.sum(self._ref_host == 0)) > free0:
+                    break
+        return finished
+
+    def _decode_step(self) -> list[Request]:
+        """The multi-token decode chunk (no prefill fragments pending)."""
+        finished: list[Request] = []
         if self.layout is None:
             self.dstate, self.cache, emitted, iters = self._chunk_fn(
                 self.params, self.dstate, self.cache)
@@ -1654,6 +1842,140 @@ class ServingEngine:
                 self._retire_slot(slot, req)
         return finished
 
+    # -- preemption: evict under KV pressure, resume by replay --------------
+    def _drop_chain_host(self, slot: int, evict: bool) -> None:
+        """Drop `slot`'s block chain on device *and* in the host mirrors
+        (prefix-map upkeep included) — the shared tail of retirement and
+        eviction.  Refcount-aware on both sides: a shared prefix block
+        another chain references survives."""
+        plan = self._plans.pop(slot)
+        chain = self._tables_host[slot]
+        chain = chain[chain >= 0]
+        self.kv_bytes_allocated += \
+            (len(chain) - plan.n_shared) * self._block_bytes
+        if evict:
+            self.bstate, tables, _ = paging.evict_chain(
+                self.bstate, self.cache["block_tables"], slot)
+        else:
+            self.bstate, tables = paging.release_chain(
+                self.bstate, self.cache["block_tables"], slot)
+        self.cache = dict(self.cache, block_tables=tables)
+        for b in chain:
+            self._ref_host[b] -= 1
+            if self._ref_host[b] == 0:
+                key = self._block_hash.pop(int(b), None)
+                if key is not None and self._prefix_map.get(key) == int(b):
+                    del self._prefix_map[key]
+        self._tables_host[slot] = -1
+
+    def _pick_victim(self) -> Optional[int]:
+        """The eviction policy: fewest tokens generated first, ties
+        broken toward the latest admission (LIFO under equal progress).
+        The last running slot is never evicted — the maximal-progress
+        request always retires and frees its chain, which is what makes
+        over-commit terminate instead of thrash."""
+        if len(self.active) <= 1:
+            return None
+        return min(self.active,
+                   key=lambda s: (len(self.active[s].out),
+                                  -self._slot_seq.get(s, 0)))
+
+    def preempt(self, slot: Optional[int] = None) -> Optional[int]:
+        """Supervisor-initiated eviction: claw back a slot's rented KV
+        and park its request (PHASE_PREEMPTED) with its full token
+        history for a later recompute-based resume.  Call between steps
+        (the host owns synced state there).  With ``slot=None`` the
+        victim policy picks; returns the parked request's rid, or
+        ``None`` when nothing is evictable."""
+        if not self._can_preempt:
+            raise RuntimeError(
+                "preemption needs the chunked-prefill resume path "
+                "(causal attention cache, no frontend)")
+        if slot is None:
+            slot = self._pick_victim()
+            if slot is None:
+                return None
+        elif slot not in self.active:
+            raise ValueError(f"slot {slot} has no active request")
+        req = self.active.pop(slot)
+        self._jobs.pop(slot, None)
+        self._need_first.discard(slot)
+        # device: the slot goes dark — exactly the shape a never-admitted
+        # slot has, so the next tick cannot read or write through it
+        self.dstate = self.dstate._replace(
+            active=self.dstate.active.at[slot].set(False))
+        self.cache["pos"] = self.cache["pos"].at[slot].set(0)
+        if self.layout is not None:
+            self._drop_chain_host(slot, evict=True)
+        if self.spec:
+            self.draft_state = draft_lib.evict_slot(self.draft_state, slot)
+        self._parked[slot] = req
+        self._park_order.append(slot)
+        self.pool.set_phase(slot, pool_lib.PHASE_PREEMPTED)
+        self.preemptions += 1
+        self.preempted_tokens += len(req.out)
+        self._evicted_recently = True
+        return req.rid
+
+    def _resume_stream(self, req: Request):
+        """The replay stream for a parked request: prompt + everything
+        generated *except* the pending last token (its KV row was never
+        written — it is what the final replay fragment's argmax
+        reproduces), plus the remaining device budget."""
+        plen = len(req.prompt) + self._offset
+        eff = self._max_new_eff(req, plen)
+        if not req.out:
+            return np.asarray(req.prompt, np.int32), eff, False
+        stream = np.concatenate(
+            [np.asarray(req.prompt, np.int32),
+             np.asarray(req.out[:-1], np.int32)])
+        # the device counts n_out from 1 at the PREFILL -> DECODE
+        # transition, so the replayed budget is the *remaining* tokens
+        # plus the replayed one
+        return stream, eff - len(req.out) + 1, True
+
+    def _resume_parked(self, force: bool = False) -> None:
+        """Re-admit parked requests (oldest eviction first) through the
+        chunked-prefill path.  A one-step damper after an eviction keeps
+        a resume from stealing back the blocks the eviction just freed
+        for the pressured runners; ``force`` overrides it when nothing
+        else can run."""
+        if self._evicted_recently and not force:
+            self._evicted_recently = False
+            return
+        while self._park_order:
+            slot = self._park_order[0]
+            req = self._parked[slot]
+            stream, max_new_eff, drop = self._resume_stream(req)
+            job = _PrefillJob(req=req, max_new_eff=max_new_eff,
+                              stream=stream, drop_first=drop)
+            if self.layout is not None:
+                plan = self._plan_chain(stream, len(stream) + self._offset,
+                                        max_new_eff, rent_now=False)
+                if plan is None:
+                    break            # no capacity yet; FIFO order holds
+                if self.overcommit and not force \
+                        and plan.n_shared * self.layout.block_size \
+                        < len(stream) \
+                        and not np.any(self._ref_host == 0):
+                    break            # replay would stall on its first
+                    #                  unshared fragment: wait for blocks
+                self._commit_plan_chunked(slot, plan)
+                # a fully-shared replay prefix needs no recompute (but
+                # keep >= 1 token for the final fragment's logits)
+                job.cursor = min(plan.n_shared * self.layout.block_size,
+                                 len(stream) - 1)
+                job.registered = plan.n_shared
+            self._park_order.pop(0)
+            del self._parked[slot]
+            self.cache["pos"] = self.cache["pos"].at[slot].set(job.cursor)
+            self.active[slot] = req
+            self._jobs[slot] = job
+            self.pool.set_phase(slot, pool_lib.PHASE_PREFILL)
+            self._admit_seq += 1
+            self._slot_seq[slot] = self._admit_seq
+            self.resumes += 1
+
     def _retire_slot(self, slot: int, req: Request) -> None:
         """Return the core — and, paged, the block chain — to the pool
         (§4.3 terminate)."""
@@ -1662,24 +1984,7 @@ class ServingEngine:
             self.kv_bytes_allocated += self._slot_bytes
             self.pool.release(slot)
             return
-        plan = self._plans.pop(slot)
-        chain = self._tables_host[slot]
-        chain = chain[chain >= 0]
-        self.kv_bytes_allocated += \
-            (len(chain) - plan.n_shared) * self._block_bytes
-        # device: drop one reference per chain block, free refcount-zero
-        # blocks, clear the table row
-        self.bstate, tables = paging.release_chain(
-            self.bstate, self.cache["block_tables"], slot)
-        self.cache = dict(self.cache, block_tables=tables)
-        # host mirror + prefix map upkeep
-        for b in chain:
-            self._ref_host[b] -= 1
-            if self._ref_host[b] == 0:
-                key = self._block_hash.pop(int(b), None)
-                if key is not None and self._prefix_map.get(key) == int(b):
-                    del self._prefix_map[key]
-        self._tables_host[slot] = -1
+        self._drop_chain_host(slot, evict=False)
         self.pool.release(slot)
 
     def run_to_completion(self, requests: list[Request], max_ticks=10_000):
@@ -1694,30 +1999,58 @@ class ServingEngine:
         pending = list(requests)
         done = []
         start_ticks = self.device_ticks
-        while (pending or self.active or self._finished_instant) and \
+        while (pending or self.active or self._parked
+               or self._finished_instant) and \
                 self.device_ticks - start_ticks < max_ticks:
             n = self.admit_many(pending)
             del pending[:n]
-            if not self.active and not self._finished_instant:
+            if not self.active and not self._parked \
+                    and not self._finished_instant:
                 if pending:    # no capacity rentable and none draining
-                    raise RuntimeError(
-                        f"{len(pending)} requests stuck: pool has no "
-                        f"rentable slot/blocks and no active request to "
-                        f"drain")
+                    raise RuntimeError(self._stuck_report(pending))
                 break
             done += self.step()
         if self._finished_instant:     # complete, just not yet reported
             done += self._finished_instant
             self._finished_instant = []
-        if pending or self.active:
+        if pending or self.active or self._parked:
             rids = sorted([r.rid for r in self.active.values()] +
+                          [r.rid for r in self._parked.values()] +
                           [r.rid for r in pending])
             raise RuntimeError(
                 f"max_ticks={max_ticks} exhausted with {len(self.active)} "
-                f"active and {len(pending)} pending requests undrained "
-                f"(rids {rids}); partial outputs remain on the Request "
-                f"objects")
+                f"active, {len(self._parked)} preempted and {len(pending)} "
+                f"pending requests undrained (rids {rids}); partial "
+                f"outputs remain on the Request objects")
         return done, self.device_ticks - start_ticks
+
+    def _stuck_report(self, pending: list[Request]) -> str:
+        """Per-request block demand vs pool capacity for the stuck-pool
+        error: a bare stuck-request count makes over-commit failures
+        (and any undersized pool) undiagnosable."""
+        lines = [f"{len(pending)} requests stuck: pool has no rentable "
+                 f"slot/blocks and no active request to drain"]
+        lines.append(f"slot pool: {self.pool.n} slots, "
+                     f"{self.pool.available} available")
+        if self.layout is not None:
+            bs = self.layout.block_size
+            free = int(np.sum(self._ref_host == 0))
+            lines.append(
+                f"block pool: {self.layout.n_blocks} blocks of "
+                f"{bs} positions, {free} free, "
+                f"{self._reserved_blocks()} reserved "
+                f"(admission={'overcommit' if self.overcommit else 'reserved'})")
+            for r in pending[:8]:
+                plen = len(r.prompt) + self._offset
+                now = -(-plen // bs)
+                worst = self._worst_blocks(plen, self._max_new_eff(r, plen))
+                lines.append(
+                    f"  rid {r.rid}: prompt {plen} tokens -> needs {now} "
+                    f"blocks now, {worst} worst-case, vs "
+                    f"{self.layout.n_blocks} total")
+            if len(pending) > 8:
+                lines.append(f"  ... and {len(pending) - 8} more")
+        return "\n".join(lines)
 
     # -- accounting ---------------------------------------------------------
     def reset_stats(self) -> None:
@@ -1734,6 +2067,9 @@ class ServingEngine:
         self.spec_forwards = self.spec_slot_forwards = 0
         self.spec_decode_tokens = 0
         self.spec_drafted = self.spec_accepted = 0
+        self.preemptions = self.resumes = 0
+        self.preempted_tokens = self.preempt_replay_mismatches = 0
+        self.occ_ticks = self.occ_slot_ticks = 0
         if self.layout is not None:
             # the block high-water mark restarts from what is in use now
             pool = self.bstate.pool
@@ -1772,6 +2108,26 @@ class ServingEngine:
             "accepted": int(self.spec_accepted),
             "acceptance_rate":
                 self.spec_accepted / max(1, self.spec_drafted),
+        }
+
+    def occupancy_stats(self) -> dict:
+        """Over-commit economics: the mean fraction of slots actually
+        running per tick (parked slots excluded — they hold no KV), the
+        eviction/resume counts, and what the evictions cost in replayed
+        tokens.  ``preempt_replay_mismatches`` must stay 0: greedy
+        determinism makes every resume replay its history token-exactly,
+        and the engine checks the replayed pending token against the one
+        delivered before eviction."""
+        return {
+            "overcommit": bool(self.overcommit),
+            "ticks": int(self.occ_ticks),
+            "occupancy": self.occ_slot_ticks
+            / max(1, self.occ_ticks * self.pool.n),
+            "preemptions": int(self.preemptions),
+            "resumes": int(self.resumes),
+            "preempted_tokens_recomputed": int(self.preempted_tokens),
+            "preempt_replay_mismatches":
+                int(self.preempt_replay_mismatches),
         }
 
     def kv_stats(self) -> dict:

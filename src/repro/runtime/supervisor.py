@@ -150,7 +150,8 @@ class ClusterSupervisor:
     def plan_serve(self, *, chunk: int = 8, eos_id: int = 1,
                    paged: Optional[model_lib.PagedLayout] = None,
                    speculative: Optional[int] = None,
-                   spec_hist: int = 64) -> Plan:
+                   spec_hist: int = 64,
+                   overcommit: Optional[int] = None) -> Plan:
         """The device-resident continuous-batching tick (serve_lib): one
         jitted chunk advances every slot up to `chunk` tokens with the
         supervisor state (active mask, budgets) resident on device.  The
@@ -166,13 +167,24 @@ class ClusterSupervisor:
         (`serve_lib.build_spec_tick`): drafter state rides along
         (donated, per-slot sharded like the decode state) and the step
         consumes per-slot fragment inputs, emitting up to ``spec_k + 1``
-        tokens per slot per forward."""
+        tokens per slot per forward.
+
+        With ``overcommit`` given (the fragment width, tokens), the
+        lowered step is the **eviction-aware unified prefill/decode
+        tick** (`serve_lib.build_mixed_tick`) the over-commit engine
+        drives between evictions and resumes: every slot advances one
+        fragment or one token per call, and the parked-request replay
+        rides the same fragment inputs.  Speculative takes precedence —
+        the spec tick already composes with fragments."""
         cfg, shape = self.cfg, self.shape
         n_slots = shape.global_batch
         if speculative is not None:
             return self._plan_serve_spec(spec_k=speculative,
                                          spec_hist=spec_hist,
                                          eos_id=eos_id, paged=paged)
+        if overcommit is not None:
+            return self._plan_serve_overcommit(chunk_tokens=overcommit,
+                                               eos_id=eos_id, paged=paged)
         step = serve_lib.build_decode_chunk(
             cfg, chunk=chunk, eos_id=eos_id, rules=self.rules, jit=False,
             paged=paged)
@@ -201,6 +213,66 @@ class ClusterSupervisor:
             out_sh.append(self._sh(bspec))
             donate = (2, 3)             # ... and the block pool with it
         out_sh += [self._sh(emitted_spec), self._sh(P())]
+        if paged is not None:
+            out_sh.append(self._sh(P()))     # stall counter
+        return Plan(
+            name=f"{cfg.name}/{shape.name}", kind="serve", step_fn=step,
+            abstract_args=tuple(abstract_args),
+            in_shardings=tuple(in_sh),
+            out_shardings=tuple(out_sh),
+            donate_argnums=donate,
+            rules=self.rules, qt_graph=self.qt_graph(), notes=self._notes())
+
+    def _plan_serve_overcommit(self, *, chunk_tokens: int, eos_id: int,
+                               paged: Optional[model_lib.PagedLayout]
+                               ) -> Plan:
+        """Lower the eviction-aware mixed tick with explicit shardings:
+        per-slot fragment inputs (sharded like the decode state), the
+        cache — and, paged, the block pool plus the chunk-granular rent
+        commits — donated.  Eviction and resume themselves are host
+        supervisor actions between ticks (`ServingEngine.preempt` /
+        `_resume_parked`); the device step they bracket is this one."""
+        cfg, shape = self.cfg, self.shape
+        n_slots = shape.global_batch
+        c = chunk_tokens
+        step = serve_lib.build_mixed_tick(
+            cfg, chunk_tokens=c, eos_id=eos_id, rules=self.rules,
+            jit=False, paged=paged)
+        params = model_lib.abstract(cfg, self.dtype)
+        pspec = train_lib.state_specs(cfg, self.rules)["params"]
+        state = serve_lib.abstract_decode_state(n_slots)
+        slot_spec = self.rules.spec(("cache_batch",), (n_slots,))
+        sspec = serve_lib.DecodeState(*([slot_spec] * len(state)))
+        cache = model_lib.init_cache(cfg, n_slots, shape.seq_len,
+                                     dtype=self.dtype, abstract_only=True,
+                                     layout=paged)
+        cspec = self._cache_specs(cache, paged=paged is not None)
+        row_spec = self.rules.spec(("cache_batch", None), (n_slots, c))
+        i32 = lambda s: jax.ShapeDtypeStruct(s, jnp.int32)  # noqa: E731
+        frag = [i32((n_slots, c)), i32((n_slots,)),
+                jax.ShapeDtypeStruct((n_slots,), jnp.bool_),
+                i32((n_slots,))]
+        frag_sh = [row_spec, slot_spec, slot_spec, slot_spec]
+        abstract_args = [params, state, cache]
+        in_sh = [self._sh(pspec), self._sh(sspec), self._sh(cspec)]
+        out_sh = [self._sh(sspec), self._sh(cspec)]
+        donate = (2,)                   # the cache ticks in place
+        if paged is not None:
+            from repro.runtime import paging
+            bstate = paging.abstract_blocks(paged.n_blocks)
+            bspec = jax.tree_util.tree_map(lambda _: P(), bstate)
+            abstract_args.append(bstate)
+            in_sh.append(self._sh(bspec))
+            out_sh.append(self._sh(bspec))
+            donate = (2, 3)             # ... and the block pool with it
+            k = c // paged.block_size + 2
+            rowk = self.rules.spec(("cache_batch", None), (n_slots, k))
+            frag += [i32((n_slots,)), i32((n_slots, k)), i32((n_slots, k))]
+            frag_sh += [slot_spec, rowk, rowk]
+        abstract_args += frag
+        in_sh += [self._sh(s) for s in frag_sh]
+        emitted_spec = self.rules.spec(("cache_batch", None), (n_slots, 1))
+        out_sh.append(self._sh(emitted_spec))
         if paged is not None:
             out_sh.append(self._sh(P()))     # stall counter
         return Plan(

@@ -1,0 +1,145 @@
+"""Shared engine-vs-oracle harness for the serving test tree.
+
+The token-exactness contract is the same across every serving feature
+(paged KV, chunked prefill, speculative decode, preemptive over-commit):
+run a request stream through a configured engine and compare it, token
+for token, against a baseline.  The fixtures here hold the pieces that
+used to be copy-pasted across test_serve.py, test_chunked_prefill.py
+and test_spec_decode.py:
+
+* ``serve_setup`` — the tiny session-scoped (cfg, params) every engine
+  test decodes with;
+* ``serve_harness`` — request generators (random / repetitive / mixed
+  long+short), the copy-model transform (a real forward whose argmax
+  copies its input token — the drafter-friendly regime), the drive loop
+  (with optional forced preemptions), and the drained-pool assertions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models import model
+from repro.runtime import paging
+from repro.runtime.serve import Request, ServingEngine
+
+
+@pytest.fixture(scope="session")
+def serve_setup():
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=1, d_model=64,
+                  vocab=128)
+    params = model.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    return cfg, params
+
+
+class ServeHarness:
+    """Namespace of the shared engine-vs-oracle helpers (stateless)."""
+
+    @staticmethod
+    def copy_model(params, cfg):
+        """Params whose forward copies its input token: every block's
+        residual contribution is zeroed and the unembedding is tied, so
+        argmax(logits(t)) == t.  Greedy decode becomes a constant
+        stream — the perfectly repetitive regime where the n-gram
+        drafter reaches full acceptance, through a real forward."""
+        p = dict(params)
+        p["layers"] = dict(p["layers"],
+                           wo=jnp.zeros_like(p["layers"]["wo"]),
+                           w_down=jnp.zeros_like(p["layers"]["w_down"]))
+        if not cfg.tie_embeddings:
+            p["unembed"] = p["embed"]["tok"]
+        return p
+
+    @staticmethod
+    def random_requests(n=5, seed=5, min_new=4, max_new=12):
+        rng = np.random.default_rng(seed)
+        return [Request(i, rng.integers(2, 100,
+                                        size=int(rng.integers(4, 12)))
+                        .astype(np.int32),
+                        max_new=int(rng.integers(min_new, max_new)))
+                for i in range(n)]
+
+    @staticmethod
+    def repetitive_requests(n=5, seed=3):
+        """Prompts ending in a constant run: the drafter's bread and
+        butter once the model continues the repetition."""
+        rng = np.random.default_rng(seed)
+        out = []
+        for i in range(n):
+            head = rng.integers(2, 100,
+                                size=int(rng.integers(3, 8))) \
+                .astype(np.int32)
+            tail = np.full(int(rng.integers(4, 9)),
+                           int(rng.integers(2, 100)), np.int32)
+            out.append(Request(i, np.concatenate([head, tail]),
+                               max_new=int(rng.integers(8, 20))))
+        return out
+
+    @staticmethod
+    def mixed_requests(n_short=4, long_len=30):
+        """Short prompts plus one long one (the head-of-line blocker)."""
+        rng = np.random.default_rng(5)
+        reqs = [Request(i, rng.integers(1, 100,
+                                        size=int(rng.integers(4, 12)))
+                        .astype(np.int32),
+                        max_new=int(rng.integers(4, 10)))
+                for i in range(n_short)]
+        reqs.append(Request(n_short,
+                            rng.integers(1, 100, size=long_len)
+                            .astype(np.int32), max_new=6))
+        return reqs
+
+    @staticmethod
+    def pressure_requests(n=6, seed=5):
+        """Medium prompts with real decode budgets: sized so a small
+        block pool runs dry mid-flight under over-commit admission."""
+        rng = np.random.default_rng(seed)
+        return [Request(i, rng.integers(1, 100,
+                                        size=int(rng.integers(6, 16)))
+                        .astype(np.int32),
+                        max_new=int(rng.integers(10, 18)))
+                for i in range(n)]
+
+    @staticmethod
+    def drive(eng, requests, preempt_at=(), max_steps=2000):
+        """Continuous-batching drive loop with optional supervisor
+        preemptions forced at the given step numbers; returns
+        {rid: tokens}."""
+        pending = list(requests)
+        done, steps = [], 0
+        while pending or eng.active or eng._parked \
+                or eng._finished_instant:
+            n = eng.admit_many(pending)
+            del pending[:n]
+            done += eng.step()
+            steps += 1
+            if steps in preempt_at:
+                eng.preempt()
+            assert steps < max_steps, "drive loop did not converge"
+        return {r.rid: r.out for r in done}
+
+    @classmethod
+    def run(cls, params, cfg, requests, *, preempt_at=(), **engine_kw):
+        """Build an engine, drive the stream, return (outputs, engine)."""
+        eng = ServingEngine(params, cfg, **engine_kw)
+        outputs = cls.drive(eng, requests, preempt_at=preempt_at)
+        return outputs, eng
+
+    @staticmethod
+    def assert_drained(eng):
+        """Every rent returned: slots free, chains released, refcounts /
+        free mask / tables in agreement, replays token-exact."""
+        assert eng.pool.used == 0
+        assert not eng._parked and not eng._jobs
+        assert eng.preempt_replay_mismatches == 0
+        if eng.layout is not None:
+            assert int(paging.blocks_in_use(eng.bstate)) == 0
+            paging.check_invariants(eng.bstate, eng.cache["block_tables"])
+
+
+@pytest.fixture(scope="session")
+def serve_harness():
+    return ServeHarness

@@ -29,26 +29,9 @@ from repro.runtime import pool as pool_lib
 from repro.runtime.serve import Request, ServingEngine
 
 
-@pytest.fixture(scope="module")
-def setup():
-    cfg = reduced(get_arch("granite-3-2b"), n_layers=1, d_model=64,
-                  vocab=128)
-    params = model.init(jax.random.PRNGKey(0), cfg, jnp.float32)
-    return cfg, params
-
-
-def _mixed_requests(n_short=4, long_len=30):
-    """Short prompts plus one long one (the head-of-line blocker)."""
-    rng = np.random.default_rng(5)
-    reqs = [Request(i, rng.integers(1, 100,
-                                    size=int(rng.integers(4, 12)))
-                    .astype(np.int32),
-                    max_new=int(rng.integers(4, 10)))
-            for i in range(n_short)]
-    reqs.append(Request(n_short,
-                        rng.integers(1, 100, size=long_len)
-                        .astype(np.int32), max_new=6))
-    return reqs
+# the shared (cfg, params) fixture and the mixed long/short request
+# generator live in tests/runtime/conftest.py: `serve_setup` /
+# `serve_harness`
 
 
 # ---------------------------------------------------------------------------
@@ -80,8 +63,8 @@ def _drive_chunks(params, cfg, cache, toks, lengths, C):
 
 
 @pytest.mark.parametrize("C", [4, 5])
-def test_prefill_chunk_matches_monolithic_contiguous(setup, C):
-    cfg, params = setup
+def test_prefill_chunk_matches_monolithic_contiguous(serve_setup, C):
+    cfg, params = serve_setup
     max_seq = 32
     toks = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (3, 11),
                                          1, cfg.vocab), np.int32)
@@ -103,8 +86,8 @@ def test_prefill_chunk_matches_monolithic_contiguous(setup, C):
     np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
 
 
-def test_prefill_chunk_matches_monolithic_paged(setup):
-    cfg, params = setup
+def test_prefill_chunk_matches_monolithic_paged(serve_setup):
+    cfg, params = serve_setup
     max_seq, bs = 32, 8
     layout = model.PagedLayout(block_size=bs, n_blocks=16)
     toks = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (2, 11),
@@ -126,7 +109,7 @@ def test_prefill_chunk_matches_monolithic_paged(setup):
         tok = jnp.argmax(l1, -1).astype(jnp.int32)
 
 
-def test_prefill_chunk_rejects_unsupported_families(setup):
+def test_prefill_chunk_rejects_unsupported_families(serve_setup):
     cfg_ssm = reduced(get_arch("mamba2-780m"))
     with pytest.raises(ValueError, match="chunked prefill"):
         model.prefill_chunk({}, jnp.zeros((1, 4), jnp.int32),
@@ -137,13 +120,13 @@ def test_prefill_chunk_rejects_unsupported_families(setup):
 # engine level: token-exact continuous batching, no head-of-line stalls
 # ---------------------------------------------------------------------------
 
-def test_chunked_engine_token_exact_vs_monolithic(setup):
-    cfg, params = setup
+def test_chunked_engine_token_exact_vs_monolithic(serve_setup, serve_harness):
+    cfg, params = serve_setup
     e_m = ServingEngine(params, cfg, n_slots=3, max_seq=48)
-    done_m, _ = e_m.run_to_completion(_mixed_requests())
+    done_m, _ = e_m.run_to_completion(serve_harness.mixed_requests())
     e_c = ServingEngine(params, cfg, n_slots=3, max_seq=48,
                         chunked_prefill=True, prefill_chunk_tokens=8)
-    done_c, _ = e_c.run_to_completion(_mixed_requests())
+    done_c, _ = e_c.run_to_completion(serve_harness.mixed_requests())
     assert {r.rid: r.out for r in done_m} == {r.rid: r.out for r in done_c}
     assert e_c.pool.used == 0
     # one compile for every prompt length (no pow2 span buckets), and the
@@ -152,17 +135,17 @@ def test_chunked_engine_token_exact_vs_monolithic(setup):
 
 
 @pytest.mark.parametrize("C", [8, 5])
-def test_chunked_engine_token_exact_paged(setup, C):
+def test_chunked_engine_token_exact_paged(serve_setup, serve_harness, C):
     """Paged chunk-granular renting: exact tokens, clean pool, no stalls
     — with the fragment size aligned and unaligned to the block size."""
-    cfg, params = setup
+    cfg, params = serve_setup
     e_m = ServingEngine(params, cfg, n_slots=3, max_seq=48, paged=True,
                         block_size=8, n_blocks=20)
-    done_m, _ = e_m.run_to_completion(_mixed_requests())
+    done_m, _ = e_m.run_to_completion(serve_harness.mixed_requests())
     e_c = ServingEngine(params, cfg, n_slots=3, max_seq=48, paged=True,
                         block_size=8, n_blocks=20, chunked_prefill=True,
                         prefill_chunk_tokens=C)
-    done_c, _ = e_c.run_to_completion(_mixed_requests())
+    done_c, _ = e_c.run_to_completion(serve_harness.mixed_requests())
     assert {r.rid: r.out for r in done_m} == {r.rid: r.out for r in done_c}
     assert e_c.stalls == 0
     assert e_c.pool.used == 0
@@ -170,11 +153,11 @@ def test_chunked_engine_token_exact_paged(setup, C):
     paging.check_invariants(e_c.bstate, e_c.cache["block_tables"])
 
 
-def test_long_prompt_mid_decode_does_not_perturb_active_slots(setup):
+def test_long_prompt_mid_decode_does_not_perturb_active_slots(serve_setup):
     """The mixed tick's whole point: outsourcing a long prompt fragment
     by fragment must leave already-active slots' token streams exactly
     as a decode-only run produces them."""
-    cfg, params = setup
+    cfg, params = serve_setup
     short = [Request(i, np.arange(1 + i, 9 + i, dtype=np.int32),
                      max_new=10) for i in range(2)]
 
@@ -198,12 +181,12 @@ def test_long_prompt_mid_decode_does_not_perturb_active_slots(setup):
     assert got[0] == solo[0] and got[1] == solo[1]
 
 
-def test_prefix_sharing_across_chunk_boundary(setup):
+def test_prefix_sharing_across_chunk_boundary(serve_setup):
     """A chain becomes shareable only once written: admit the source,
     let its prefill finish, then admit a sharer whose 2-block shared
     prefix spans two fragments — the sharer skips the shared recompute
     and both streams stay exact vs the unshared engine."""
-    cfg, params = setup
+    cfg, params = serve_setup
     base = np.arange(1, 21, dtype=np.int32)      # 2 full 8-blocks + tail
     tail = np.concatenate([base, [77, 78]]).astype(np.int32)
 
@@ -239,11 +222,11 @@ def test_prefix_sharing_across_chunk_boundary(setup):
     assert eng_s.stalls == 0
 
 
-def test_tick_token_budget_bounds_prefill_per_tick(setup):
+def test_tick_token_budget_bounds_prefill_per_tick(serve_setup):
     """Two long prompts under a one-fragment budget: the scheduler
     serializes them (bounded per-tick latency) and outputs are still
     exact vs the unbudgeted engine."""
-    cfg, params = setup
+    cfg, params = serve_setup
     reqs = [Request(0, np.arange(1, 25, dtype=np.int32), max_new=4),
             Request(1, np.arange(2, 26, dtype=np.int32), max_new=4)]
 
@@ -266,10 +249,10 @@ def test_tick_token_budget_bounds_prefill_per_tick(setup):
     assert {r.rid: r.out for r in done} == {r.rid: r.out for r in done_f}
 
 
-def test_phase_ledger_tracks_fragment_lifecycle(setup):
+def test_phase_ledger_tracks_fragment_lifecycle(serve_setup):
     """PHASE_PREFILL while fragments are outsourced, PHASE_DECODE once
     the prompt is absorbed, PHASE_IDLE after retirement."""
-    cfg, params = setup
+    cfg, params = serve_setup
     eng = ServingEngine(params, cfg, n_slots=2, max_seq=48,
                         chunked_prefill=True, prefill_chunk_tokens=8)
     req = Request(0, np.arange(1, 21, dtype=np.int32), max_new=3)
@@ -287,7 +270,7 @@ def test_phase_ledger_tracks_fragment_lifecycle(setup):
     pool_lib.check_invariants(eng.pool.state)
 
 
-def test_chunked_rejects_unsupported_families(setup):
+def test_chunked_rejects_unsupported_families(serve_setup):
     cfg_ssm = reduced(get_arch("mamba2-780m"))
     params = model.init(jax.random.PRNGKey(0), cfg_ssm, jnp.float32)
     with pytest.raises(ValueError, match="chunked prefill"):

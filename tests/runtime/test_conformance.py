@@ -1,0 +1,206 @@
+"""Cross-config serving conformance matrix.
+
+One contract, every configuration: the serving engine's token stream is
+a pure function of (params, requests) — the cache layout ({contiguous,
+paged}), the prefill strategy ({monolithic, chunked}), the decode mode
+({greedy, speculative}) and the admission discipline ({reserved,
+overcommit}) are implementation choices that must not change a single
+token.  Each matrix cell runs the same request stream through its
+engine **with supervisor preemptions forced mid-run** (and, for paged
+over-commit cells, a pool small enough that natural evictions fire
+too), then compares token-for-token against the uncontended oracle —
+the plain contiguous/monolithic/greedy/reserved engine.
+
+This is the acceptance gate for preemptive over-commit: a preempted
+request resumes by replaying its history through chunked prefill, and
+greedy determinism must make the recompute token-exact on every cell.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.runtime import pool as pool_lib
+from repro.runtime.serve import ServingEngine
+
+N_SLOTS = 3
+MAX_SEQ = 48
+CHUNK = 2            # short sync chunks: many steps, real mid-run evictions
+SMALL_POOL = 7       # over-commit cells: chains must contend for blocks
+BIG_POOL = 20        # reserved cells: the §5.1 reservation always grantable
+
+MATRIX = list(itertools.product(("contiguous", "paged"),
+                                ("monolithic", "chunked"),
+                                ("greedy", "speculative"),
+                                ("reserved", "overcommit")))
+
+
+def _engine_kw(layout, chunking, decode, admission):
+    kw = dict(n_slots=N_SLOTS, max_seq=MAX_SEQ, chunk=CHUNK)
+    if layout == "paged":
+        kw.update(paged=True, block_size=8,
+                  n_blocks=SMALL_POOL if admission == "overcommit"
+                  else BIG_POOL)
+    if chunking == "chunked":
+        kw.update(chunked_prefill=True, prefill_chunk_tokens=4)
+    if decode == "speculative":
+        kw.update(speculative=True, spec_k=3)
+    if admission == "overcommit":
+        kw.update(overcommit=True)
+    return kw
+
+
+@pytest.fixture(scope="module")
+def oracle(serve_setup, serve_harness):
+    """The uncontended baseline: plain engine, no preemption, big pool."""
+    cfg, params = serve_setup
+    outputs, eng = serve_harness.run(
+        params, cfg, serve_harness.pressure_requests(),
+        n_slots=N_SLOTS, max_seq=MAX_SEQ, chunk=CHUNK)
+    serve_harness.assert_drained(eng)
+    return outputs
+
+
+@pytest.mark.parametrize(
+    "layout,chunking,decode,admission", MATRIX,
+    ids=["-".join(cell) for cell in MATRIX])
+def test_token_exact_across_configs(serve_setup, serve_harness, oracle,
+                                    layout, chunking, decode, admission):
+    cfg, params = serve_setup
+    kw = _engine_kw(layout, chunking, decode, admission)
+    outputs, eng = serve_harness.run(
+        params, cfg, serve_harness.pressure_requests(),
+        preempt_at=(2, 5), **kw)
+    assert outputs == oracle, (layout, chunking, decode, admission)
+    # the forced evictions really ran (plus natural ones on the
+    # small-pool over-commit cells), and every resume replayed exactly
+    assert eng.preemptions >= 1
+    assert eng.resumes == eng.preemptions
+    serve_harness.assert_drained(eng)
+    if layout == "paged" and admission == "reserved":
+        # forced eviction must not manufacture stalls under reservation
+        assert eng.stalls == 0
+
+
+def test_overcommit_small_pool_beats_reserved_occupancy(serve_setup,
+                                                        serve_harness):
+    """The tentpole's point: on a pool too small for every worst case,
+    over-commit admission runs more slots concurrently than reserved
+    admission — preempting and resuming instead of refusing entry — at
+    identical tokens."""
+    cfg, params = serve_setup
+    kw = dict(n_slots=N_SLOTS, max_seq=MAX_SEQ, chunk=CHUNK, paged=True,
+              block_size=8, n_blocks=SMALL_POOL, chunked_prefill=True,
+              prefill_chunk_tokens=4)
+    out_r, eng_r = serve_harness.run(
+        params, cfg, serve_harness.pressure_requests(), **kw)
+    out_o, eng_o = serve_harness.run(
+        params, cfg, serve_harness.pressure_requests(),
+        overcommit=True, **kw)
+    assert out_o == out_r
+    serve_harness.assert_drained(eng_o)
+    st_r, st_o = eng_r.occupancy_stats(), eng_o.occupancy_stats()
+    assert st_o["preemptions"] >= 1          # the pool really contended
+    assert st_o["occupancy"] > st_r["occupancy"], (st_o, st_r)
+
+
+def test_preempted_slot_parks_in_phase_preempted(serve_setup,
+                                                 serve_harness):
+    """The pool ledger tracks the parked lifecycle: PREEMPTED while the
+    request holds no KV, PREFILL during the resume replay, DECODE after,
+    IDLE at retirement."""
+    cfg, params = serve_setup
+    eng = ServingEngine(params, cfg, n_slots=2, max_seq=MAX_SEQ, chunk=CHUNK)
+    reqs = serve_harness.pressure_requests(n=2)
+    assert eng.admit_many(reqs) == 2
+    eng.step()
+    victim = eng._pick_victim()
+    assert eng.preempt(victim) is not None
+    assert eng.pool.phase_of(victim) == pool_lib.PHASE_PREEMPTED
+    assert victim in eng._parked and victim not in eng.active
+    pool_lib.check_invariants(eng.pool.state)
+    eng.step()                   # damper tick
+    eng.step()                   # resume lands
+    assert eng.pool.phase_of(victim) in (pool_lib.PHASE_PREFILL,
+                                         pool_lib.PHASE_DECODE)
+    while eng.active or eng._parked:
+        eng.step()
+    assert eng.pool.phase_of(victim) == pool_lib.PHASE_IDLE
+    assert eng.resumes == 1 and eng.preempt_replay_mismatches == 0
+    serve_harness.assert_drained(eng)
+
+
+def test_preempt_never_evicts_last_runner(serve_setup, serve_harness):
+    """Progress guarantee: with one running slot the victim policy
+    declines, so the maximal-progress request always retires."""
+    cfg, params = serve_setup
+    eng = ServingEngine(params, cfg, n_slots=2, max_seq=MAX_SEQ, chunk=2)
+    reqs = serve_harness.pressure_requests(n=1)
+    assert eng.admit_many(reqs) == 1
+    eng.step()
+    assert eng.preempt() is None
+    assert eng.preemptions == 0 and not eng._parked
+
+
+def test_victim_policy_fewest_tokens_then_latest_admission(serve_setup,
+                                                           serve_harness):
+    cfg, params = serve_setup
+    eng = ServingEngine(params, cfg, n_slots=3, max_seq=MAX_SEQ, chunk=2)
+    early = serve_harness.pressure_requests(n=2)
+    assert eng.admit_many(early) == 2
+    eng.step()                                   # both have tokens now
+    late = serve_harness.pressure_requests(n=3)[2:]
+    assert eng.admit_many(late) == 1
+    # the late admission has fewest generated tokens -> the victim
+    victim = eng._pick_victim()
+    assert eng.active[victim].rid == late[0].rid
+    # after its preemption, ties among the two earlier admissions break
+    # toward the later one
+    eng.preempt(victim)
+    a, b = (s for s in eng.active)
+    if len(eng.active[a].out) == len(eng.active[b].out):
+        want = a if eng._slot_seq[a] > eng._slot_seq[b] else b
+        assert eng._pick_victim() == want
+
+
+def test_overcommit_rejects_unsupported_families(serve_harness):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch, reduced
+    from repro.models import model
+    cfg_ssm = reduced(get_arch("mamba2-780m"))
+    params = model.init(jax.random.PRNGKey(0), cfg_ssm, jnp.float32)
+    with pytest.raises(ValueError, match="over-commit"):
+        ServingEngine(params, cfg_ssm, n_slots=2, max_seq=32,
+                      overcommit=True)
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_plan_serve_overcommit_lowers_with_shardings(paged):
+    """ClusterSupervisor lowers the eviction-aware mixed tick (the step
+    the over-commit engine drives between evictions and resumes) with
+    explicit shardings and donation on both layouts."""
+    import jax
+    import jax.numpy as jnp
+
+    from jax.sharding import Mesh
+    from repro.configs import ShapeConfig, get_arch, reduced
+    from repro.models import model
+    from repro.runtime.supervisor import ClusterSupervisor
+
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=1, d_model=64,
+                  vocab=128)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    shape = ShapeConfig("serve_tiny", 48, 4, "serve")
+    sup = ClusterSupervisor(mesh, cfg, shape, dtype=jnp.float32)
+    layout = model.PagedLayout(block_size=8, n_blocks=24) if paged else None
+    plan = sup.plan_serve(overcommit=8, paged=layout)
+    assert plan.kind == "serve"
+    assert plan.donate_argnums == ((2, 3) if paged else (2,))
+    lowered = jax.jit(plan.step_fn, in_shardings=plan.in_shardings,
+                      out_shardings=plan.out_shardings,
+                      donate_argnums=plan.donate_argnums) \
+        .lower(*plan.abstract_args)
+    assert lowered.compile() is not None

@@ -228,6 +228,110 @@ def test_block_pool_invariants_across_spec_cycles(ops, seed):
     assert int(paging.blocks_in_use(bstate)) == 0
 
 
+def test_evict_chain_shared_prefix_survives():
+    """Preemption claws back only what no other chain references: the
+    victim's private blocks free, the shared prefix block keeps its
+    rent, and `n_freed` reports exactly the relieved pressure."""
+    bstate = paging.init_blocks(4)
+    # chains: slot0 = [0, 1], slot1 = [0, 2]; block 0 shared (ref 2)
+    bstate = paging.admit_chains(bstate, jnp.asarray([0, 1, 0, 2]),
+                                 jnp.asarray([0, 1, 2]))
+    tables = jnp.asarray([[0, 1], [0, 2]], jnp.int32)
+    bstate, tables, n_freed = paging.evict_chain(bstate, tables, 0)
+    assert int(n_freed) == 1                     # block 1 only
+    assert [int(x) for x in bstate.refcount] == [1, 0, 1, 0]
+    free = np.asarray(bstate.pool.free)
+    assert not free[0] and free[1] and not free[2]
+    assert [int(x) for x in tables[0]] == [-1, -1]
+    paging.check_invariants(bstate, tables)
+    # evicting the survivor frees everything, shared block included
+    bstate, tables, n_freed = paging.evict_chain(bstate, tables, 1)
+    assert int(n_freed) == 2
+    assert int(paging.blocks_in_use(bstate)) == 0
+    paging.check_invariants(bstate, tables)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 10**6), min_size=1, max_size=40),
+       st.integers(0, 10**6))
+def test_block_pool_invariants_across_evict_resume_cycles(ops, seed):
+    """Random admit/evict/resume/grow/retire schedules preserve the
+    BlockPoolState invariants (refcount/free-mask/table agreement,
+    ``used <= peak_used <= created_total`` via the pool invariants) and
+    never free a shared prefix block a live chain still references.
+
+    Every admitted chain starts from one common prefix block — the
+    over-commit engine's sharing shape — so evictions constantly race
+    retirements for the last reference."""
+    rng = np.random.default_rng(seed % (2**32))
+    n_blocks, n_slots, bs, max_blocks = 10, 3, 4, 4
+    bstate = paging.init_blocks(n_blocks)
+    tables = paging.init_block_tables(n_slots, max_blocks)
+    pos = np.zeros(n_slots, np.int64)
+    state = ["idle"] * n_slots          # idle | live | parked
+    shared_blk = None                   # the common prefix block
+
+    def admit(slot):
+        nonlocal bstate, tables, shared_blk
+        if shared_blk is None or int(bstate.refcount[shared_blk]) == 0:
+            free = np.flatnonzero(np.asarray(bstate.pool.free))
+            if len(free) == 0:
+                return False
+            shared_blk = int(free[0])
+            new = jnp.asarray([shared_blk], jnp.int32)
+        else:
+            new = jnp.zeros((0,), jnp.int32)
+        bstate = paging.admit_chains(
+            bstate, jnp.asarray([shared_blk], jnp.int32), new)
+        tables = tables.at[slot, 0].set(shared_blk)
+        pos[slot] = int(rng.integers(0, bs))
+        return True
+
+    for v in ops:
+        op = v % 5
+        slot = v % n_slots
+        if op == 0 and state[slot] == "idle":
+            if admit(slot):
+                state[slot] = "live"
+        elif op == 1 and state[slot] == "live":       # preempt: evict
+            others = {s: [int(x) for x in np.asarray(tables[s]) if x >= 0]
+                      for s in range(n_slots)
+                      if s != slot and state[s] == "live"}
+            used_before = int(paging.blocks_in_use(bstate))
+            bstate, tables, n_freed = paging.evict_chain(bstate, tables,
+                                                         slot)
+            assert int(paging.blocks_in_use(bstate)) == \
+                used_before - int(n_freed)
+            for chain in others.values():             # no double-free
+                for b in chain:
+                    assert not bool(bstate.pool.free[b]), \
+                        "evict freed a block a live chain references"
+            state[slot] = "parked"
+            pos[slot] = 0
+        elif op == 2 and state[slot] == "parked":     # resume: re-admit
+            if admit(slot):
+                state[slot] = "live"
+        elif op == 3 and state[slot] == "live":       # decode growth
+            if pos[slot] < max_blocks * bs - 1:
+                bstate, tables, stalled = paging.grow_for_decode(
+                    bstate, tables, jnp.asarray([pos[slot]] * n_slots),
+                    jnp.asarray([s == slot for s in range(n_slots)]),
+                    block_size=bs)
+                if not bool(stalled[slot]):
+                    pos[slot] += 1
+        elif op == 4 and state[slot] == "live":       # retire
+            bstate, tables = paging.release_chain(bstate, tables, slot)
+            state[slot] = "idle"
+            pos[slot] = 0
+        paging.check_invariants(bstate, tables)
+
+    for slot in range(n_slots):
+        if state[slot] == "live":
+            bstate, tables = paging.release_chain(bstate, tables, slot)
+    paging.check_invariants(bstate, tables)
+    assert int(paging.blocks_in_use(bstate)) == 0
+
+
 def test_release_chain_respects_shared_refcounts():
     bstate = paging.init_blocks(4)
     tables = paging.init_block_tables(2, 2)
@@ -343,13 +447,37 @@ def test_block_pressure_defers_admission():
 
 
 def test_impossible_request_raises_instead_of_hanging():
+    """The stuck-pool error reports per-request block demand vs pool
+    capacity — a bare stuck-request count made over-commit failures
+    (and any undersized pool) undiagnosable."""
     cfg = _cfg()
     params = _params(cfg)
     eng = ServingEngine(params, cfg, n_slots=2, max_seq=16, paged=True,
                         block_size=8, n_blocks=1)
-    with pytest.raises(RuntimeError, match="stuck"):
+    with pytest.raises(RuntimeError, match="stuck") as ei:
         eng.run_to_completion(
             [Request(0, np.arange(1, 11, dtype=np.int32), max_new=2)])
+    msg = str(ei.value)
+    assert "rid 0" in msg
+    assert "needs 2 blocks now, 2 worst-case, vs 1 total" in msg
+    assert "block pool: 1 blocks of 8 positions" in msg
+
+
+def test_impossible_request_diagnosed_under_overcommit():
+    """Over-commit defers (never thrash-admits) a request whose worst
+    case exceeds the whole pool, and the stuck report names the
+    admission mode and the demand."""
+    cfg = _cfg()
+    params = _params(cfg)
+    eng = ServingEngine(params, cfg, n_slots=2, max_seq=48, paged=True,
+                        block_size=8, n_blocks=2, overcommit=True)
+    with pytest.raises(RuntimeError, match="stuck") as ei:
+        eng.run_to_completion(
+            [Request(0, np.arange(1, 20, dtype=np.int32), max_new=16)])
+    msg = str(ei.value)
+    assert "admission=overcommit" in msg
+    assert "worst-case" in msg and "vs 2 total" in msg
+    assert eng.pool.used == 0         # nothing left half-admitted
 
 
 def test_plan_serve_paged_lowers_with_shardings():

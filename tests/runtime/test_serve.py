@@ -4,20 +4,20 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_arch, reduced
-from repro.models import model
 from repro.runtime.serve import Request, ServingEngine
 
+# (cfg, params) come from the shared session fixture in
+# tests/runtime/conftest.py — the engine under test is built fresh per
+# test, but the tiny model is initialized exactly once
 
-def _engine(n_slots=2, max_seq=48):
-    cfg = reduced(get_arch("granite-3-2b"), n_layers=1, d_model=64,
-                  vocab=128)
-    params = model.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+
+def _engine(setup, n_slots=2, max_seq=48):
+    cfg, params = setup
     return ServingEngine(params, cfg, n_slots=n_slots, max_seq=max_seq)
 
 
-def test_admission_respects_pool():
-    eng = _engine(n_slots=2)
+def test_admission_respects_pool(serve_setup):
+    eng = _engine(serve_setup, n_slots=2)
     reqs = [Request(i, np.arange(1, 5, dtype=np.int32), max_new=4)
             for i in range(3)]
     assert eng.admit(reqs[0]) and eng.admit(reqs[1])
@@ -25,8 +25,8 @@ def test_admission_respects_pool():
     assert eng.pool.used == 2
 
 
-def test_eos_releases_slot_for_next_request():
-    eng = _engine(n_slots=1)
+def test_eos_releases_slot_for_next_request(serve_setup):
+    eng = _engine(serve_setup, n_slots=1)
     r1 = Request(0, np.arange(1, 5, dtype=np.int32), max_new=3)
     r2 = Request(1, np.arange(2, 6, dtype=np.int32), max_new=3)
     done, ticks = eng.run_to_completion([r1, r2])
@@ -35,16 +35,16 @@ def test_eos_releases_slot_for_next_request():
     assert eng.pool.available == 1
 
 
-def test_outputs_deterministic_wrt_batching():
+def test_outputs_deterministic_wrt_batching(serve_setup):
     """A request decoded alone == decoded while sharing the batch, even
     when the neighbors retire mid-flight (shorter budgets)."""
-    eng1 = _engine(n_slots=4)
+    eng1 = _engine(serve_setup, n_slots=4)
     prompt = np.arange(1, 9, dtype=np.int32)
     solo = Request(0, prompt, max_new=5)
     done, _ = eng1.run_to_completion([solo])
     solo_out = done[0].out
 
-    eng2 = _engine(n_slots=4)
+    eng2 = _engine(serve_setup, n_slots=4)
     rng = np.random.default_rng(1)
     # staggered budgets: both neighbors retire while req 0 still decodes
     others = [Request(i, rng.integers(1, 100, size=6).astype(np.int32),
@@ -55,17 +55,17 @@ def test_outputs_deterministic_wrt_batching():
     assert solo_out == together_out
 
 
-def test_outputs_deterministic_wrt_retirement_churn():
+def test_outputs_deterministic_wrt_retirement_churn(serve_setup):
     """Regression for the stale-token retirement bug class: slots retiring
     mid-chunk and being re-rented to fresh requests must never perturb a
     still-active slot's token stream."""
     prompt = np.arange(1, 9, dtype=np.int32)
-    eng1 = _engine(n_slots=3, max_seq=64)
+    eng1 = _engine(serve_setup, n_slots=3, max_seq=64)
     done, _ = eng1.run_to_completion([Request(0, prompt, max_new=12)])
     solo_out = done[0].out
     assert len(solo_out) >= 2
 
-    eng2 = _engine(n_slots=3, max_seq=64)
+    eng2 = _engine(serve_setup, n_slots=3, max_seq=64)
     rng = np.random.default_rng(7)
     churn = [Request(i, rng.integers(1, 100, size=4).astype(np.int32),
                      max_new=2) for i in range(1, 6)]
@@ -77,9 +77,9 @@ def test_outputs_deterministic_wrt_retirement_churn():
     assert eng2.pool.used == 0
 
 
-def test_host_sync_economy():
+def test_host_sync_economy(serve_setup):
     """The device-resident loop syncs ≥5× less than per-slot-per-tick."""
-    eng = _engine(n_slots=4, max_seq=64)
+    eng = _engine(serve_setup, n_slots=4, max_seq=64)
     rng = np.random.default_rng(3)
     reqs = [Request(i, rng.integers(1, 100, size=6).astype(np.int32),
                     max_new=10) for i in range(6)]
@@ -89,14 +89,13 @@ def test_host_sync_economy():
     assert stats["sync_reduction_x"] >= 5.0, stats
 
 
-def test_plan_serve_lowers_with_shardings():
+def test_plan_serve_lowers_with_shardings(serve_setup):
     """ClusterSupervisor emits the jitted serve tick as a Plan."""
     from jax.sharding import Mesh
     from repro.configs import ShapeConfig
     from repro.runtime.supervisor import ClusterSupervisor
 
-    cfg = reduced(get_arch("granite-3-2b"), n_layers=1, d_model=64,
-                  vocab=128)
+    cfg, _ = serve_setup
     mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
                 ("data", "model"))
     shape = ShapeConfig("serve_tiny", 48, 4, "serve")
@@ -120,18 +119,18 @@ def test_pow2_bucket_clamps_over_cap_lengths():
     assert _pow2_bucket(1000, 64) == 64
 
 
-def test_admit_rejects_prompt_longer_than_max_seq():
-    eng = _engine(n_slots=2, max_seq=16)
+def test_admit_rejects_prompt_longer_than_max_seq(serve_setup):
+    eng = _engine(serve_setup, n_slots=2, max_seq=16)
     with pytest.raises(ValueError, match="does not fit max_seq"):
         eng.admit(Request(0, np.arange(1, 20, dtype=np.int32), max_new=4))
     assert eng.pool.used == 0              # nothing rented on the way out
 
 
-def test_admit_prompt_exactly_max_seq():
+def test_admit_prompt_exactly_max_seq(serve_setup):
     """A full-cache prompt is admissible: the budget clamps to the one
     token the prefill argmax already produced — no decode write can land
     past the cache."""
-    eng = _engine(n_slots=2, max_seq=16)
+    eng = _engine(serve_setup, n_slots=2, max_seq=16)
     r = Request(0, np.arange(1, 17, dtype=np.int32), max_new=8)
     done, _ = eng.run_to_completion([r])
     assert len(done) == 1 and len(done[0].out) == 1
@@ -139,13 +138,11 @@ def test_admit_prompt_exactly_max_seq():
 
 
 @pytest.mark.parametrize("paged", [False, True])
-def test_admit_rejects_empty_prompt(paged):
+def test_admit_rejects_empty_prompt(serve_setup, paged):
     """Regression: lengths[i] = 0 in the packed prefill gathered the
     'last token' from row -1 — a garbage first token.  Both layouts
     reject up front, renting nothing."""
-    cfg = reduced(get_arch("granite-3-2b"), n_layers=1, d_model=64,
-                  vocab=128)
-    params = model.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    cfg, params = serve_setup
     kw = dict(paged=True, block_size=8, n_blocks=12) if paged else {}
     eng = ServingEngine(params, cfg, n_slots=2, max_seq=48, **kw)
     with pytest.raises(ValueError, match="empty prompt"):
@@ -160,10 +157,10 @@ def test_admit_rejects_empty_prompt(paged):
     assert eng.pool.used == 0
 
 
-def test_run_to_completion_max_ticks_raises_not_partial():
+def test_run_to_completion_max_ticks_raises_not_partial(serve_setup):
     """Regression: exhausting max_ticks used to silently return only the
     finished subset — pending/active requests vanished from the report."""
-    eng = _engine(n_slots=1, max_seq=64)
+    eng = _engine(serve_setup, n_slots=1, max_seq=64)
     reqs = [Request(i, np.arange(1, 6, dtype=np.int32), max_new=20)
             for i in range(3)]
     with pytest.raises(RuntimeError, match="max_ticks=.* exhausted"):
@@ -171,15 +168,15 @@ def test_run_to_completion_max_ticks_raises_not_partial():
     # partial outputs stay inspectable on the Request objects
     assert len(reqs[0].out) > 0
     # a sufficient budget still completes cleanly
-    eng2 = _engine(n_slots=1, max_seq=64)
+    eng2 = _engine(serve_setup, n_slots=1, max_seq=64)
     done, _ = eng2.run_to_completion(
         [Request(i, np.arange(1, 6, dtype=np.int32), max_new=20)
          for i in range(3)])
     assert {r.rid for r in done} == {0, 1, 2}
 
 
-def test_admit_max_new_zero_completes_instantly():
-    eng = _engine(n_slots=1)
+def test_admit_max_new_zero_completes_instantly(serve_setup):
+    eng = _engine(serve_setup, n_slots=1)
     r0 = Request(0, np.arange(1, 5, dtype=np.int32), max_new=0)
     r1 = Request(1, np.arange(1, 5, dtype=np.int32), max_new=3)
     done, _ = eng.run_to_completion([r0, r1])
@@ -189,8 +186,8 @@ def test_admit_max_new_zero_completes_instantly():
     assert eng.pool.created_total == 1     # only rid 1 rented the slot
 
 
-def test_readmit_retired_rid_is_clean():
-    eng = _engine(n_slots=1)
+def test_readmit_retired_rid_is_clean(serve_setup):
+    eng = _engine(serve_setup, n_slots=1)
     done1, _ = eng.run_to_completion(
         [Request(7, np.arange(1, 6, dtype=np.int32), max_new=3)])
     done2, _ = eng.run_to_completion(
@@ -199,8 +196,8 @@ def test_readmit_retired_rid_is_clean():
     assert eng.pool.created_total == 2 and eng.pool.used == 0
 
 
-def test_admission_when_pool_exhausted_defers_not_drops():
-    eng = _engine(n_slots=2)
+def test_admission_when_pool_exhausted_defers_not_drops(serve_setup):
+    eng = _engine(serve_setup, n_slots=2)
     reqs = [Request(i, np.arange(1, 5, dtype=np.int32), max_new=3)
             for i in range(5)]
     assert eng.admit_many(reqs) == 2       # slots gate the front of the queue
@@ -210,8 +207,8 @@ def test_admission_when_pool_exhausted_defers_not_drops():
     assert {r.rid for r in done} == set(range(5))
 
 
-def test_prefill_writes_correct_slot():
-    eng = _engine(n_slots=3)
+def test_prefill_writes_correct_slot(serve_setup):
+    eng = _engine(serve_setup, n_slots=3)
     r = Request(0, np.arange(1, 7, dtype=np.int32), max_new=2)
     assert eng.admit(r)
     slot = r.slot

@@ -29,52 +29,9 @@ from repro.runtime import draft as draft_lib
 from repro.runtime import paging
 from repro.runtime.serve import Request, ServingEngine
 
-
-@pytest.fixture(scope="module")
-def setup():
-    cfg = reduced(get_arch("granite-3-2b"), n_layers=1, d_model=64,
-                  vocab=128)
-    params = model.init(jax.random.PRNGKey(0), cfg, jnp.float32)
-    return cfg, params
-
-
-def _copy_model(params, cfg):
-    """Params whose forward copies its input token: every block's
-    residual contribution is zeroed and the unembedding is tied, so
-    argmax(logits(t)) == t.  Greedy decode becomes a constant stream —
-    the perfectly repetitive regime where the n-gram drafter should
-    reach full acceptance, through a real transformer forward."""
-    p = dict(params)
-    p["layers"] = dict(p["layers"],
-                       wo=jnp.zeros_like(p["layers"]["wo"]),
-                       w_down=jnp.zeros_like(p["layers"]["w_down"]))
-    if not cfg.tie_embeddings:
-        p["unembed"] = p["embed"]["tok"]
-    return p
-
-
-def _random_requests(n=5, seed=5):
-    rng = np.random.default_rng(seed)
-    return [Request(i, rng.integers(2, 100,
-                                    size=int(rng.integers(4, 12)))
-                    .astype(np.int32),
-                    max_new=int(rng.integers(4, 12))) for i in range(n)]
-
-
-def _repetitive_requests(n=5, seed=3):
-    """Prompts ending in a constant run: the drafter's bread and
-    butter once the model continues the repetition."""
-    rng = np.random.default_rng(seed)
-    out = []
-    for i in range(n):
-        head = rng.integers(2, 100,
-                            size=int(rng.integers(3, 8))).astype(np.int32)
-        tail = np.full(int(rng.integers(4, 9)),
-                       int(rng.integers(2, 100)), np.int32)
-        out.append(Request(i, np.concatenate([head, tail]),
-                           max_new=int(rng.integers(8, 20))))
-    return out
-
+# the shared engine-vs-oracle pieces (request generators, the
+# copy-model transform, drive loop) live in tests/runtime/conftest.py:
+# `serve_setup` / `serve_harness` fixtures
 
 ENGINE_CONFIGS = [
     {},
@@ -147,15 +104,15 @@ def test_reset_slot_disables_matching():
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("kw", ENGINE_CONFIGS)
-def test_spec_token_exact_random_model(setup, kw):
+def test_spec_token_exact_random_model(serve_setup, serve_harness, kw):
     """A random model never agrees with the drafter — speculation must
     degrade to the status quo with identical tokens."""
-    cfg, params = setup
+    cfg, params = serve_setup
     base = ServingEngine(params, cfg, n_slots=3, max_seq=64, **kw)
-    done_b, _ = base.run_to_completion(_random_requests())
+    done_b, _ = base.run_to_completion(serve_harness.random_requests())
     spec = ServingEngine(params, cfg, n_slots=3, max_seq=64,
                          speculative=True, spec_k=4, **kw)
-    done_s, _ = spec.run_to_completion(_random_requests())
+    done_s, _ = spec.run_to_completion(serve_harness.random_requests())
     assert {r.rid: r.out for r in done_b} == {r.rid: r.out for r in done_s}
     st = spec.spec_stats()
     assert st["tokens_per_forward"] == pytest.approx(1.0)
@@ -167,16 +124,16 @@ def test_spec_token_exact_random_model(setup, kw):
 
 
 @pytest.mark.parametrize("kw", ENGINE_CONFIGS)
-def test_spec_token_exact_and_accepting_copy_model(setup, kw):
+def test_spec_token_exact_and_accepting_copy_model(serve_setup, serve_harness, kw):
     """On a repetitive stream the drafter accepts — tokens stay exact
     and each verify forward emits > 1.3 tokens per decoding slot."""
-    cfg, params = setup
-    cp = _copy_model(params, cfg)
+    cfg, params = serve_setup
+    cp = serve_harness.copy_model(params, cfg)
     base = ServingEngine(cp, cfg, n_slots=3, max_seq=64, **kw)
-    done_b, _ = base.run_to_completion(_repetitive_requests())
+    done_b, _ = base.run_to_completion(serve_harness.repetitive_requests())
     spec = ServingEngine(cp, cfg, n_slots=3, max_seq=64,
                          speculative=True, spec_k=4, **kw)
-    done_s, _ = spec.run_to_completion(_repetitive_requests())
+    done_s, _ = spec.run_to_completion(serve_harness.repetitive_requests())
     assert {r.rid: r.out for r in done_b} == {r.rid: r.out for r in done_s}
     st = spec.spec_stats()
     assert st["tokens_per_forward"] > 1.3, st
@@ -188,11 +145,11 @@ def test_spec_token_exact_and_accepting_copy_model(setup, kw):
         paging.check_invariants(spec.bstate, spec.cache["block_tables"])
 
 
-def test_spec_eos_inside_draft_truncates_exactly(setup):
+def test_spec_eos_inside_draft_truncates_exactly(serve_setup, serve_harness):
     """A draft running past EOS must emit only through the first EOS —
     the sequential engine's retirement point."""
-    cfg, params = setup
-    cp = _copy_model(params, cfg)
+    cfg, params = serve_setup
+    cp = serve_harness.copy_model(params, cfg)
     eos = 1
     # the copy model repeats the last prompt token: EOS itself
     req = lambda: [Request(0, np.asarray([5, 9, 1, 1, 1, 1], np.int32),  # noqa: E731
@@ -208,11 +165,11 @@ def test_spec_eos_inside_draft_truncates_exactly(setup):
 
 
 @pytest.mark.parametrize("max_new", [1, 2, 3])
-def test_spec_budget_edges(setup, max_new):
+def test_spec_budget_edges(serve_setup, serve_harness, max_new):
     """Tight budgets: the draft clamp keeps emission within max_new and
     the KV writes inside the admission-time reservation."""
-    cfg, params = setup
-    cp = _copy_model(params, cfg)
+    cfg, params = serve_setup
+    cp = serve_harness.copy_model(params, cfg)
     mk = lambda: [Request(0, np.asarray([5, 7, 7, 7, 7], np.int32),  # noqa: E731
                           max_new=max_new)]
     base = ServingEngine(cp, cfg, n_slots=1, max_seq=32)
@@ -224,10 +181,10 @@ def test_spec_budget_edges(setup, max_new):
     assert len(done_s[0].out) == max_new
 
 
-def test_spec_prompt_exactly_max_seq(setup):
+def test_spec_prompt_exactly_max_seq(serve_setup):
     """A full-cache prompt admits with budget 1 — the spec tick must not
     write a single position past the cache."""
-    cfg, params = setup
+    cfg, params = serve_setup
     mk = lambda: [Request(0, np.arange(1, 17, dtype=np.int32),  # noqa: E731
                           max_new=8)]
     base = ServingEngine(params, cfg, n_slots=1, max_seq=16)
@@ -239,12 +196,12 @@ def test_spec_prompt_exactly_max_seq(setup):
     assert spec.pool.used == 0
 
 
-def test_spec_long_prompt_mid_decode_composes_with_chunked(setup):
+def test_spec_long_prompt_mid_decode_composes_with_chunked(serve_setup, serve_harness):
     """Chunked prefill keeps outsourcing fragments inside the spec tick:
     a long prompt admitted mid-decode perturbs nothing, speculation
     keeps running for the active slots."""
-    cfg, params = setup
-    cp = _copy_model(params, cfg)
+    cfg, params = serve_setup
+    cp = serve_harness.copy_model(params, cfg)
     short = [Request(i, np.asarray([3 + i] * 8, np.int32), max_new=14)
              for i in range(2)]
 
@@ -277,11 +234,11 @@ def test_spec_rejects_unsupported_families():
                       speculative=True)
 
 
-def test_spec_slot_reuse_is_clean(setup):
+def test_spec_slot_reuse_is_clean(serve_setup, serve_harness):
     """A retired slot's history must not leak drafts into the next
     request rented onto it (seed/reset discipline)."""
-    cfg, params = setup
-    cp = _copy_model(params, cfg)
+    cfg, params = serve_setup
+    cp = serve_harness.copy_model(params, cfg)
     eng = ServingEngine(cp, cfg, n_slots=1, max_seq=48, speculative=True,
                         spec_k=4)
     done1, _ = eng.run_to_completion(
