@@ -64,6 +64,78 @@ def run() -> list[str]:
                 f"{fl:.0f},{by:.0f},{fl / by:.2f},"
                 f"{'memory' if fl / by < RIDGE else 'compute'}")
 
+    # chunk attention: the shape-dispatched fragment kernels (PR 6) vs
+    # the ref.py oracle.  Two problem shapes, two schedules (the
+    # charm_u50 mm_large/mm_small split): a wide prefill fragment and
+    # the narrow speculative verify fragment (n_slots, k+1).  FLOPs /
+    # bytes count the *clamped* KV span — the rows quantify what the
+    # clamp saves vs masking the whole max_seq cache.
+    from repro.kernels.chunk_attention import (
+        chunk_attention_kernel, chunk_attention_ref,
+        paged_chunk_attention_kernel, paged_chunk_attention_ref)
+    from repro.models.attention import attention_flops, span_ladder
+
+    def _chunk_rows(name, c, b, h, hkv, d, smax, pos0_max):
+        ks = jax.random.split(jax.random.PRNGKey(c), 3)
+        q = jax.random.normal(ks[0], (b, c, h, d), jnp.float32)
+        kc = jax.random.normal(ks[1], (b, smax, hkv, d), jnp.float32)
+        vc = jax.random.normal(ks[2], (b, smax, hkv, d), jnp.float32)
+        rng_ = np.random.default_rng(c)
+        pos0 = jnp.asarray(rng_.integers(0, pos0_max + 1, size=b),
+                           jnp.int32)
+        q_pos = pos0[:, None] + jnp.arange(c)
+        got = chunk_attention_kernel(q, kc, vc, q_pos)
+        want = chunk_attention_ref(q, kc, vc, q_pos)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+        us = _time(chunk_attention_kernel, q, kc, vc, q_pos)
+        spans = span_ladder(smax)
+        lim = int(jnp.max(q_pos)) + 1
+        att = next(s for s in spans if s >= lim)
+        fl = attention_flops(b, c, smax, h, d, False, attended=att)
+        by = 2.0 * b * att * hkv * d * 4            # clamped K/V stream
+        rows.append(f"kernels,{name},({b}x{c}x{h}x{d};s={smax};"
+                    f"att={att}),{us:.0f},{fl:.0f},{by:.0f},"
+                    f"{fl / by:.2f},"
+                    f"{'memory' if fl / by < RIDGE else 'compute'}")
+
+    # wide: a scheduler-chunk prefill fragment mid-sequence
+    _chunk_rows("chunk_attention_wide", 16, 4, 8, 2, 64, 256, 96)
+    # narrow: the spec verify shape (n_slots=4, k+1=5) over a long cache
+    _chunk_rows("chunk_attention_narrow", 5, 4, 8, 2, 64, 256, 48)
+
+    # paged twin on the narrow shape: block-table DMAs, same clamp
+    b, c, h, hkv, d, bs_, nb = 4, 5, 8, 2, 64, 16, 8
+    n_pages = b * nb + 2
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (b, c, h, d), jnp.float32)
+    kp = jax.random.normal(ks[1], (n_pages, bs_, hkv, d), jnp.float32)
+    vp = jax.random.normal(ks[2], (n_pages, bs_, hkv, d), jnp.float32)
+    rng = np.random.default_rng(9)
+    pos0 = rng.integers(8, 48, size=b)
+    tables = np.full((b, nb), -1, np.int32)
+    perm = rng.permutation(n_pages)
+    i = 0
+    for r in range(b):
+        for j in range(-(-int(pos0[r] + c) // bs_)):
+            tables[r, j] = perm[i]
+            i += 1
+    tables = jnp.asarray(tables)
+    q_pos = jnp.asarray(pos0, jnp.int32)[:, None] + jnp.arange(c)
+    got = paged_chunk_attention_kernel(q, kp, vp, tables, q_pos)
+    want = paged_chunk_attention_ref(q, kp, vp, tables, q_pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    us = _time(paged_chunk_attention_kernel, q, kp, vp, tables, q_pos)
+    lim = int(jnp.max(q_pos)) + 1
+    att = min(-(-lim // bs_) * bs_, nb * bs_)       # blocks touched
+    fl = attention_flops(b, c, nb * bs_, h, d, False, attended=att)
+    by = 2.0 * b * att * hkv * d * 4
+    rows.append(f"kernels,paged_chunk_attention,({b}x{c}x{h}x{d};"
+                f"bs={bs_};att={att}),{us:.0f},{fl:.0f},{by:.0f},"
+                f"{fl / by:.2f},"
+                f"{'memory' if fl / by < RIDGE else 'compute'}")
+
     # sumup: N floats -> 1; intensity ~ 1/4 (stream-bound by design)
     x = jax.random.normal(key, (8, 8192), jnp.float32)
     us = _time(sumup, x)

@@ -1,0 +1,15 @@
+from repro.kernels.chunk_attention.ops import (  # noqa: F401
+    NARROW_MAX_WIDTH,
+    chunk_attention_kernel,
+    paged_chunk_attention_kernel,
+)
+from repro.kernels.chunk_attention.kernel import (  # noqa: F401
+    chunk_attention_narrow_call,
+    chunk_attention_wide_call,
+    paged_chunk_attention_narrow_call,
+    paged_chunk_attention_wide_call,
+)
+from repro.kernels.chunk_attention.ref import (  # noqa: F401
+    chunk_attention_ref,
+    paged_chunk_attention_ref,
+)

@@ -1,0 +1,350 @@
+"""Chunk attention — write-then-attend over an existing KV cache.
+
+Two schedules for the same math, dispatched by fragment width (the
+charm_u50 ``mm_large`` / ``mm_small`` pattern — one fabric
+configuration per problem shape):
+
+* **wide** — grid ``(batch, kv_heads, kv_blocks)``, one GQA group per
+  tile, (C·group, kv_block) score panels.  Serves chunked prefill and
+  monolithic resume replay, where the fragment is the scheduler chunk
+  (8–64 tokens) and the MXU wants tall panels.
+* **narrow** — grid ``(batch, kv_blocks)``, *all* heads in one tile as
+  a (Hkv, C·group, kv_block) batched contraction.  Serves the
+  speculative verify fragment ``(n_slots, k+1)``, where per-head tiles
+  would be a few rows each and the grid overhead dominates.
+
+Both clamp KV work to the attended span: the per-row fragment start
+rides in as a **scalar-prefetch** operand and ``@pl.when(j·bs < pos0 +
+width)`` skips every KV block past the last query position — the cache
+tail beyond ``pos + fragment`` is never read, instead of being
+gathered and masked to -inf like the old jnp path.  The paged twins
+aim each KV DMA through the scalar-prefetched block table exactly like
+``paged_attention``.
+
+Fragment positions are assumed contiguous per row (``q_pos[b, c] ==
+q_pos[b, 0] + c``), which is what ``prefill_chunk`` produces; the mask
+is rebuilt in-register from the prefetched row start.  Online softmax
+(running max / denominator / accumulator scratch in VMEM) keeps the
+accumulation exact across the sequential last grid dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- wide
+
+def _wide_body(qpos_ref, q_ref, k_ref, v_ref, o_ref, acc, m, l, *,
+               kv_block: int, width: int, group: int, sm_scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nkb = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m[...] = jnp.full_like(m, NEG_INF)
+        l[...] = jnp.zeros_like(l)
+
+    pos0 = qpos_ref[b, 0]
+
+    # the KV clamp: blocks past the last query position (j·bs >= pos0 +
+    # width) are dead under the offset-causal mask — skip the DMA'd
+    # tile's compute entirely instead of masking it to -inf
+    @pl.when(j * kv_block < pos0 + width)
+    def _compute():
+        q = q_ref[0, :, 0].astype(jnp.float32)     # (C, group, D)
+        c, g, d = q.shape
+        q2 = q.reshape(c * g, d)
+        k = k_ref[0, :, 0].astype(jnp.float32)     # (bs, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q2, k,
+                                (((1,), (1,)), ((), ()))) * sm_scale
+        kpos = j * kv_block + jax.lax.broadcasted_iota(
+            jnp.int32, (c * g, kv_block), 1)
+        qp = pos0 + jax.lax.broadcasted_iota(
+            jnp.int32, (c * g, kv_block), 0) // g
+        s = jnp.where(kpos <= qp, s, NEG_INF)      # (C·group, bs)
+        m_prev = m[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l[...] = l[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc[...] = acc[...] * alpha + jax.lax.dot(p, v)
+        m[...] = m_new
+
+    @pl.when(j == nkb - 1)
+    def _readout():
+        c = o_ref.shape[1]
+        d = o_ref.shape[-1]
+        out = acc[...] / jnp.maximum(l[...], 1e-30)
+        o_ref[0, :, 0] = out.reshape(c, group, d).astype(o_ref.dtype)
+
+
+def _paged_wide_body(tables_ref, qpos_ref, *rest, **kw):
+    _wide_body(qpos_ref, *rest, **kw)
+
+
+# -------------------------------------------------------------- narrow
+
+def _narrow_body(qpos_ref, q_ref, k_ref, v_ref, o_ref, acc, m, l, *,
+                 kv_block: int, width: int, group: int, sm_scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    nkb = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m[...] = jnp.full_like(m, NEG_INF)
+        l[...] = jnp.zeros_like(l)
+
+    pos0 = qpos_ref[b, 0]
+
+    @pl.when(j * kv_block < pos0 + width)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)           # (Hkv, C·group, D)
+        hkv, cg, d = q.shape
+        k = k_ref[0].astype(jnp.float32)           # (bs, Hkv, D)
+        v = v_ref[0].astype(jnp.float32)
+        # batch over kv heads without transposing the KV tile: contract
+        # D, batch Hkv (dim 0 of q, dim 1 of k)
+        s = jax.lax.dot_general(
+            q, k, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32) * sm_scale
+        kpos = j * kv_block + jax.lax.broadcasted_iota(
+            jnp.int32, (1, cg, kv_block), 2)
+        qp = pos0 + jax.lax.broadcasted_iota(
+            jnp.int32, (1, cg, kv_block), 1) // group
+        s = jnp.where(kpos <= qp, s, NEG_INF)      # (Hkv, C·group, bs)
+        m_prev = m[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l[...] = l[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc[...] = acc[...] * alpha + jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)
+        m[...] = m_new
+
+    @pl.when(j == nkb - 1)
+    def _readout():
+        out = acc[...] / jnp.maximum(l[...], 1e-30)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def _paged_narrow_body(tables_ref, qpos_ref, *rest, **kw):
+    _narrow_body(qpos_ref, *rest, **kw)
+
+
+# ------------------------------------------------------------- helpers
+
+def _kv_block(smax: int, cap: int = 128) -> int:
+    """Largest power of two <= cap that divides the cache length."""
+    bs = 1
+    while bs < cap and smax % (bs * 2) == 0:
+        bs *= 2
+    return bs
+
+
+def _narrow_layout(q, hkv: int):
+    """(B, C, H, D) -> (B, Hkv, C·group, D): batch dim first so the
+    kernel's contraction needs no in-tile transpose."""
+    b, c, h, d = q.shape
+    group = h // hkv
+    return (q.reshape(b, c, hkv, group, d)
+             .transpose(0, 2, 1, 3, 4)
+             .reshape(b, hkv, c * group, d))
+
+
+def _narrow_unlayout(o, c: int, group: int):
+    b, hkv, cg, d = o.shape
+    return (o.reshape(b, hkv, c, group, d)
+             .transpose(0, 2, 1, 3, 4)
+             .reshape(b, c, hkv * group, d))
+
+
+# ------------------------------------------------------ contiguous API
+
+def chunk_attention_wide_call(q, k_cache, v_cache, q_pos, *,
+                              interpret: bool = True):
+    """q: (B, C, H, D) at contiguous positions q_pos (B, C);
+    k/v_cache: (B, Smax, Hkv, D).  -> (B, C, H, D)."""
+    b, c, h, d = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    assert h % hkv == 0
+    group = h // hkv
+    kvb = _kv_block(smax)
+    nkb = smax // kvb
+    sm_scale = 1.0 / (d ** 0.5)
+    q_r = q.reshape(b, c, hkv, group, d)
+
+    def q_map(ib, ih, j, qpos):
+        return (ib, 0, ih, 0, 0)
+
+    def kv_map(ib, ih, j, qpos):
+        return (ib, j, ih, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, nkb),
+        in_specs=[
+            pl.BlockSpec((1, c, 1, group, d), q_map),
+            pl.BlockSpec((1, kvb, 1, d), kv_map),
+            pl.BlockSpec((1, kvb, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, c, 1, group, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((c * group, d), jnp.float32),   # acc
+            pltpu.VMEM((c * group, 1), jnp.float32),   # running max
+            pltpu.VMEM((c * group, 1), jnp.float32),   # denominator
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_wide_body, kv_block=kvb, width=c,
+                          group=group, sm_scale=sm_scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, c, hkv, group, d), q.dtype),
+        interpret=interpret,
+    )(q_pos.astype(jnp.int32), q_r, k_cache, v_cache)
+    return out.reshape(b, c, h, d)
+
+
+def chunk_attention_narrow_call(q, k_cache, v_cache, q_pos, *,
+                                interpret: bool = True):
+    b, c, h, d = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    assert h % hkv == 0
+    group = h // hkv
+    kvb = _kv_block(smax)
+    nkb = smax // kvb
+    sm_scale = 1.0 / (d ** 0.5)
+    q_r = _narrow_layout(q, hkv)
+
+    def q_map(ib, j, qpos):
+        return (ib, 0, 0, 0)
+
+    def kv_map(ib, j, qpos):
+        return (ib, j, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, nkb),
+        in_specs=[
+            pl.BlockSpec((1, hkv, c * group, d), q_map),
+            pl.BlockSpec((1, kvb, hkv, d), kv_map),
+            pl.BlockSpec((1, kvb, hkv, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, hkv, c * group, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, c * group, d), jnp.float32),
+            pltpu.VMEM((hkv, c * group, 1), jnp.float32),
+            pltpu.VMEM((hkv, c * group, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_narrow_body, kv_block=kvb, width=c,
+                          group=group, sm_scale=sm_scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, c * group, d), q.dtype),
+        interpret=interpret,
+    )(q_pos.astype(jnp.int32), q_r, k_cache, v_cache)
+    return _narrow_unlayout(out, c, group)
+
+
+# ----------------------------------------------------------- paged API
+
+def paged_chunk_attention_wide_call(q, k_pages, v_pages, block_tables,
+                                    q_pos, *, interpret: bool = True):
+    """q: (B, C, H, D); k/v_pages: (P, bs, Hkv, D); block_tables:
+    (B, NB) int32 (-1 = end of chain).  -> (B, C, H, D)."""
+    b, c, h, d = q.shape
+    n_pages, bs, hkv, _ = k_pages.shape
+    assert h % hkv == 0
+    group = h // hkv
+    nb = block_tables.shape[1]
+    sm_scale = 1.0 / (d ** 0.5)
+    q_r = q.reshape(b, c, hkv, group, d)
+
+    def q_map(ib, ih, j, tables, qpos):
+        return (ib, 0, ih, 0, 0)
+
+    def kv_map(ib, ih, j, tables, qpos):
+        # address indirection: table entry -> physical block (blocks
+        # past the clamp are skipped by the body, so the clamped-to-0
+        # NO_BLOCK entries are never *used*, only harmlessly fetched)
+        return (jnp.maximum(tables[ib, j], 0), 0, ih, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, nb),
+        in_specs=[
+            pl.BlockSpec((1, c, 1, group, d), q_map),
+            pl.BlockSpec((1, bs, 1, d), kv_map),
+            pl.BlockSpec((1, bs, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, c, 1, group, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((c * group, d), jnp.float32),
+            pltpu.VMEM((c * group, 1), jnp.float32),
+            pltpu.VMEM((c * group, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_wide_body, kv_block=bs, width=c,
+                          group=group, sm_scale=sm_scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, c, hkv, group, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), q_pos.astype(jnp.int32),
+      q_r, k_pages, v_pages)
+    return out.reshape(b, c, h, d)
+
+
+def paged_chunk_attention_narrow_call(q, k_pages, v_pages, block_tables,
+                                      q_pos, *, interpret: bool = True):
+    b, c, h, d = q.shape
+    n_pages, bs, hkv, _ = k_pages.shape
+    assert h % hkv == 0
+    group = h // hkv
+    nb = block_tables.shape[1]
+    sm_scale = 1.0 / (d ** 0.5)
+    q_r = _narrow_layout(q, hkv)
+
+    def q_map(ib, j, tables, qpos):
+        return (ib, 0, 0, 0)
+
+    def kv_map(ib, j, tables, qpos):
+        return (jnp.maximum(tables[ib, j], 0), 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nb),
+        in_specs=[
+            pl.BlockSpec((1, hkv, c * group, d), q_map),
+            pl.BlockSpec((1, bs, hkv, d), kv_map),
+            pl.BlockSpec((1, bs, hkv, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, hkv, c * group, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, c * group, d), jnp.float32),
+            pltpu.VMEM((hkv, c * group, 1), jnp.float32),
+            pltpu.VMEM((hkv, c * group, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_narrow_body, kv_block=bs, width=c,
+                          group=group, sm_scale=sm_scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, c * group, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), q_pos.astype(jnp.int32),
+      q_r, k_pages, v_pages)
+    return _narrow_unlayout(out, c, group)

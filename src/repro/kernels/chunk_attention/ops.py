@@ -1,0 +1,60 @@
+"""Public jit'd wrappers for chunk attention — shape dispatch lives here.
+
+The caller (``models/attention.py``) hands every fragment to one entry
+point per layout; the width of the fragment picks the schedule, the
+charm_u50 way (``mm_large`` / ``mm_small`` chosen by the supervisor to
+match the fabric configuration to the job):
+
+* width <= ``NARROW_MAX_WIDTH``  ->  narrow kernel (all heads per
+  tile; the speculative verify fragment ``(n_slots, k+1)`` and other
+  skinny resumes)
+* wider fragments                ->  wide kernel (one GQA group per
+  tile; scheduler-chunk prefill)
+
+Width is a static shape, so the dispatch is resolved at trace time —
+each (width, layout) pair jits once and the tick graph contains only
+the matching ``pallas_call``.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.chunk_attention.kernel import (
+    chunk_attention_narrow_call,
+    chunk_attention_wide_call,
+    paged_chunk_attention_narrow_call,
+    paged_chunk_attention_wide_call,
+)
+
+# Fragments at or below this width take the narrow (all-heads) kernel.
+# The speculative verify width is k+1 (k in 2..6 across the configs
+# here); the scheduler chunk is 8+.
+NARROW_MAX_WIDTH = 8
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@jax.jit
+def chunk_attention_kernel(q, k_cache, v_cache, q_pos):
+    """Fragment attention against a contiguous cache.  q (B,C,H,D) at
+    contiguous positions q_pos (B,C) vs (B,Smax,Hkv,D); KV reads are
+    clamped to pos + fragment."""
+    call = (chunk_attention_narrow_call
+            if q.shape[1] <= NARROW_MAX_WIDTH else
+            chunk_attention_wide_call)
+    return call(q, k_cache, v_cache, q_pos, interpret=_interpret())
+
+
+@jax.jit
+def paged_chunk_attention_kernel(q, k_pages, v_pages, block_tables,
+                                 q_pos):
+    """Fragment attention through the block table.  q (B,C,H,D) vs
+    (P,bs,Hkv,D) pages addressed by (B,NB) tables; KV blocks past
+    pos + fragment are never touched."""
+    call = (paged_chunk_attention_narrow_call
+            if q.shape[1] <= NARROW_MAX_WIDTH else
+            paged_chunk_attention_wide_call)
+    return call(q, k_pages, v_pages, block_tables, q_pos,
+                interpret=_interpret())

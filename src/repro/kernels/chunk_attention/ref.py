@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for chunk attention: full-cache mask, no clamping.
+
+Deliberately the *naive* schedule — materialize scores against every
+cache row (contiguous) or gather the whole chain (paged), then apply the
+position-offset causal mask.  The kernels and the dispatcher's clamped
+jnp path are both checked against this; `full_attention` over the
+logical prefix is the independent second oracle
+(tests/kernels/test_chunk_attention.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def chunk_attention_ref(q, k_cache, v_cache, q_pos):
+    """q: (B, C, H, D) at absolute positions q_pos (B, C); k/v_cache:
+    (B, Smax, Hkv, D).  Returns (B, C, H, D)."""
+    b, c, h, d = q.shape
+    hkv = k_cache.shape[2]
+    rep = h // hkv
+    k = jnp.repeat(k_cache, rep, axis=2)
+    v = jnp.repeat(v_cache, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(d))
+    kpos = jnp.arange(k.shape[1])
+    s = jnp.where(kpos[None, None, None, :] <= q_pos[:, None, :, None],
+                  s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def paged_chunk_attention_ref(q, k_pages, v_pages, block_tables, q_pos):
+    """q: (B, C, H, D); k/v_pages: (P, bs, Hkv, D); block_tables: (B, NB)
+    int32 (-1 = end of chain); q_pos: (B, C).  Returns (B, C, H, D)."""
+    n_pages, bs, hkv, d = k_pages.shape
+    b, nb = block_tables.shape
+    t = jnp.clip(block_tables, 0, n_pages - 1)
+    k = k_pages[t].reshape(b, nb * bs, hkv, d)
+    v = v_pages[t].reshape(b, nb * bs, hkv, d)
+    return chunk_attention_ref(q, k, v, q_pos)

@@ -135,6 +135,50 @@ def decode_attention(q, k_cache, v_cache, cache_len):
     return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
 
 
+# -- clamped-span machinery (chunked prefill / speculative verify) ----------
+#
+# A fragment at positions ``q_pos`` only ever attends to cache rows
+# ``[0, max(q_pos) + 1)``; everything past that is masked to exact zeros.
+# Computing (and masking) scores over the whole ``max_seq`` cache wastes
+# FLOPs on dead rows — the dominant cost of the speculative verify
+# forward, whose fragment is ``spec_k + 1`` wide but whose cache is
+# ``max_seq`` long.  The jnp path clamps by slicing the cache to the
+# smallest power-of-two rung >= the attended limit (``lax.switch`` over a
+# short static ladder): slicing at a power-of-two boundary keeps the XLA
+# CPU reductions bit-identical to the full-length softmax (the masked
+# tail contributes exact zeros and the contraction blocking is
+# unchanged — the same append-zeros invariance the monolithic-vs-chunked
+# parity already relies on; asserted by tests/kernels/
+# test_chunk_attention.py).  The TPU path dispatches to the Pallas
+# kernels (kernels/chunk_attention), which clamp by skipping KV blocks
+# past the limit inside the grid.
+
+SPAN_MIN = 16      # smallest ladder rung (and the bit-exactness floor)
+SPAN_RUNGS = 4     # ladder length cap: bounds per-tick compile cost
+
+
+def span_ladder(smax: int) -> list[int]:
+    """Static KV-span buckets for a ``smax``-row cache: the top rung is
+    the full cache, lower rungs halve down to ``SPAN_MIN`` (at most
+    ``SPAN_RUNGS`` rungs; all non-top rungs are powers of two)."""
+    spans = [smax]
+    if smax <= SPAN_MIN:
+        return spans
+    rung = 1 << ((smax - 1).bit_length() - 1)   # largest pow2 < smax
+    while rung >= SPAN_MIN and len(spans) < SPAN_RUNGS:
+        spans.insert(0, rung)
+        rung //= 2
+    return spans
+
+
+def attended_span(q_pos, smax: int):
+    """Index into :func:`span_ladder` of the smallest rung covering the
+    attended limit ``max(q_pos) + 1`` (dynamic scalar; clamped to the top
+    rung by ``lax.switch`` when garbage rows point past ``smax``)."""
+    spans = jnp.asarray(span_ladder(smax), jnp.int32)
+    return jnp.sum(spans < jnp.max(q_pos) + 1).astype(jnp.int32)
+
+
 def offset_causal_mask(scores, q_pos):
     """Position-offset causal mask: key position ``kpos`` is visible to
     query column j iff ``kpos <= q_pos[:, j]``.
@@ -153,7 +197,21 @@ def offset_causal_mask(scores, q_pos):
                      scores, NEG_INF)
 
 
-def chunk_attention(q, k_cache, v_cache, q_pos):
+def _chunk_attend(q, k, v, q_pos):
+    """The chunk-attention math itself, over an already-clamped cache
+    slice: scores + position-offset causal mask + softmax + PV."""
+    b, c, h, d = q.shape
+    hkv = k.shape[2]
+    k = _repeat_kv(k, h // hkv)
+    v = _repeat_kv(v, h // hkv)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    s = offset_causal_mask(s / jnp.sqrt(jnp.float32(d)), q_pos)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+
+
+def chunk_attention(q, k_cache, v_cache, q_pos, span_idx=None,
+                    use_kernel=None):
     """Prefill-continuation attention: q (B, C, H, D) at absolute positions
     ``q_pos`` (B, C) against a (B, Smax, Hkv, D) cache whose rows already
     hold the chunk's own K/V (write-then-attend, like decode).
@@ -166,30 +224,81 @@ def chunk_attention(q, k_cache, v_cache, q_pos):
     to the softmax, so chunked prefill reproduces the monolithic prefill
     bit for bit (same reduction argument as the paged/contiguous
     parity).
+
+    Thin dispatcher (the ``paged_decode_attention`` pattern): on TPU the
+    Pallas chunk-attention kernel (wide or narrow by fragment width —
+    kernels/chunk_attention); on CPU the jnp path, KV reads clamped to
+    the :func:`span_ladder` rung covering ``max(q_pos) + 1`` instead of
+    masking the whole cache.  ``span_idx`` (optional) is the precomputed
+    :func:`attended_span` — `model.prefill_chunk` hoists it out of the
+    layer scan so the ladder search runs once per fragment, not once per
+    layer.
     """
-    b, c, h, d = q.shape
-    hkv = k_cache.shape[2]
-    k = _repeat_kv(k_cache, h // hkv)
-    v = _repeat_kv(v_cache, h // hkv)
-    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
-    s = offset_causal_mask(s / jnp.sqrt(jnp.float32(d)), q_pos)
-    p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        from repro.kernels.chunk_attention import chunk_attention_kernel
+        return chunk_attention_kernel(q, k_cache, v_cache, q_pos)
+    smax = k_cache.shape[1]
+    spans = span_ladder(smax)
+    if len(spans) == 1:
+        return _chunk_attend(q, k_cache, v_cache, q_pos)
+    if span_idx is None:
+        span_idx = attended_span(q_pos, smax)
+    branches = [
+        (lambda s: lambda q_, k_, v_, p_: _chunk_attend(
+            q_, k_[:, :s], v_[:, :s], p_))(s)
+        for s in spans]
+    return jax.lax.switch(span_idx, branches, q, k_cache, v_cache, q_pos)
 
 
-def paged_chunk_attention(q, k_pages, v_pages, block_tables, q_pos):
+def paged_chunk_attention(q, k_pages, v_pages, block_tables, q_pos,
+                          span_idx=None, use_kernel=None,
+                          return_blocks=False):
     """:func:`chunk_attention` over a paged cache: gather each row's chain
     back into the contiguous layout (element order identical to the
     contiguous cache, so parity is exact) and apply the position-offset
-    causal mask.  Chunk ticks are rare next to decode chunks, so the
-    pure-jnp gather is the only path for now (a fused Pallas variant can
-    follow the paged_attention kernel's schedule later)."""
-    n_pages, bs, _, d = k_pages.shape
+    causal mask.
+
+    Same dispatcher shape as the contiguous path: the TPU kernel aims KV
+    DMAs through the scalar-prefetched block table, and the jnp path
+    gathers **only the blocks that intersect the attended span** — a
+    long chain behind a short fragment stays in HBM instead of being
+    materialized whole.  With ``return_blocks`` the jnp path also
+    returns the per-rung gathered-block count (the regression
+    observable: blocks touched, not chain length)."""
+    n_pages, bs, hkv, d = k_pages.shape
     b, nb = block_tables.shape
-    t = jnp.clip(block_tables, 0, n_pages - 1)
-    k = k_pages[t].reshape(b, nb * bs, k_pages.shape[2], d)
-    v = v_pages[t].reshape(b, nb * bs, v_pages.shape[2], d)
-    return chunk_attention(q, k, v, q_pos)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel and not return_blocks:
+        from repro.kernels.chunk_attention import \
+            paged_chunk_attention_kernel
+        return paged_chunk_attention_kernel(q, k_pages, v_pages,
+                                            block_tables, q_pos)
+    smax = nb * bs
+    spans = span_ladder(smax)
+    if span_idx is None:
+        span_idx = attended_span(q_pos, smax)
+    rung_blocks = [min(nb, -(-s // bs)) for s in spans]
+
+    def branch(nb_used):
+        def f(q_, kp, vp, tables, p_):
+            t = jnp.clip(tables[:, :nb_used], 0, n_pages - 1)
+            k = kp[t].reshape(b, nb_used * bs, hkv, d)
+            v = vp[t].reshape(b, nb_used * bs, hkv, d)
+            return _chunk_attend(q_, k, v, p_)
+        return f
+
+    if len(spans) == 1:
+        out = branch(nb)(q, k_pages, v_pages, block_tables, q_pos)
+    else:
+        out = jax.lax.switch(span_idx, [branch(n) for n in rung_blocks],
+                             q, k_pages, v_pages, block_tables, q_pos)
+    if return_blocks:
+        idx = jnp.clip(span_idx, 0, len(spans) - 1)
+        return out, jnp.asarray(rung_blocks, jnp.int32)[idx]
+    return out
 
 
 def paged_decode_attention(q, k_pages, v_pages, block_tables, cache_len,
@@ -220,6 +329,11 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, cache_len,
 
 
 def attention_flops(batch: int, sq: int, skv: int, heads: int, head_dim: int,
-                    causal: bool) -> float:
-    f = 4.0 * batch * heads * sq * skv * head_dim  # QK^T + PV
-    return f / 2 if causal and sq == skv else f
+                    causal: bool, attended: int = None) -> float:
+    """QK^T + PV FLOPs.  ``attended`` is the clamped KV span actually
+    computed (chunked prefill / speculative verify: the
+    :func:`span_ladder` rung, not the full cache) — without it the count
+    assumes the whole ``skv`` is touched."""
+    span = skv if attended is None else min(skv, attended)
+    f = 4.0 * batch * heads * sq * span * head_dim  # QK^T + PV
+    return f / 2 if causal and sq == span else f

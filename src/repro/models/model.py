@@ -929,6 +929,9 @@ def prefill_chunk(params, tokens, lengths, cache, cfg: ArchConfig,
         tables = cache["block_tables"]
         n_pages, blk_size = cache["k"].shape[1], cache["k"].shape[2]
         nb = tables.shape[1]
+        # attended-span rung for the whole tick: every layer clamps its
+        # KV work to the same pow2 slice (hoisted out of the scan)
+        span_idx = attn_lib.attended_span(q_pos, nb * blk_size)
         blk_idx = q_pos // blk_size
         blk = jnp.take_along_axis(tables, jnp.clip(blk_idx, 0, nb - 1),
                                   axis=1)
@@ -940,6 +943,7 @@ def prefill_chunk(params, tokens, lengths, cache, cfg: ArchConfig,
         smax = cache["k"].shape[2]
         wpos = jnp.where(valid, q_pos, smax)
         bidx = jnp.arange(bsz)[:, None]
+        span_idx = attn_lib.attended_span(q_pos, smax)
 
     def body(carry, inp):
         lp, k_l, v_l = inp
@@ -955,11 +959,13 @@ def prefill_chunk(params, tokens, lengths, cache, cfg: ArchConfig,
         if paged:
             k_l = k_l.at[wblk, off].set(k.astype(k_l.dtype), mode="drop")
             v_l = v_l.at[wblk, off].set(v.astype(v_l.dtype), mode="drop")
-            o = attn_lib.paged_chunk_attention(q, k_l, v_l, tables, q_pos)
+            o = attn_lib.paged_chunk_attention(q, k_l, v_l, tables, q_pos,
+                                               span_idx=span_idx)
         else:
             k_l = k_l.at[bidx, wpos].set(k.astype(k_l.dtype), mode="drop")
             v_l = v_l.at[bidx, wpos].set(v.astype(v_l.dtype), mode="drop")
-            o = attn_lib.chunk_attention(q, k_l, v_l, q_pos)
+            o = attn_lib.chunk_attention(q, k_l, v_l, q_pos,
+                                         span_idx=span_idx)
         h = jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
         y = carry + h
         f, _ = _ffn(layers.rms_norm(y, lp["ln2"], cfg.norm_eps), lp, cfg)

@@ -120,6 +120,25 @@ def propose(state: DraftState, tokens: jax.Array, spec_k: int):
     return draft, draft_len
 
 
+def push_and_propose(state: DraftState, tokens: jax.Array,
+                     counts: jax.Array, pending: jax.Array, spec_k: int):
+    """Fused accept/re-propose transition: :func:`push_tokens` the
+    fragment a verify tick just consumed, then :func:`propose` against
+    the updated history in the same jitted graph.
+
+    This is the drafter half of the on-device accept/rewind core — the
+    spec-chunk loop body calls it once per iteration, so the drafter
+    never round-trips through the host between the verify gather and the
+    next proposal.  ``pending`` (n_slots,) is each slot's next input
+    token (the last accepted/corrected emission).  Returns ``(state',
+    draft, draft_len)``; the budget clamp is the *caller's* job, applied
+    at consumption time against the then-current ``DecodeState``.
+    """
+    state = push_tokens(state, tokens, counts)
+    draft, draft_len = propose(state, pending, spec_k)
+    return state, draft, draft_len
+
+
 # -- host-side admission helpers ---------------------------------------------
 
 def reset_slot(state: DraftState, slot: int) -> DraftState:
@@ -140,9 +159,16 @@ def evict_slot(state: DraftState, slot: int) -> DraftState:
 def seed_slot(state: DraftState, slot: int, prompt) -> DraftState:
     """Monolithic admission: the whole prompt was consumed by one
     prefill call, so the slot's history is the prompt tail (the pending
-    input token — the prefill argmax — stays out, per the invariant)."""
+    input token — the prefill argmax — stays out, per the invariant).
+
+    The row is padded to ``hist_len`` on the host so the device update
+    is shape-stable: a variable-length ``.at[slot, h-len:].set`` traces
+    one scatter per distinct prompt length, which showed up as tens of
+    ms of XLA compiles *per admission* in the serve bench."""
     h = state.hist_len
     tail = np.asarray(prompt, np.int32)[-h:]
-    hist = state.hist.at[slot, h - len(tail):].set(jnp.asarray(tail))
+    row = np.zeros(h, np.int32)
+    row[h - len(tail):] = tail
+    hist = state.hist.at[slot].set(jnp.asarray(row))
     return DraftState(hist=hist,
                       count=state.count.at[slot].set(len(tail)))

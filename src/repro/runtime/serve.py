@@ -111,6 +111,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Callable, NamedTuple, Optional
 
 import jax
@@ -432,8 +433,8 @@ def build_spec_tick(cfg: ArchConfig, *, spec_k: int, chunk_tokens: int,
     """
     assert chunk_tokens >= spec_k + 1, (chunk_tokens, spec_k)
     W = chunk_tokens
-    propose, run = _spec_core(cfg, spec_k=spec_k, width=W, eos_id=eos_id,
-                              rules=rules)
+    propose, _clamp, run = _spec_core(cfg, spec_k=spec_k, width=W,
+                                      eos_id=eos_id, rules=rules)
 
     if paged is None:
         def tick(params, state: DecodeState, dstate, cache, frag_tokens,
@@ -443,7 +444,7 @@ def build_spec_tick(cfg: ArchConfig, *, spec_k: int, chunk_tokens: int,
             frag_skip = jnp.zeros_like(frag_len)
             return run(params, state, dstate, cache, decode_rows, draft,
                        dlen, frag_tokens, frag_len, frag_last, frag_max_new,
-                       frag_skip)
+                       frag_skip)[:6]
 
         if not jit:
             return tick
@@ -468,7 +469,7 @@ def build_spec_tick(cfg: ArchConfig, *, spec_k: int, chunk_tokens: int,
         cache = dict(cache, block_tables=tables)
         state, dstate, cache, emitted, drafted, accepted = run(
             params, state, dstate, cache, decode_rows, draft, dlen,
-            frag_tokens, frag_len, frag_last, frag_max_new, frag_skip)
+            frag_tokens, frag_len, frag_last, frag_max_new, frag_skip)[:6]
         return state, dstate, cache, bstate, emitted, drafted, accepted, \
             stalls
 
@@ -482,18 +483,27 @@ def _spec_core(cfg: ArchConfig, *, spec_k: int, width: int, eos_id: int,
     """The draft/verify/accept core shared by the single spec tick
     (:func:`build_spec_tick`, which composes with prompt fragments) and
     the multi-iteration spec chunk (:func:`build_spec_chunk`).  Returns
-    ``(propose, run)`` closures."""
+    ``(propose, run)`` closures; ``run`` also hands back the *next*
+    iteration's proposal (fused ``draft_lib.push_and_propose`` — the
+    accept/rewind/re-propose cycle never leaves the device), which the
+    spec-chunk loop carries and the single tick drops (XLA dead-codes
+    the unused branch)."""
     W = width
 
     def propose(state: DecodeState, dstate: draft_lib.DraftState,
                 decode_rows):
         draft, dlen = draft_lib.propose(dstate, state.tokens, spec_k)
+        return draft, clamp(state, dlen, decode_rows)
+
+    def clamp(state: DecodeState, dlen, decode_rows):
         # budget clamp: emitting dlen + 1 tokens must stay within
         # max_new, so the fragment's writes stay inside the §5.1
-        # reservation (and max_seq) the engine took at admission
+        # reservation (and max_seq) the engine took at admission.
+        # Applied at *consumption* time against the then-current state —
+        # a fused proposal carried from the previous iteration sees the
+        # same cap the unfused re-proposal would have computed.
         cap = jnp.maximum(state.max_new - state.n_out - 1, 0)
-        dlen = jnp.where(decode_rows, jnp.minimum(dlen, cap), 0)
-        return draft, dlen
+        return jnp.where(decode_rows, jnp.minimum(dlen, cap), 0)
 
     def run(params, state: DecodeState, dstate, cache, decode_rows, draft,
             dlen, frag_tokens, frag_len, frag_last, frag_max_new,
@@ -556,14 +566,17 @@ def _spec_core(cfg: ArchConfig, *, spec_k: int, width: int, eos_id: int,
         # drafts) — the new pending token `tok` stays out, per the
         # drafter's invariant.  Prompt history is seeded host-side at
         # the PREFILL -> DECODE transition, so prefill rows push 0.
-        dstate = draft_lib.push_tokens(
-            dstate, tokens, jnp.where(decode_rows, n_emit, 0))
+        # Fused with the *next* proposal against the updated history
+        # (the spec-chunk loop consumes it; budget-clamp there).
+        dstate, nxt_draft, nxt_dlen = draft_lib.push_and_propose(
+            dstate, tokens, jnp.where(decode_rows, n_emit, 0), tok,
+            spec_k)
         drafted = jnp.sum(jnp.where(decode_rows, dlen, 0))
         accepted = jnp.sum(jnp.where(decode_rows, m, 0))
         return (DecodeState(tok, n_out, max_new, active), dstate, cache,
-                emitted, drafted, accepted)
+                emitted, drafted, accepted, nxt_draft, nxt_dlen)
 
-    return propose, run
+    return propose, clamp, run
 
 
 def build_spec_chunk(cfg: ArchConfig, *, spec_k: int, eos_id: int,
@@ -584,10 +597,17 @@ def build_spec_chunk(cfg: ArchConfig, *, spec_k: int, eos_id: int,
     decoding-slot forwards (the tokens-per-forward denominator).  Paged
     adds the donated ``bstate`` and a ``stalls`` scalar.  The cache
     (and block state) is donated.
+
+    The loop carries the drafter's *fused* proposal: iteration i's
+    ``run`` pushes the consumed fragment and re-proposes against the
+    updated history in the same graph (``draft_lib.push_and_propose``),
+    so iteration i+1 only applies the budget clamp against its
+    then-current state — the accept/rewind/re-propose cycle never
+    leaves the device between verify forwards.
     """
     W = spec_k + 1
-    propose, run = _spec_core(cfg, spec_k=spec_k, width=W, eos_id=eos_id,
-                              rules=rules)
+    propose, clamp, run = _spec_core(cfg, spec_k=spec_k, width=W,
+                                     eos_id=eos_id, rules=rules)
 
     def zero_frags(n):
         return (jnp.zeros((n, W), jnp.int32), jnp.zeros((n,), jnp.int32),
@@ -595,37 +615,38 @@ def build_spec_chunk(cfg: ArchConfig, *, spec_k: int, eos_id: int,
 
     def iteration(params, st, ds, cache, bstate, decode_rows, draft, dlen):
         ft, fl, flast, fmax = zero_frags(st.tokens.shape[0])
-        st, ds, cache, em, d_i, a_i = run(
+        st, ds, cache, em, d_i, a_i, nd, nl = run(
             params, st, ds, cache, decode_rows, draft, dlen, ft, fl,
             flast, fmax, fl)        # frag_skip == zeros == fl
-        return st, ds, cache, em, d_i, a_i
+        return st, ds, cache, em, d_i, a_i, nd, nl
 
     if paged is None:
         def chunk_fn(params, state: DecodeState, dstate, cache):
             n = state.tokens.shape[0]
             emitted0 = jnp.full((n, iters * W), NO_TOKEN, jnp.int32)
             zeros = jnp.int32(0)
+            draft0, dlen0 = draft_lib.propose(dstate, state.tokens, spec_k)
 
             def cond(carry):
                 i, st = carry[0], carry[1]
                 return (i < iters) & jnp.any(st.active)
 
             def body(carry):
-                i, st, ds, cache, emitted, sf, dr, ac = carry
+                i, st, ds, cache, draft, dlen, emitted, sf, dr, ac = carry
                 decode_rows = st.active
-                draft, dlen = propose(st, ds, decode_rows)
-                st, ds, cache, em, d_i, a_i = iteration(
+                dlen = clamp(st, dlen, decode_rows)
+                st, ds, cache, em, d_i, a_i, draft, dlen = iteration(
                     params, st, ds, cache, None, decode_rows, draft, dlen)
                 emitted = jax.lax.dynamic_update_slice(emitted, em,
                                                        (0, i * W))
                 sf = sf + jnp.sum(decode_rows).astype(jnp.int32)
-                return (i + jnp.int32(1), st, ds, cache, emitted, sf,
-                        dr + d_i, ac + a_i)
+                return (i + jnp.int32(1), st, ds, cache, draft, dlen,
+                        emitted, sf, dr + d_i, ac + a_i)
 
-            (fwd, state, dstate, cache, emitted, slot_fwd, drafted,
+            (fwd, state, dstate, cache, _, _, emitted, slot_fwd, drafted,
              accepted) = jax.lax.while_loop(
-                cond, body, (zeros, state, dstate, cache, emitted0, zeros,
-                             zeros, zeros))
+                cond, body, (zeros, state, dstate, cache, draft0, dlen0,
+                             emitted0, zeros, zeros, zeros))
             return (state, dstate, cache, emitted, fwd, slot_fwd, drafted,
                     accepted)
 
@@ -637,14 +658,16 @@ def build_spec_chunk(cfg: ArchConfig, *, spec_k: int, eos_id: int,
         n = state.tokens.shape[0]
         emitted0 = jnp.full((n, iters * W), NO_TOKEN, jnp.int32)
         zeros = jnp.int32(0)
+        draft0, dlen0 = draft_lib.propose(dstate, state.tokens, spec_k)
 
         def cond(carry):
             i, st = carry[0], carry[1]
             return (i < iters) & jnp.any(st.active)
 
         def body(carry):
-            i, st, ds, cache, bstate, emitted, sf, dr, ac, stalls = carry
-            draft, dlen = propose(st, ds, st.active)
+            (i, st, ds, cache, bstate, draft, dlen, emitted, sf, dr, ac,
+             stalls) = carry
+            dlen = clamp(st, dlen, st.active)
             bstate, tables, stalled = paging.grow_to_cover(
                 bstate, cache["block_tables"], cache["pos"] + dlen,
                 st.active, block_size=paged.block_size,
@@ -653,17 +676,17 @@ def build_spec_chunk(cfg: ArchConfig, *, spec_k: int, eos_id: int,
             dlen = jnp.where(decode_rows, dlen, 0)
             stalls = stalls + jnp.sum(stalled).astype(jnp.int32)
             cache = dict(cache, block_tables=tables)
-            st, ds, cache, em, d_i, a_i = iteration(
+            st, ds, cache, em, d_i, a_i, draft, dlen = iteration(
                 params, st, ds, cache, bstate, decode_rows, draft, dlen)
             emitted = jax.lax.dynamic_update_slice(emitted, em, (0, i * W))
             sf = sf + jnp.sum(decode_rows).astype(jnp.int32)
-            return (i + jnp.int32(1), st, ds, cache, bstate, emitted, sf,
-                    dr + d_i, ac + a_i, stalls)
+            return (i + jnp.int32(1), st, ds, cache, bstate, draft, dlen,
+                    emitted, sf, dr + d_i, ac + a_i, stalls)
 
-        (fwd, state, dstate, cache, bstate, emitted, slot_fwd, drafted,
-         accepted, stalls) = jax.lax.while_loop(
-            cond, body, (zeros, state, dstate, cache, bstate, emitted0,
-                         zeros, zeros, zeros, zeros))
+        (fwd, state, dstate, cache, bstate, _, _, emitted, slot_fwd,
+         drafted, accepted, stalls) = jax.lax.while_loop(
+            cond, body, (zeros, state, dstate, cache, bstate, draft0,
+                         dlen0, emitted0, zeros, zeros, zeros, zeros))
         return (state, dstate, cache, bstate, emitted, fwd, slot_fwd,
                 drafted, accepted, stalls)
 
@@ -1115,6 +1138,7 @@ class ServingEngine:
         self.baseline_syncs = 0
         self.device_ticks = 0
         self.decode_tokens = 0
+        self.decode_wall_s = 0.0   # wall time inside serving ticks
         self.stalls = 0
         self.shared_block_hits = 0
         self.kv_bytes_allocated = 0
@@ -1779,6 +1803,7 @@ class ServingEngine:
         self.occ_ticks += 1
         self.occ_slot_ticks += len(self.active)
         stall_mark = self.stalls
+        t0 = time.perf_counter()
         if self._jobs and not self._decoding_slots():
             # nobody decoding -> no fairness to protect: pack one job's
             # fragments up to the tick budget through the solo tick
@@ -1792,6 +1817,12 @@ class ServingEngine:
             finished += self._mixed_step()
         else:
             finished += self._decode_step()
+        # decode-phase wall clock: time spent inside serving ticks, i.e.
+        # excluding admission prefill and host queueing — the
+        # denominator of the bench's decode tokens/s (admission work is
+        # identical across engine configs and, on CPU, dominated by
+        # per-prompt-bucket XLA compiles that would drown the signal)
+        self.decode_wall_s += time.perf_counter() - t0
         if self.overcommit and (self._pressure or self.stalls > stall_mark):
             # the tick ran the block pool dry: claw chains back until a
             # block actually came free — a fully-shared victim relieves
@@ -2060,6 +2091,7 @@ class ServingEngine:
         warms nothing — then reset before the measured run."""
         self.host_syncs = self.baseline_syncs = 0
         self.device_ticks = self.decode_tokens = 0
+        self.decode_wall_s = 0.0
         self.stalls = 0
         self.shared_block_hits = 0
         self.kv_bytes_allocated = 0

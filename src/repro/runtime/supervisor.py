@@ -337,13 +337,23 @@ class ClusterSupervisor:
         out_sh += [self._sh(row_spec), self._sh(P()), self._sh(P())]
         if paged is not None:
             out_sh.append(self._sh(P()))     # stall counter
+        # shape-dispatch metadata: which attention configuration the
+        # fabric runs for this tick's fragment width (the dry-run's
+        # answer to "which kernel serves the verify forward?")
+        from repro.kernels.chunk_attention import NARROW_MAX_WIDTH
+        from repro.models import attention as attn_lib
+        sched = "narrow" if w <= NARROW_MAX_WIDTH else "wide"
+        ladder = attn_lib.span_ladder(shape.seq_len)
+        notes = self._notes() + [
+            f"verify_width={w} -> chunk-attention[{sched}] (TPU) / "
+            f"span ladder {ladder} (CPU)"]
         return Plan(
             name=f"{cfg.name}/{shape.name}", kind="serve", step_fn=step,
             abstract_args=tuple(abstract_args),
             in_shardings=tuple(in_sh),
             out_shardings=tuple(out_sh),
             donate_argnums=donate,
-            rules=self.rules, qt_graph=self.qt_graph(), notes=self._notes())
+            rules=self.rules, qt_graph=self.qt_graph(), notes=notes)
 
     # -- compile-time metadata ------------------------------------------------
     def qt_graph(self) -> QTGraph:

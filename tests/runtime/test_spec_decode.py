@@ -89,6 +89,43 @@ def test_push_tokens_keeps_trailing_window():
     assert int(st.count[0]) == 6
 
 
+def test_push_and_propose_equals_push_then_propose():
+    """The fused transition (the spec-chunk loop's carry) must be
+    exactly push_tokens followed by propose — same history, same draft,
+    same lengths — for accepting, partially-accepting and idle rows."""
+    rng = np.random.default_rng(11)
+    st = draft_lib.init_draft_state(3, 12)
+    st = draft_lib.seed_slot(st, 0, np.asarray([5, 5, 5, 5, 5], np.int32))
+    st = draft_lib.seed_slot(st, 1, rng.integers(2, 9, 10).astype(np.int32))
+    tokens = jnp.asarray(rng.integers(2, 9, (3, 5)), jnp.int32)
+    counts = jnp.asarray([5, 2, 0], jnp.int32)
+    pending = jnp.asarray([5, 3, 0], jnp.int32)
+    want_st = draft_lib.push_tokens(st, tokens, counts)
+    want_draft, want_dlen = draft_lib.propose(want_st, pending, 4)
+    got_st, got_draft, got_dlen = draft_lib.push_and_propose(
+        st, tokens, counts, pending, 4)
+    np.testing.assert_array_equal(np.asarray(got_st.hist),
+                                  np.asarray(want_st.hist))
+    np.testing.assert_array_equal(np.asarray(got_st.count),
+                                  np.asarray(want_st.count))
+    np.testing.assert_array_equal(np.asarray(got_draft),
+                                  np.asarray(want_draft))
+    np.testing.assert_array_equal(np.asarray(got_dlen),
+                                  np.asarray(want_dlen))
+
+
+def test_seed_slot_pads_to_fixed_shape():
+    """seed_slot's device update is shape-stable across prompt lengths
+    (one XLA computation, not one per distinct tail length) and zeroes
+    the invalid region."""
+    st = draft_lib.init_draft_state(1, 8)
+    st = draft_lib.DraftState(hist=jnp.full((1, 8), 9, jnp.int32),
+                              count=st.count)
+    st = draft_lib.seed_slot(st, 0, np.asarray([3, 4, 5], np.int32))
+    assert [int(t) for t in st.hist[0]] == [0, 0, 0, 0, 0, 3, 4, 5]
+    assert int(st.count[0]) == 3
+
+
 def test_reset_slot_disables_matching():
     st = draft_lib.init_draft_state(1, 16)
     st = draft_lib.seed_slot(st, 0, np.asarray([5, 5, 5, 5, 5], np.int32))
