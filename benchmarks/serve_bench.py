@@ -43,10 +43,20 @@ Measures the refactored engine on CPU-sized configs and writes
   ``resumes`` / ``preempted_tokens_recomputed``, throughput vs
   reserved, and ``preempt_token_exact`` (eviction + recompute-based
   resume changes no token).  Floors: >= 1 preemption actually fired,
-  token-exact, and occupancy strictly above the reserved baseline.
+  token-exact, and occupancy strictly above the reserved baseline,
+* ``scaling`` / ``sharded_token_exact`` — the mesh curve: a
+  FleetSupervisor of one replica per device at 1/2/4/8 forced host
+  devices (each device count in a subprocess — XLA reads the flag at
+  import), tok/s + host syncs + routing balance per point, and the
+  tensor-parallel (model=2) engine's byte-exactness vs the
+  single-device oracle.  Floors: every point token-exact and every
+  replica routed to; ``sharded_token_exact`` true.  Also appends the
+  single-device baseline to ``benchmarks/artifacts/
+  serve_trajectory.jsonl`` (the perf-trajectory anchor).
 """
 import json
 import os
+import sys
 import time
 
 
@@ -669,9 +679,174 @@ def run_overcommit(out_path: str = None) -> list[str]:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Mesh scaling: fleet throughput vs device count + sharded token exactness
+# ---------------------------------------------------------------------------
+#
+# Each device count runs in a SUBPROCESS: XLA reads
+# ``--xla_force_host_platform_device_count`` once at import, so a fresh
+# interpreter is the only way to vary it.  The child builds a
+# FleetSupervisor of one replica per device, serves the same stream the
+# single-engine oracle serves, and reports throughput + host syncs +
+# token exactness; the 2-device child additionally runs a
+# tensor-parallel (model=2) engine for the ``sharded_token_exact``
+# acceptance bit.  Forced host devices share one physical CPU — the
+# curve records the router's scaling behavior (per-replica jit caches,
+# routing overhead, sync totals), not hardware speedup; on real
+# accelerators the same code path is the one that scales.
+
+SCALING_DEVICE_COUNTS = (1, 2, 4, 8)
+SCALING_N_REQUESTS = 16
+
+
+def _scaling_requests(np, Request, cfg, n=SCALING_N_REQUESTS):
+    rng = np.random.default_rng(17)
+    return [Request(i, rng.integers(1, cfg.vocab,
+                                    size=int(rng.integers(6, 16)),
+                                    dtype=np.int64).astype(np.int32),
+                    max_new=int(rng.integers(8, 16))) for i in range(n)]
+
+
+def _scaling_worker(n_devices: int) -> dict:
+    """Child-process body (device count already forced via XLA_FLAGS)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_arch, reduced
+    from repro.models import model as model_lib
+    from repro.runtime.serve import Request, ServingEngine
+    from repro.runtime.sharding import serve_mesh
+    from repro.runtime.supervisor import FleetSupervisor
+
+    assert jax.device_count() >= n_devices, (jax.device_count(), n_devices)
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=2, d_model=128,
+                  vocab=512)
+    params = model_lib.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    kw = dict(n_slots=4, max_seq=96, chunk=8, paged=True, block_size=16,
+              n_blocks=24)
+
+    oracle = ServingEngine(params, cfg, **kw)
+    done, _ = oracle.run_to_completion(_scaling_requests(np, Request, cfg))
+    want = {r.rid: list(r.out) for r in done}
+
+    fleet = FleetSupervisor(params, cfg, n_replicas=n_devices, model=1,
+                            devices=jax.devices()[:n_devices], **kw)
+    for eng in fleet.engines:       # warm each replica's jitted closures
+        eng.run_to_completion([Request(99, np.arange(1, 9, dtype=np.int32),
+                                       max_new=4)])
+    fleet.reset_stats()
+    reqs = _scaling_requests(np, Request, cfg)
+    t0 = time.perf_counter()
+    done, _ = fleet.run_to_completion(reqs)
+    dt = time.perf_counter() - t0
+    got = {r.rid: list(r.out) for r in done}
+    sync = fleet.sync_stats()["fleet"]
+    out = {
+        "devices": n_devices,
+        "tokens_per_s": sum(len(t) for t in got.values()) / dt,
+        "wall_s": dt,
+        "host_syncs": sync["host_syncs"],
+        "device_ticks": sync["device_ticks"],
+        "requests_per_replica": list(fleet.routed),
+        "fleet_token_exact": got == want,
+    }
+    if n_devices == 2:
+        # tensor-parallel exactness: heads + KV sharded over model=2,
+        # same stream, must be bit-identical to the single-device oracle
+        eng = ServingEngine(params, cfg, mesh=serve_mesh(2), **kw)
+        done, _ = eng.run_to_completion(
+            _scaling_requests(np, Request, cfg))
+        ks = eng.kv_stats()
+        out["sharded_token_exact"] = \
+            {r.rid: list(r.out) for r in done} == want \
+            and ks["model_shards"] == 2 and ks["kv_shard_fraction"] == 0.5
+    return out
+
+
+def run_scaling(out_path: str = None) -> list[str]:
+    import subprocess
+    import sys
+
+    out_path = out_path or os.path.join(os.getcwd(), "BENCH_serve.json")
+    points = []
+    for d in SCALING_DEVICE_COUNTS:
+        env = dict(
+            os.environ,
+            XLA_FLAGS=f"--xla_force_host_platform_device_count={d}")
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__),
+             "--scaling-worker", str(d)],
+            env=env, capture_output=True, text=True, timeout=1200)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"scaling worker (devices={d}) failed:\n"
+                f"{proc.stderr[-4000:]}")
+        points.append(json.loads(proc.stdout.splitlines()[-1]))
+
+    sharded_exact = next(p["sharded_token_exact"] for p in points
+                         if "sharded_token_exact" in p)
+    scaling = {
+        "device_counts": [p["devices"] for p in points],
+        "tokens_per_s": [p["tokens_per_s"] for p in points],
+        "host_syncs": [p["host_syncs"] for p in points],
+        "device_ticks": [p["device_ticks"] for p in points],
+        "requests_per_replica": [p["requests_per_replica"] for p in points],
+        "fleet_token_exact": all(p["fleet_token_exact"] for p in points),
+        "note": "forced host devices share one physical CPU: the curve "
+                "records the fleet router's behavior (balance, syncs, "
+                "exactness), not hardware speedup",
+    }
+    record = json.load(open(out_path))
+    record["scaling"] = scaling
+    record["sharded_token_exact"] = sharded_exact
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+
+    # the perf-trajectory file: one JSONL line per bench run, seeded with
+    # the single-device baseline so device-count regressions have an
+    # anchor to diff against
+    traj_dir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "artifacts")
+    os.makedirs(traj_dir, exist_ok=True)
+    with open(os.path.join(traj_dir, "serve_trajectory.jsonl"), "a") as f:
+        f.write(json.dumps({
+            "ts": time.time(),
+            "suite": "serve_scaling",
+            "single_device_tokens_per_s": points[0]["tokens_per_s"],
+            "scaling": {k: scaling[k] for k in
+                        ("device_counts", "tokens_per_s", "host_syncs")},
+            "sharded_token_exact": sharded_exact,
+        }) + "\n")
+
+    rows = []
+    for p in points:
+        rows.append(f"serve,scaling,tokens_per_s@{p['devices']}dev,"
+                    f"{p['tokens_per_s']:.0f},"
+                    f"host_syncs={p['host_syncs']};"
+                    f"routed={p['requests_per_replica']}")
+    rows.append(f"serve,scaling,sharded_token_exact,{sharded_exact},"
+                f"model_shards=2")
+    # acceptance floors: every device count served the stream
+    # byte-identically (fleet AND tensor-parallel), and the router used
+    # every replica at each point
+    assert scaling["fleet_token_exact"] is True, scaling
+    assert sharded_exact is True, scaling
+    for p in points:
+        assert all(n > 0 for n in p["requests_per_replica"]), p
+    return rows
+
+
 def run() -> list[str]:
-    return run_serve() + run_latency() + run_spec() + run_overcommit()
+    return run_serve() + run_latency() + run_spec() + run_overcommit() \
+        + run_scaling()
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    if "--scaling-worker" in sys.argv:
+        sys.path.insert(0, os.path.join(
+            os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+        d = int(sys.argv[sys.argv.index("--scaling-worker") + 1])
+        print(json.dumps(_scaling_worker(d)))
+    else:
+        print("\n".join(run()))

@@ -15,8 +15,17 @@ on ``overcommit=True`` against a pool too small for every worst case:
 the supervisor evicts and resumes requests under KV pressure and the
 streams still match the reserved run token for token.
 
+With ``--devices N`` the run finishes one level up the hierarchy: a
+``FleetSupervisor`` owns N serving replicas (one per device; replicas
+share devices when the host has fewer) and routes the same stream
+least-loaded-by-blocks across them — engines are cores to the fleet
+exactly as slots are cores to an engine, and the tokens still match.
+
     PYTHONPATH=src python examples/serve.py
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        PYTHONPATH=src python examples/serve.py --devices 4
 """
+import argparse
 import time
 
 import jax
@@ -26,6 +35,7 @@ import numpy as np
 from repro.configs import get_arch, reduced
 from repro.models import model
 from repro.runtime.serve import Request, ServingEngine
+from repro.runtime.supervisor import FleetSupervisor
 
 
 def make_requests(cfg, n=10):
@@ -73,7 +83,37 @@ def run(engine, requests, label):
     return {r.rid: r.out for r in done}, kv
 
 
+def run_fleet(params, cfg, requests, want, n_replicas):
+    print(f"-- fleet: {n_replicas} serving replicas over "
+          f"{jax.device_count()} devices")
+    fleet = FleetSupervisor(params, cfg, n_replicas=n_replicas, model=1,
+                            n_slots=4, max_seq=96, chunk=8,
+                            paged=True, block_size=16, n_blocks=16)
+    t0 = time.perf_counter()
+    done, ticks = fleet.run_to_completion(requests)
+    dt = time.perf_counter() - t0
+    got = {r.rid: r.out for r in done}
+    assert got == want, "fleet routing must not change a token"
+    total = sum(len(t) for t in got.values())
+    ks = fleet.kv_stats()["fleet"]
+    sync = fleet.sync_stats()["fleet"]
+    print(f"   {total} tokens in {dt:.2f}s = {total / dt:.0f} tok/s over "
+          f"{ticks} summed ticks; requests per replica {fleet.routed}")
+    print(f"   fleet pool: {ks['slot_pool']['n_units']} slots / "
+          f"{ks['n_blocks']} blocks across {ks['n_replicas']} replicas; "
+          f"{sync['host_syncs']} host syncs fleet-wide")
+    print("token-exact across the fleet: which replica serves a request "
+          "cannot matter")
+
+
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=1,
+                    help="fleet replicas (one per device; replicas share "
+                         "devices when the host has fewer — set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count"
+                         "=N for a real N-device CPU mesh)")
+    args = ap.parse_args()
     cfg = reduced(get_arch("granite-3-2b"), n_layers=2, d_model=128,
                   vocab=512)
     params = model.init(jax.random.PRNGKey(0), cfg, jnp.float32)
@@ -146,6 +186,11 @@ def main():
           f"{occ['occupancy']:.2f} vs {occ_r['occupancy']:.2f} reserved, "
           f"{occ['preemptions']} preemptions / {occ['resumes']} resumes, "
           f"{occ['preempted_tokens_recomputed']} tokens recomputed")
+
+    # the fleet: one supervisor up — N engines as the rented cores,
+    # requests routed least-loaded-by-blocks, preemption-aware
+    if args.devices > 1:
+        run_fleet(params, cfg, make_requests(cfg), out_c, args.devices)
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
 from repro.kernels.chunk_attention.ops import (  # noqa: F401
     NARROW_MAX_WIDTH,
     chunk_attention_kernel,
+    chunk_attention_kernel_sharded,
     paged_chunk_attention_kernel,
+    paged_chunk_attention_kernel_sharded,
 )
 from repro.kernels.chunk_attention.kernel import (  # noqa: F401
     chunk_attention_narrow_call,

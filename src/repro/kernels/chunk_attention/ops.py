@@ -18,6 +18,8 @@ the matching ``pallas_call``.
 from __future__ import annotations
 
 import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.kernels.chunk_attention.kernel import (
     chunk_attention_narrow_call,
@@ -58,3 +60,45 @@ def paged_chunk_attention_kernel(q, k_pages, v_pages, block_tables,
             paged_chunk_attention_wide_call)
     return call(q, k_pages, v_pages, block_tables, q_pos,
                 interpret=_interpret())
+
+
+# -- head-sharded entries (tensor-parallel serving) --------------------------
+#
+# GSPMD cannot partition a ``pallas_call``: under a head-sharded mesh the
+# jit'd wrappers above would force an all-gather of the KV cache onto
+# every shard.  These entries instead run the SAME shape dispatch
+# per-shard on the local head slice via ``shard_map`` — heads are
+# embarrassingly parallel in attention (GQA groups never mix), so the
+# width-picks-the-schedule contract is untouched: the fragment axis is
+# unsharded and each shard sees the global width.  Callers guard on
+# divisibility (``model`` must divide H and Hkv — the sharding-rules
+# fallback) before routing here; these functions are not jit'd at this
+# level because mesh/axis are part of the closure — the serving tick
+# that traces them holds the jit.
+
+def chunk_attention_kernel_sharded(q, k_cache, v_cache, q_pos, *,
+                                   mesh: Mesh, axis: str = "model"):
+    """:func:`chunk_attention_kernel` with q/K/V head-sharded over
+    ``axis``; q_pos replicated.  Per-shard GQA ratio equals the global
+    one, so narrow/wide tile shapes are valid on the slice."""
+    hs = P(None, None, axis, None)
+    f = shard_map(chunk_attention_kernel, mesh=mesh,
+                  in_specs=(hs, hs, hs, P(None, None)), out_specs=hs,
+                  check_rep=False)
+    return f(q, k_cache, v_cache, q_pos)
+
+
+def paged_chunk_attention_kernel_sharded(q, k_pages, v_pages, block_tables,
+                                         q_pos, *, mesh: Mesh,
+                                         axis: str = "model"):
+    """:func:`paged_chunk_attention_kernel` with pages head-sharded over
+    ``axis``; block tables and positions replicated — every shard walks
+    the same chain, reads its own head slice of each block."""
+    f = shard_map(paged_chunk_attention_kernel, mesh=mesh,
+                  in_specs=(P(None, None, axis, None),
+                            P(None, None, axis, None),
+                            P(None, None, axis, None),
+                            P(None, None), P(None, None)),
+                  out_specs=P(None, None, axis, None),
+                  check_rep=False)
+    return f(q, k_pages, v_pages, block_tables, q_pos)

@@ -1,2 +1,5 @@
-from repro.kernels.paged_attention.ops import paged_attention  # noqa: F401
+from repro.kernels.paged_attention.ops import (  # noqa: F401
+    paged_attention,
+    paged_attention_sharded,
+)
 from repro.kernels.paged_attention.ref import paged_attention_ref  # noqa: F401

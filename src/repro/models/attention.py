@@ -21,6 +21,24 @@ def _sh(x, axes):
     return shard(x, axes)
 
 
+def _head_shard_mesh(h: int, hkv: int):
+    """The active rules' mesh iff its "model" axis (size > 1) divides
+    both head counts — the condition for handing the Pallas kernels a
+    local head slice via ``shard_map`` (GSPMD cannot partition a
+    ``pallas_call``; without this the kernel path would all-gather the
+    sharded KV cache onto every shard).  Mirrors the divisibility
+    fallback in runtime/sharding.py: non-divisible head counts take the
+    unsharded kernel, they don't crash."""
+    from repro.runtime.sharding import current_rules
+    rules = current_rules()
+    if rules is None:
+        return None
+    m = dict(rules.mesh.shape).get("model", 1)
+    if m <= 1 or h % m or hkv % m:
+        return None
+    return rules.mesh
+
+
 def _repeat_kv(k, n_rep: int):
     """(B, S, Hkv, D) -> (B, S, Hkv * n_rep, D)."""
     if n_rep == 1:
@@ -237,7 +255,12 @@ def chunk_attention(q, k_cache, v_cache, q_pos, span_idx=None,
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     if use_kernel:
-        from repro.kernels.chunk_attention import chunk_attention_kernel
+        from repro.kernels.chunk_attention import (
+            chunk_attention_kernel, chunk_attention_kernel_sharded)
+        mesh = _head_shard_mesh(q.shape[2], k_cache.shape[2])
+        if mesh is not None:
+            return chunk_attention_kernel_sharded(q, k_cache, v_cache,
+                                                  q_pos, mesh=mesh)
         return chunk_attention_kernel(q, k_cache, v_cache, q_pos)
     smax = k_cache.shape[1]
     spans = span_ladder(smax)
@@ -272,8 +295,13 @@ def paged_chunk_attention(q, k_pages, v_pages, block_tables, q_pos,
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     if use_kernel and not return_blocks:
-        from repro.kernels.chunk_attention import \
-            paged_chunk_attention_kernel
+        from repro.kernels.chunk_attention import (
+            paged_chunk_attention_kernel,
+            paged_chunk_attention_kernel_sharded)
+        mesh = _head_shard_mesh(q.shape[2], k_pages.shape[2])
+        if mesh is not None:
+            return paged_chunk_attention_kernel_sharded(
+                q, k_pages, v_pages, block_tables, q_pos, mesh=mesh)
         return paged_chunk_attention_kernel(q, k_pages, v_pages,
                                             block_tables, q_pos)
     smax = nb * bs
@@ -316,9 +344,15 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, cache_len,
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     if use_kernel:
-        from repro.kernels.paged_attention import paged_attention
-        o = paged_attention(q[:, 0], k_pages, v_pages, block_tables,
-                            cache_len)
+        from repro.kernels.paged_attention import (
+            paged_attention, paged_attention_sharded)
+        mesh = _head_shard_mesh(q.shape[2], k_pages.shape[2])
+        if mesh is not None:
+            o = paged_attention_sharded(q[:, 0], k_pages, v_pages,
+                                        block_tables, cache_len, mesh=mesh)
+        else:
+            o = paged_attention(q[:, 0], k_pages, v_pages, block_tables,
+                                cache_len)
         return o[:, None]
     n_pages, bs, _, d = k_pages.shape
     b, nb = block_tables.shape

@@ -224,6 +224,27 @@ def blocks_in_use(state: BlockPoolState) -> jax.Array:
     return jnp.sum(~state.pool.free).astype(jnp.int32)
 
 
+def free_blocks(state: BlockPoolState) -> jax.Array:
+    """Rentable blocks right now (jittable) — the fleet router's
+    least-loaded signal."""
+    return pool_lib.available(state.pool)
+
+
+def merge_block_stats(states) -> dict:
+    """Fleet-wide block ledger over per-replica pools: disjoint pools,
+    so capacity/usage/peaks are plain sums (see `pool.merge_stats` for
+    the invariant argument).  One replica's pool may itself be sharded
+    over the model axis — the ledger is replicated-with-local-rent
+    there, so each replica still contributes exactly one pool here."""
+    out = {"n_blocks": 0, "in_use": 0, "free": 0, "peak_used": 0}
+    for s in states:
+        out["n_blocks"] += int(s.pool.n)
+        out["in_use"] += int(blocks_in_use(s))
+        out["free"] += int(free_blocks(s))
+        out["peak_used"] += int(s.pool.peak_used)
+    return out
+
+
 def check_invariants(state: BlockPoolState, tables=None) -> None:
     """Host-side: refcounts and the free mask must agree; with `tables`
     given, refcounts must equal the number of chains referencing."""

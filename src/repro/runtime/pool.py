@@ -244,6 +244,31 @@ def enable(state: SlotPoolState, unit: IntLike) -> SlotPoolState:
         disabled=state.disabled.at[jnp.asarray(unit, jnp.int32)].set(False))
 
 
+# -- fleet aggregation --------------------------------------------------------
+
+def merge_stats(states) -> dict:
+    """Fleet-wide ledger over per-replica (per-shard) slot pools.
+
+    A fleet of supervisors holds one independent pool per replica; the
+    fleet-level numbers are plain sums — the pools are disjoint, so
+    used/peak/created add, and the per-pool monotonicity invariant
+    (``used <= peak_used <= created_total``) carries over to the sums.
+    This is the accounting `FleetSupervisor.occupancy_stats` reports so
+    per-shard pools never masquerade as one global pool.
+    """
+    totals = {"n_units": 0, "used": 0, "available": 0,
+              "peak_used": 0, "created_total": 0}
+    for s in states:
+        totals["n_units"] += int(s.n)
+        totals["used"] += int(used(s))
+        totals["available"] += int(available(s))
+        totals["peak_used"] += int(s.peak_used)
+        totals["created_total"] += int(s.created_total)
+    assert 0 <= totals["used"] <= totals["peak_used"] \
+        <= totals["created_total"] or totals["created_total"] == 0
+    return totals
+
+
 # -- invariants (host-side; property-tested) ---------------------------------
 
 def check_invariants(state: SlotPoolState) -> None:

@@ -117,6 +117,7 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core.supervisor import CorePool
@@ -987,6 +988,7 @@ class ServingEngine:
                  decode_fn: Optional[Callable] = None,
                  chunk: int = 8,
                  rules: Optional[ShardingRules] = None,
+                 mesh: Optional[Mesh] = None,
                  paged: bool = False, block_size: int = 16,
                  n_blocks: Optional[int] = None,
                  prefix_sharing: bool = True,
@@ -996,6 +998,18 @@ class ServingEngine:
                  speculative: bool = False, spec_k: int = 4,
                  spec_hist: int = 64,
                  overcommit: bool = False):
+        # tensor-parallel tick: with a (data, model) mesh the engine
+        # shards attention heads / KV along "model" per the logical-axis
+        # rules (divisibility fallback included) and places params, cache
+        # and supervisor state accordingly — every tick then lowers with
+        # sharded donated caches.  Token-exact vs the single-device
+        # engine: attention has no cross-head reduction, the sharded
+        # contractions psum disjoint partial sums, and the conformance
+        # matrix asserts bit-identical emitted tokens on a >=2-device
+        # mesh (CI runs it under 8 forced host devices).
+        if mesh is not None and rules is None:
+            rules = ShardingRules(mesh)
+        self.mesh, self.rules = mesh, rules
         self.params, self.cfg = params, cfg
         self.max_seq, self.eos_id, self.chunk = max_seq, eos_id, chunk
         self.pool = CorePool(n_slots)
@@ -1160,6 +1174,51 @@ class ServingEngine:
         else:
             self._block_bytes = sum(
                 self.cache[k].nbytes // n_blocks for k in ("k", "v"))
+        # per-shard KV accounting: the fraction of a KV leaf's bytes one
+        # model shard actually holds (1.0 single-device, 1/m head-sharded,
+        # 1.0 again when divisibility fell back to replication)
+        self._kv_shard_frac = 1.0
+        self.model_shards = 1
+        if mesh is not None:
+            self._place_on_mesh()
+
+    def _place_on_mesh(self) -> None:
+        """Place params, cache and supervisor state on the engine mesh.
+
+        Cache leaves follow the logical cache axes (kv heads over "model"
+        when divisible, head_dim fallback otherwise); params follow the
+        same rule table the cluster supervisor plans with.  Per-slot
+        decode/drafter state and the block-pool ledger are *replicated*:
+        the pool's bookkeeping is global — every shard rents the same
+        block id for its local head slice (replicated-with-local-rent) —
+        so rent/release stay one transition, while the pages' bytes split
+        across shards (`kv_stats` reports both views).
+        """
+        from repro.launch import inputs as inputs_lib
+        from repro.models.params import _set
+        mesh, rules = self.mesh, self.rules
+        repl = NamedSharding(mesh, P())
+        pspecs: dict = {}
+        for d in model_lib.param_defs(self.cfg):
+            _set(pspecs, d.path, rules.spec(d.axes, d.shape))
+        psh = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), pspecs,
+            is_leaf=lambda x: isinstance(x, P))
+        self.params = jax.device_put(self.params, psh)
+        ax = inputs_lib.cache_axes(self.cfg, paged=self.layout is not None)
+        csh = {k: NamedSharding(mesh, rules.spec(ax[k], v.shape))
+               if k in ax else repl for k, v in self.cache.items()}
+        self.cache = jax.device_put(self.cache, csh)
+        self.dstate = jax.device_put(self.dstate, repl)
+        self._first = jax.device_put(self._first, repl)
+        if self.layout is not None:
+            self.bstate = jax.device_put(self.bstate, repl)
+        if self.spec:
+            self.draft_state = jax.device_put(self.draft_state, repl)
+        k = self.cache["k"]
+        local = int(np.prod(k.sharding.shard_shape(k.shape)))
+        self._kv_shard_frac = local / k.size
+        self.model_shards = int(dict(mesh.shape).get("model", 1))
 
     # -- admission ---------------------------------------------------------
     def admit(self, req: Request) -> bool:
@@ -2153,6 +2212,8 @@ class ServingEngine:
         return {
             "overcommit": bool(self.overcommit),
             "ticks": int(self.occ_ticks),
+            "n_slots": int(self.pool.n),
+            "slot_ticks": int(self.occ_slot_ticks),
             "occupancy": self.occ_slot_ticks
             / max(1, self.occ_ticks * self.pool.n),
             "preemptions": int(self.preemptions),
@@ -2166,13 +2227,27 @@ class ServingEngine:
         """KV-cache economics over the *finished* requests: bytes the
         engine actually allocated for them per token they produced.
         Contiguous slots pay `max_seq` rows per admission regardless of
-        the sequence; paged chains pay per rented (non-shared) block."""
+        the sequence; paged chains pay per rented (non-shared) block.
+
+        Byte totals are *global* (summed across the engine's model
+        shards): the block/slot ledger is replicated-with-local-rent, so
+        one rented block holds ``kv_shard_fraction`` of its bytes on each
+        shard and the global figure is their sum.  ``*_per_shard`` fields
+        give the single-shard view (what one device actually stores);
+        fleet-wide aggregation across replicas is the
+        ``FleetSupervisor.kv_stats`` sum over these per-engine ledgers.
+        """
         out = {
             "layout": "paged" if self.layout is not None else "contiguous",
             "kv_bytes_allocated": int(self.kv_bytes_allocated),
             "tokens_finished": int(self.tokens_finished),
             "kv_bytes_per_token":
                 self.kv_bytes_allocated / max(1, self.tokens_finished),
+            "model_shards": int(self.model_shards),
+            "kv_shard_fraction": float(self._kv_shard_frac),
+            "kv_bytes_per_token_per_shard":
+                self.kv_bytes_allocated * self._kv_shard_frac
+                / max(1, self.tokens_finished),
         }
         if self.layout is not None:
             out.update(
@@ -2182,7 +2257,33 @@ class ServingEngine:
                 stalls=int(self.stalls),
                 peak_blocks=int(self.bstate.pool.peak_used),
                 blocks_in_use=int(np.sum(self._ref_host > 0)),
+                block_bytes_per_shard=
+                    int(self._block_bytes * self._kv_shard_frac),
             )
         else:
             out["slot_bytes"] = int(self._slot_bytes)
+            out["slot_bytes_per_shard"] = \
+                int(self._slot_bytes * self._kv_shard_frac)
         return out
+
+    def load(self) -> dict:
+        """Host-side routing signal for the fleet supervisor: rentable
+        slots, rentable KV blocks net of the §5.1 reservation (what a new
+        admission could actually claim — under over-commit nothing is
+        reserved, so the raw free count stands), and the preemption
+        pressure signals.  Parked requests hold a re-admission claim on
+        blocks the ledger calls free; a pressure flag means the last tick
+        ran the pool dry — a preemption-aware router sends new work
+        elsewhere first.  Reads only host mirrors: routing never syncs
+        the device."""
+        free_blocks = None
+        if self.layout is not None:
+            free_blocks = int(np.sum(self._ref_host == 0))
+            if not self.overcommit:
+                free_blocks = max(0, free_blocks - self._reserved_blocks())
+        return {
+            "free_slots": int(self.pool.available),
+            "free_blocks": free_blocks,
+            "parked": len(self._parked),
+            "pressure": bool(self._pressure),
+        }

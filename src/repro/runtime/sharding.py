@@ -19,6 +19,7 @@ import threading
 from typing import Optional, Sequence, Union
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 AxisCand = Union[str, tuple[str, ...]]  # one candidate: mesh axis or product
@@ -146,6 +147,46 @@ class ShardingRules:
                              f"shape={shape}")
         uniq = sorted(set(lines))
         return "\n".join(uniq) if uniq else "  (no fallbacks)"
+
+
+# ---------------------------------------------------------------------------
+# Serve meshes: the (data, model) grid the serving stack shards over.
+# The fleet layer owns the data axis (one ServingEngine replica per data
+# row); each replica's tick shards heads/KV over its model columns.
+# ---------------------------------------------------------------------------
+
+def serve_mesh(model: int = 1, *, data: int = 1,
+               devices: Optional[Sequence] = None) -> Mesh:
+    """A ``(data, model)`` mesh over ``data * model`` devices.
+
+    Defaults to the first ``data * model`` of :func:`jax.devices` — on a
+    CPU host forced to N devices (``xla_force_host_platform_device_count``)
+    this is the mesh the multi-device conformance cells and the scaling
+    bench run on."""
+    need = data * model
+    if devices is None:
+        devices = jax.devices()
+    if len(devices) < need:
+        raise ValueError(
+            f"serve_mesh(data={data}, model={model}) needs {need} devices, "
+            f"have {len(devices)} (set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N on CPU)")
+    devs = np.asarray(list(devices)[:need], dtype=object).reshape(data, model)
+    return Mesh(devs, ("data", "model"))
+
+
+def fleet_submeshes(mesh: Mesh) -> list[Mesh]:
+    """Split a ``(data, model)`` mesh into one ``(1, model)`` submesh per
+    data row — the per-replica meshes a ``FleetSupervisor`` hands its
+    ``ServingEngine``s.  Each replica shards tensor-parallel state over
+    its own model columns; the data axis is realized as N independent
+    engines, not as a collective."""
+    devs = np.asarray(mesh.devices)
+    if devs.ndim != 2:
+        raise ValueError(f"expected a 2-d (data, model) mesh, got shape "
+                         f"{devs.shape} with axes {mesh.axis_names}")
+    return [Mesh(devs[i:i + 1], mesh.axis_names)
+            for i in range(devs.shape[0])]
 
 
 # ---------------------------------------------------------------------------

@@ -21,9 +21,10 @@ from repro.core.qt import QT, MassMode, QTGraph
 from repro.launch import inputs as inputs_lib
 from repro.models import model as model_lib
 from repro.optim import adamw
+from repro.runtime import pool as pool_lib
 from repro.runtime import serve as serve_lib
 from repro.runtime import train as train_lib
-from repro.runtime.sharding import ShardingRules
+from repro.runtime.sharding import ShardingRules, fleet_submeshes, serve_mesh
 
 
 @dataclasses.dataclass
@@ -151,7 +152,10 @@ class ClusterSupervisor:
                    paged: Optional[model_lib.PagedLayout] = None,
                    speculative: Optional[int] = None,
                    spec_hist: int = 64,
-                   overcommit: Optional[int] = None) -> Plan:
+                   overcommit: Optional[int] = None,
+                   chunked: Optional[int] = None,
+                   solo_prefill: Optional[int] = None,
+                   mesh: Optional[Mesh] = None) -> Plan:
         """The device-resident continuous-batching tick (serve_lib): one
         jitted chunk advances every slot up to `chunk` tokens with the
         supervisor state (active mask, budgets) resident on device.  The
@@ -175,16 +179,44 @@ class ClusterSupervisor:
         drives between evictions and resumes: every slot advances one
         fragment or one token per call, and the parked-request replay
         rides the same fragment inputs.  Speculative takes precedence —
-        the spec tick already composes with fragments."""
+        the spec tick already composes with fragments.
+
+        ``chunked`` (the fragment width) lowers the same mixed tick for
+        the chunked-prefill family *without* over-commit — the device
+        step is identical, only the host admission policy differs — and
+        ``solo_prefill`` (the packed fragment width) lowers the
+        cold-start **solo prefill tick** (`build_solo_prefill_tick`), so
+        all five tick families lower through one entry point.
+
+        With ``mesh`` given, the plan lowers for that mesh instead of the
+        supervisor's own: fresh `ShardingRules` bind the logical axes to
+        it (divisibility fallback per dimension), and every sharding in
+        the plan — donated caches included — names the new mesh.  This is
+        how a serve tick planned on one device re-plans for a (data,
+        model) grid."""
+        if mesh is not None and mesh is not self.mesh:
+            sub = ClusterSupervisor(mesh, self.cfg, self.shape,
+                                    n_microbatch=self.n_microbatch,
+                                    opt_cfg=self.opt_cfg, dtype=self.dtype,
+                                    gather_once=self.gather_once,
+                                    remat=self.remat)
+            return sub.plan_serve(chunk=chunk, eos_id=eos_id, paged=paged,
+                                  speculative=speculative,
+                                  spec_hist=spec_hist, overcommit=overcommit,
+                                  chunked=chunked, solo_prefill=solo_prefill)
         cfg, shape = self.cfg, self.shape
         n_slots = shape.global_batch
         if speculative is not None:
             return self._plan_serve_spec(spec_k=speculative,
                                          spec_hist=spec_hist,
                                          eos_id=eos_id, paged=paged)
-        if overcommit is not None:
-            return self._plan_serve_overcommit(chunk_tokens=overcommit,
-                                               eos_id=eos_id, paged=paged)
+        if overcommit is not None or chunked is not None:
+            return self._plan_serve_mixed(
+                chunk_tokens=overcommit if overcommit is not None
+                else chunked, eos_id=eos_id, paged=paged)
+        if solo_prefill is not None:
+            return self._plan_serve_solo(chunk_tokens=solo_prefill,
+                                         paged=paged)
         step = serve_lib.build_decode_chunk(
             cfg, chunk=chunk, eos_id=eos_id, rules=self.rules, jit=False,
             paged=paged)
@@ -223,15 +255,17 @@ class ClusterSupervisor:
             donate_argnums=donate,
             rules=self.rules, qt_graph=self.qt_graph(), notes=self._notes())
 
-    def _plan_serve_overcommit(self, *, chunk_tokens: int, eos_id: int,
-                               paged: Optional[model_lib.PagedLayout]
-                               ) -> Plan:
-        """Lower the eviction-aware mixed tick with explicit shardings:
-        per-slot fragment inputs (sharded like the decode state), the
-        cache — and, paged, the block pool plus the chunk-granular rent
-        commits — donated.  Eviction and resume themselves are host
-        supervisor actions between ticks (`ServingEngine.preempt` /
-        `_resume_parked`); the device step they bracket is this one."""
+    def _plan_serve_mixed(self, *, chunk_tokens: int, eos_id: int,
+                          paged: Optional[model_lib.PagedLayout]
+                          ) -> Plan:
+        """Lower the unified prefill/decode (mixed) tick with explicit
+        shardings: per-slot fragment inputs (sharded like the decode
+        state), the cache — and, paged, the block pool plus the
+        chunk-granular rent commits — donated.  One lowering serves two
+        families: chunked prefill and over-commit run the identical
+        device step — eviction and resume are host supervisor actions
+        between ticks (`ServingEngine.preempt` / `_resume_parked`); the
+        device step they bracket is this one."""
         cfg, shape = self.cfg, self.shape
         n_slots = shape.global_batch
         c = chunk_tokens
@@ -275,6 +309,63 @@ class ClusterSupervisor:
         out_sh.append(self._sh(emitted_spec))
         if paged is not None:
             out_sh.append(self._sh(P()))     # stall counter
+        return Plan(
+            name=f"{cfg.name}/{shape.name}", kind="serve", step_fn=step,
+            abstract_args=tuple(abstract_args),
+            in_shardings=tuple(in_sh),
+            out_shardings=tuple(out_sh),
+            donate_argnums=donate,
+            rules=self.rules, qt_graph=self.qt_graph(), notes=self._notes())
+
+    def _plan_serve_solo(self, *, chunk_tokens: int,
+                         paged: Optional[model_lib.PagedLayout]) -> Plan:
+        """Lower the cold-start solo prefill tick with explicit
+        shardings: ONE job's packed fragments run through a single-row
+        `prefill_chunk` against that slot's cache view.  The fragment row
+        is replicated (one row cannot shard over data), the cache keeps
+        its head-sharded layout — the single-row forward still runs
+        tensor-parallel over "model" — and ``slot`` is a traced scalar,
+        so one compile covers every slot."""
+        cfg, shape = self.cfg, self.shape
+        n_slots = shape.global_batch
+        W = chunk_tokens
+        step = serve_lib.build_solo_prefill_tick(
+            cfg, chunk_tokens=W, rules=self.rules, jit=False, paged=paged)
+        params = model_lib.abstract(cfg, self.dtype)
+        pspec = train_lib.state_specs(cfg, self.rules)["params"]
+        state = serve_lib.abstract_decode_state(n_slots)
+        slot_spec = self.rules.spec(("cache_batch",), (n_slots,))
+        sspec = serve_lib.DecodeState(*([slot_spec] * len(state)))
+        cache = model_lib.init_cache(cfg, n_slots, shape.seq_len,
+                                     dtype=self.dtype, abstract_only=True,
+                                     layout=paged)
+        cspec = self._cache_specs(cache, paged=paged is not None)
+        i32 = lambda s: jax.ShapeDtypeStruct(s, jnp.int32)  # noqa: E731
+        row1 = [i32((1, W)), i32((1,)),
+                jax.ShapeDtypeStruct((1,), jnp.bool_), i32((1,))]
+        abstract_args = [params, state, cache]
+        in_sh = [self._sh(pspec), self._sh(sspec), self._sh(cspec)]
+        out_sh = [self._sh(sspec), self._sh(cspec)]
+        donate = (2,)
+        if paged is not None:
+            from repro.runtime import paging
+            bstate = paging.abstract_blocks(paged.n_blocks)
+            bspec = jax.tree_util.tree_map(lambda _: P(), bstate)
+            abstract_args.append(bstate)
+            in_sh.append(self._sh(bspec))
+            out_sh.append(self._sh(bspec))
+            donate = (2, 3)
+        abstract_args.append(i32(()))              # slot (traced scalar)
+        in_sh.append(self._sh(P()))
+        abstract_args += row1
+        in_sh += [self._sh(P()) for _ in row1]
+        if paged is not None:
+            k = W // paged.block_size + 2
+            rowk = self.rules.spec(("cache_batch", None), (n_slots, k))
+            abstract_args += [i32((1,)), i32((n_slots, k)),
+                              i32((n_slots, k))]
+            in_sh += [self._sh(P()), self._sh(rowk), self._sh(rowk)]
+        out_sh.append(self._sh(P()))               # emitted (1,)
         return Plan(
             name=f"{cfg.name}/{shape.name}", kind="serve", step_fn=step,
             abstract_args=tuple(abstract_args),
@@ -390,3 +481,206 @@ class ClusterSupervisor:
                  f"microbatches={self.n_microbatch}",
                  f"gather_once={self.gather_once}", f"remat={self.remat}"]
         return notes
+
+
+class FleetSupervisor:
+    """Data-parallel fleet of serving supervisors — the paper's hierarchy
+    one level up (cores -> SV -> cluster, §4.1): each `ServingEngine` is
+    a supervisor over its slot/block cores on one ``(1, model)`` submesh;
+    this layer owns the ``data`` axis of the serve mesh and routes
+    incoming requests across the replicas.
+
+    **Routing** is least-loaded-by-blocks and preemption-aware: a request
+    goes to the replica with the most rentable KV blocks (free slots, for
+    contiguous engines), except that replicas holding parked (preempted)
+    requests or flagged under pool pressure lose priority — new work
+    there would compete with the re-admission queue's claim on blocks the
+    ledger calls free.  Ties break toward the replica routed least (round
+    robin).  Routing reads only host mirrors; it never syncs a device.
+
+    **Accounting**: per-shard pools never masquerade as one global pool —
+    `kv_stats` / `occupancy_stats` / `sync_stats` / `spec_stats` return
+    ``{"fleet": <sums>, "per_replica": [...]}``, with the slot/block
+    ledger sums delegated to :func:`repro.runtime.pool.merge_stats` and
+    :func:`repro.runtime.paging.merge_block_stats` (disjoint pools: used,
+    peaks and capacities add).
+    """
+
+    def __init__(self, params, cfg: ArchConfig, *,
+                 n_replicas: Optional[int] = None, model: int = 1,
+                 devices: Optional[list] = None,
+                 mesh: Optional[Mesh] = None, **engine_kw):
+        """``mesh`` (a (data, model) grid) or ``n_replicas``/``model``
+        pick the fleet shape; without either, one replica per available
+        device.  ``engine_kw`` is forwarded to every `ServingEngine`
+        (n_slots, max_seq, paged, speculative, overcommit, ...)."""
+        if mesh is not None:
+            self.meshes = fleet_submeshes(mesh)
+        else:
+            devices = list(devices) if devices is not None \
+                else list(jax.devices())
+            if n_replicas is None:
+                n_replicas = max(1, len(devices) // model)
+            need = n_replicas * model
+            if len(devices) < need:
+                if model > 1:
+                    raise ValueError(
+                        f"fleet of {n_replicas} x {model}-way replicas "
+                        f"needs {need} devices, have {len(devices)}")
+                # model == 1: replicas may share a device — a 1-device
+                # host still gets a functional (if serialized) fleet
+                devices = [devices[i % len(devices)] for i in range(need)]
+            self.meshes = [
+                serve_mesh(model, devices=devices[i * model:(i + 1) * model])
+                for i in range(n_replicas)]
+        self.engines = [
+            serve_lib.ServingEngine(params, cfg, mesh=m, **engine_kw)
+            for m in self.meshes]
+        self.routed = [0] * len(self.engines)
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.engines)
+
+    # -- routing -----------------------------------------------------------
+    def _busy(self, e: serve_lib.ServingEngine) -> bool:
+        return bool(e.active or e._parked or e._finished_instant)
+
+    def route_order(self) -> list[int]:
+        """Replica indices in routing-preference order (see class doc)."""
+        loads = [e.load() for e in self.engines]
+
+        def key(i):
+            ld = loads[i]
+            blocks = ld["free_blocks"] if ld["free_blocks"] is not None \
+                else ld["free_slots"]
+            penalized = ld["parked"] > 0 or ld["pressure"]
+            return (not penalized, ld["free_slots"] > 0, blocks,
+                    -self.routed[i])
+
+        return sorted(range(len(self.engines)), key=key, reverse=True)
+
+    def admit_many(self, pending: list[serve_lib.Request]) -> int:
+        """Route-and-admit queued requests, head of queue first, until no
+        replica takes the head.  Returns the number admitted (the caller
+        drops that prefix, `ServingEngine.admit_many` convention)."""
+        n = 0
+        while n < len(pending):
+            req = pending[n]
+            for i in self.route_order():
+                if self.engines[i].admit(req):
+                    self.routed[i] += 1
+                    n += 1
+                    break
+            else:
+                break
+        return n
+
+    # -- driving -----------------------------------------------------------
+    def step(self) -> list[serve_lib.Request]:
+        """One tick on every busy replica; returns finished requests."""
+        done: list[serve_lib.Request] = []
+        for e in self.engines:
+            if self._busy(e):
+                done += e.step()
+        return done
+
+    def run_to_completion(self, requests: list[serve_lib.Request],
+                          max_ticks: int = 10_000):
+        """Continuous batching across the fleet: route/admit whenever any
+        replica has capacity, tick every busy replica.  Returns (done,
+        total device ticks) like `ServingEngine.run_to_completion`."""
+        pending = list(requests)
+        done: list[serve_lib.Request] = []
+        start = sum(e.device_ticks for e in self.engines)
+
+        def ticks():
+            return sum(e.device_ticks for e in self.engines) - start
+
+        while pending or any(self._busy(e) for e in self.engines):
+            n = self.admit_many(pending)
+            del pending[:n]
+            if not any(self._busy(e) for e in self.engines):
+                if pending:
+                    raise RuntimeError(
+                        f"{len(pending)} requests stuck: no replica can "
+                        f"admit and none is draining; per-replica loads "
+                        f"{[e.load() for e in self.engines]}")
+                break
+            done += self.step()
+            if ticks() > max_ticks:
+                raise RuntimeError(
+                    f"max_ticks={max_ticks} exhausted with "
+                    f"{sum(len(e.active) for e in self.engines)} active "
+                    f"and {len(pending)} pending requests undrained")
+        for e in self.engines:
+            if e._finished_instant:
+                done += e._finished_instant
+                e._finished_instant = []
+        return done, ticks()
+
+    # -- accounting --------------------------------------------------------
+    def reset_stats(self) -> None:
+        for e in self.engines:
+            e.reset_stats()
+
+    def kv_stats(self) -> dict:
+        """Fleet-wide KV economics + the per-replica ledgers.  Sums are
+        across replicas; each replica's bytes are already summed over its
+        model shards (see `ServingEngine.kv_stats`)."""
+        per = [e.kv_stats() for e in self.engines]
+        fleet = {
+            "n_replicas": len(per),
+            "kv_bytes_allocated": sum(p["kv_bytes_allocated"] for p in per),
+            "tokens_finished": sum(p["tokens_finished"] for p in per),
+        }
+        fleet["kv_bytes_per_token"] = fleet["kv_bytes_allocated"] \
+            / max(1, fleet["tokens_finished"])
+        if all(e.layout is not None for e in self.engines):
+            from repro.runtime import paging
+            fleet.update(paging.merge_block_stats(
+                [e.bstate for e in self.engines]))
+            fleet["stalls"] = sum(p["stalls"] for p in per)
+            fleet["shared_block_hits"] = \
+                sum(p["shared_block_hits"] for p in per)
+        fleet["slot_pool"] = pool_lib.merge_stats(
+            [e.pool.state for e in self.engines])
+        return {"fleet": fleet, "per_replica": per}
+
+    def occupancy_stats(self) -> dict:
+        """Fleet occupancy is slot-tick weighted across replicas (NOT a
+        mean of per-replica ratios — replicas tick different amounts):
+        sum(running slot-ticks) / sum(ticks x slots)."""
+        per = [e.occupancy_stats() for e in self.engines]
+        denom = sum(p["ticks"] * p["n_slots"] for p in per)
+        fleet = {
+            "occupancy": sum(p["slot_ticks"] for p in per) / max(1, denom),
+            "ticks": sum(p["ticks"] for p in per),
+            "preemptions": sum(p["preemptions"] for p in per),
+            "resumes": sum(p["resumes"] for p in per),
+            "preempted_tokens_recomputed":
+                sum(p["preempted_tokens_recomputed"] for p in per),
+            "preempt_replay_mismatches":
+                sum(p["preempt_replay_mismatches"] for p in per),
+        }
+        return {"fleet": fleet, "per_replica": per}
+
+    def sync_stats(self) -> dict:
+        per = [e.sync_stats() for e in self.engines]
+        fleet = {k: sum(p[k] for p in per)
+                 for k in ("host_syncs", "baseline_syncs", "device_ticks",
+                           "decode_tokens")}
+        fleet["sync_reduction_x"] = fleet["baseline_syncs"] \
+            / max(1, fleet["host_syncs"])
+        return {"fleet": fleet, "per_replica": per}
+
+    def spec_stats(self) -> dict:
+        per = [e.spec_stats() for e in self.engines]
+        fleet = {k: sum(p[k] for p in per)
+                 for k in ("spec_forwards", "spec_slot_forwards",
+                           "spec_decode_tokens", "drafted", "accepted")}
+        fleet["tokens_per_forward"] = fleet["spec_decode_tokens"] \
+            / max(1, fleet["spec_slot_forwards"])
+        fleet["acceptance_rate"] = fleet["accepted"] \
+            / max(1, fleet["drafted"])
+        return {"fleet": fleet, "per_replica": per}

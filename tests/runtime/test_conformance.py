@@ -176,6 +176,46 @@ def test_overcommit_rejects_unsupported_families(serve_harness):
                       overcommit=True)
 
 
+# -- mesh-sharded cells ------------------------------------------------------
+#
+# The same contract one level up: a tensor-parallel engine (heads and KV
+# sharded over the mesh's "model" axis) must emit the byte-identical
+# token stream — sharding is a layout choice, not a numerical one.  The
+# head-sharded contractions keep each head's reduction entirely on one
+# shard (heads never mix in attention), so the float arithmetic per head
+# is literally the same program as the single-device engine's.  Cells
+# skip on a single-device host; CI runs them under
+# ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+MESH_MATRIX = [cell for cell in MATRIX if cell[1] == "chunked"] + [
+    ("contiguous", "monolithic", "greedy", "reserved"),
+    ("paged", "monolithic", "greedy", "reserved"),
+]
+
+
+@pytest.mark.parametrize(
+    "layout,chunking,decode,admission", MESH_MATRIX,
+    ids=["mesh-" + "-".join(cell) for cell in MESH_MATRIX])
+def test_token_exact_on_sharded_mesh(serve_setup, serve_harness, oracle,
+                                     layout, chunking, decode, admission):
+    import jax
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count)")
+    from repro.runtime.sharding import serve_mesh
+    cfg, params = serve_setup
+    kw = _engine_kw(layout, chunking, decode, admission)
+    outputs, eng = serve_harness.run(
+        params, cfg, serve_harness.pressure_requests(),
+        preempt_at=(2, 5), mesh=serve_mesh(2), **kw)
+    assert outputs == oracle, (layout, chunking, decode, admission)
+    ks = eng.kv_stats()
+    assert ks["model_shards"] == 2
+    assert ks["kv_shard_fraction"] == 0.5       # KV really split, not
+    assert eng.preemptions >= 1                 # replicated
+    serve_harness.assert_drained(eng)
+
+
 @pytest.mark.parametrize("paged", [False, True])
 def test_plan_serve_overcommit_lowers_with_shardings(paged):
     """ClusterSupervisor lowers the eviction-aware mixed tick (the step
@@ -199,6 +239,43 @@ def test_plan_serve_overcommit_lowers_with_shardings(paged):
     plan = sup.plan_serve(overcommit=8, paged=layout)
     assert plan.kind == "serve"
     assert plan.donate_argnums == ((2, 3) if paged else (2,))
+    lowered = jax.jit(plan.step_fn, in_shardings=plan.in_shardings,
+                      out_shardings=plan.out_shardings,
+                      donate_argnums=plan.donate_argnums) \
+        .lower(*plan.abstract_args)
+    assert lowered.compile() is not None
+
+
+@pytest.mark.parametrize("family,kw", [
+    ("chunked", dict(chunked=8)),
+    ("solo_prefill", dict(solo_prefill=8)),
+    ("spec", dict(speculative=3)),
+], ids=["chunked", "solo_prefill", "spec"])
+@pytest.mark.parametrize("paged", [False, True], ids=["contig", "paged"])
+def test_plan_serve_all_families_lower_on_serve_mesh(family, kw, paged):
+    """Every tick family lowers through ``plan_serve(mesh=...)`` with
+    explicit shardings and donated caches — the mesh kwarg rebuilds the
+    supervisor on the serve grid, so one supervisor instance can plan
+    for whatever mesh the fleet hands it."""
+    import jax
+    import jax.numpy as jnp
+
+    from jax.sharding import Mesh
+    from repro.configs import ShapeConfig, get_arch, reduced
+    from repro.models import model
+    from repro.runtime.sharding import serve_mesh
+    from repro.runtime.supervisor import ClusterSupervisor
+
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=1, d_model=64,
+                  vocab=128)
+    train_mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                      ("data", "model"))
+    shape = ShapeConfig("serve_tiny", 48, 4, "serve")
+    sup = ClusterSupervisor(train_mesh, cfg, shape, dtype=jnp.float32)
+    layout = model.PagedLayout(block_size=8, n_blocks=24) if paged else None
+    plan = sup.plan_serve(paged=layout, mesh=serve_mesh(1), **kw)
+    assert plan.kind == "serve"
+    assert dict(plan.rules.mesh.shape) == {"data": 1, "model": 1}
     lowered = jax.jit(plan.step_fn, in_shardings=plan.in_shardings,
                       out_shardings=plan.out_shardings,
                       donate_argnums=plan.donate_argnums) \

@@ -1,0 +1,167 @@
+"""FleetSupervisor: the data-parallel router over serving replicas.
+
+The fleet is the paper's hierarchy applied one level up — each
+`ServingEngine` is a supervisor over its slot/block cores; the fleet
+owns the ``data`` axis and routes requests.  Three contracts:
+
+* **token exactness** — which replica serves a request must not change
+  a token (each replica runs the same greedy program, so this reduces
+  to per-engine exactness — asserted against the single-engine oracle);
+* **preemption-aware routing** — parked requests and pool pressure
+  push new work to other replicas first; ties round-robin;
+* **honest accounting** — fleet stats are sums over per-replica (and,
+  inside a replica, per-shard) ledgers, never a mean of ratios.
+
+Replicas here share one CPU device (model=1 submeshes may overlap when
+there is nothing to shard) so the whole file runs in the tier-1 suite;
+the tensor-parallel fleet cells skip below 4 devices and run in CI's
+multi-device step.
+"""
+from __future__ import annotations
+
+import jax
+import pytest
+
+from repro.runtime.supervisor import FleetSupervisor
+
+N_SLOTS = 3
+MAX_SEQ = 48
+CHUNK = 4
+
+
+def _kw(paged):
+    kw = dict(n_slots=N_SLOTS, max_seq=MAX_SEQ, chunk=CHUNK)
+    if paged:
+        kw.update(paged=True, block_size=8, n_blocks=20)
+    return kw
+
+
+def _oracle(serve_setup, serve_harness, paged):
+    cfg, params = serve_setup
+    outputs, eng = serve_harness.run(
+        params, cfg, serve_harness.pressure_requests(), **_kw(paged))
+    return outputs, eng
+
+
+def _run_fleet(fleet, requests):
+    done, _ = fleet.run_to_completion(requests)
+    return {r.rid: r.out for r in done}
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["contig", "paged"])
+def test_fleet_token_exact_vs_single_engine(serve_setup, serve_harness,
+                                            paged):
+    cfg, params = serve_setup
+    want, _ = _oracle(serve_setup, serve_harness, paged)
+    fleet = FleetSupervisor(params, cfg, n_replicas=2, model=1,
+                            devices=jax.devices()[:1], **_kw(paged))
+    got = _run_fleet(fleet, serve_harness.pressure_requests())
+    assert got == want
+    assert all(n > 0 for n in fleet.routed)     # both replicas served
+    for e in fleet.engines:
+        serve_harness.assert_drained(e)
+
+
+def test_routing_is_preemption_aware_and_round_robin(serve_setup,
+                                                     serve_harness):
+    cfg, params = serve_setup
+    fleet = FleetSupervisor(params, cfg, n_replicas=3, model=1,
+                            devices=jax.devices()[:1], **_kw(True))
+    # equal loads: stable tie-break -> replica 0, then least-routed
+    assert fleet.route_order()[0] == 0
+    fleet.routed[0] += 1
+    assert fleet.route_order()[0] == 1
+    # pool pressure demotes a replica even if it has the most blocks
+    fleet.engines[1]._pressure = True
+    assert fleet.route_order()[-1] == 1
+    # a parked (preempted) request demotes too: its re-admission holds
+    # a claim on blocks the ledger calls free
+    fleet.engines[0]._parked[0] = object()
+    order = fleet.route_order()
+    assert order[0] == 2 and set(order[1:]) == {0, 1}
+    fleet.engines[0]._parked.clear()
+    fleet.engines[1]._pressure = False
+    # no free slots demotes below a replica with capacity
+    fleet.engines[2].pool.rent_many(N_SLOTS)
+    assert fleet.route_order()[-1] == 2
+
+
+def test_fleet_stats_sum_per_replica_ledgers(serve_setup, serve_harness):
+    """Satellite contract: fleet-wide AND per-replica numbers, the
+    fleet-wide ones sums over disjoint pools (slot AND block), byte
+    totals conserved vs the single-engine run of the same stream."""
+    cfg, params = serve_setup
+    _, oracle_eng = _oracle(serve_setup, serve_harness, paged=True)
+    fleet = FleetSupervisor(params, cfg, n_replicas=2, model=1,
+                            devices=jax.devices()[:1], **_kw(True))
+    _run_fleet(fleet, serve_harness.pressure_requests())
+
+    ks = fleet.kv_stats()
+    assert ks["fleet"]["n_replicas"] == 2
+    assert len(ks["per_replica"]) == 2
+    for key in ("kv_bytes_allocated", "tokens_finished"):
+        assert ks["fleet"][key] == sum(p[key] for p in ks["per_replica"])
+        # same requests, no evictions -> same chains, same totals as the
+        # single engine (which replica rented the blocks cannot matter)
+        assert ks["fleet"][key] == oracle_eng.kv_stats()[key]
+    assert ks["fleet"]["n_blocks"] == 40        # 2 disjoint 20-block pools
+    assert ks["fleet"]["in_use"] == 0           # drained
+    assert ks["fleet"]["slot_pool"]["n_units"] == 2 * N_SLOTS
+    assert ks["fleet"]["slot_pool"]["created_total"] == \
+        sum(p_eng.pool.created_total for p_eng in fleet.engines)
+
+    occ = fleet.occupancy_stats()
+    # slot-tick weighted, not a mean of ratios
+    num = sum(p["slot_ticks"] for p in occ["per_replica"])
+    den = sum(p["ticks"] * p["n_slots"] for p in occ["per_replica"])
+    assert occ["fleet"]["occupancy"] == pytest.approx(num / den)
+
+    ss = fleet.sync_stats()
+    assert ss["fleet"]["host_syncs"] == \
+        sum(p["host_syncs"] for p in ss["per_replica"])
+    assert ss["fleet"]["sync_reduction_x"] > 1
+
+
+def test_engine_per_shard_kv_fields_unsharded():
+    """On one shard the per-shard view IS the global view — the fields
+    must agree exactly (the sharded case is covered by the mesh
+    conformance cells)."""
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch, reduced
+    from repro.models import model
+    from repro.runtime.serve import ServingEngine
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=1, d_model=64,
+                  vocab=128)
+    params = model.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    eng = ServingEngine(params, cfg, n_slots=2, max_seq=32,
+                        paged=True, block_size=8, n_blocks=12)
+    ks = eng.kv_stats()
+    assert ks["model_shards"] == 1
+    assert ks["kv_shard_fraction"] == 1.0
+    assert ks["block_bytes_per_shard"] > 0
+
+
+def test_fleet_of_tensor_parallel_replicas_token_exact(serve_setup,
+                                                       serve_harness):
+    """The full (data, model) grid: 2 replicas x 2-way tensor parallel,
+    still byte-identical to the single-device single-engine oracle."""
+    if jax.device_count() < 4:
+        pytest.skip("needs >= 4 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count)")
+    cfg, params = serve_setup
+    want, _ = _oracle(serve_setup, serve_harness, paged=True)
+    fleet = FleetSupervisor(params, cfg, n_replicas=2, model=2,
+                            **_kw(True))
+    got = _run_fleet(fleet, serve_harness.pressure_requests())
+    assert got == want
+    ks = fleet.kv_stats()
+    assert all(p["model_shards"] == 2 for p in ks["per_replica"])
+    assert all(p["kv_shard_fraction"] == 0.5 for p in ks["per_replica"])
+
+
+def test_fleet_insufficient_devices_for_model_parallel(serve_setup):
+    cfg, params = serve_setup
+    with pytest.raises(ValueError, match="devices"):
+        FleetSupervisor(params, cfg, n_replicas=max(
+            2, jax.device_count()), model=2, n_slots=2, max_seq=32)

@@ -1,0 +1,138 @@
+"""Property tests for the logical-axis binding (`ShardingRules.spec`).
+
+The binding is the compile-time half of the paper's metainstruction
+story, and it carries two safety invariants the rest of the stack leans
+on blindly:
+
+* **divisibility fallback** — a mesh-axis candidate that does not divide
+  the dimension is skipped (the dimension replicates); a spec must never
+  ask GSPMD for a non-divisible shard;
+* **no axis reuse** — one physical mesh axis appears at most once per
+  spec; reusing it (e.g. ``cache_kv_heads`` and ``cache_head_dim`` both
+  grabbing ``model``) is rejected by JAX at jit time, deep inside a
+  serving tick where the error is undiagnosable.
+
+Both are checked here over random mesh shapes x random logical-axis
+rows drawn from the real rule table — `spec` only reads ``mesh.shape``,
+so a duck-typed mesh keeps the property loop off the devices.
+"""
+from __future__ import annotations
+
+import types
+
+import pytest
+
+pytest.importorskip("hypothesis")   # real lib or the conftest fallback
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.runtime.sharding import (  # noqa: E402
+    DEFAULT_RULES, ShardingRules, fleet_submeshes, serve_mesh)
+
+AXIS_NAMES = sorted(DEFAULT_RULES)
+
+# mesh shapes the stack actually runs: serve meshes, train pods, odd sizes
+MESH_SHAPES = [
+    {"data": 1, "model": 1},
+    {"data": 1, "model": 2},
+    {"data": 2, "model": 2},
+    {"data": 2, "model": 4},
+    {"data": 8, "model": 1},
+    {"model": 3},
+    {"pod": 2, "data": 2, "model": 2},
+    {"pod": 3, "data": 2, "model": 4},
+]
+
+# dimension sizes with real divisibility texture (primes, powers of two,
+# the awkward head counts from the config registry: 36, 24, 12, 7)
+DIM_CHOICES = [1, 2, 3, 4, 6, 7, 8, 12, 16, 24, 30, 36, 64, 100]
+
+
+def fake_mesh(shape: dict):
+    """`spec` reads only ``mesh.shape`` — a namespace stands in for a
+    Mesh, so the property loop never touches devices."""
+    return types.SimpleNamespace(shape=dict(shape))
+
+
+def _axes_of(entry) -> tuple:
+    return entry if isinstance(entry, tuple) else (entry,)
+
+
+def _size(mesh_shape: dict, entry) -> int:
+    out = 1
+    for a in _axes_of(entry):
+        out *= mesh_shape[a]
+    return out
+
+
+@given(st.sampled_from(MESH_SHAPES),
+       st.lists(st.sampled_from(AXIS_NAMES + [None]),
+                min_size=1, max_size=5),
+       st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=200, deadline=None)
+def test_spec_divisibility_and_no_reuse(mesh_shape, axes, dim_seed):
+    dims = [DIM_CHOICES[(dim_seed + 7 * i) % len(DIM_CHOICES)]
+            for i in range(len(axes))]
+    rules = ShardingRules(fake_mesh(mesh_shape))
+    spec = rules.spec(axes, dims)
+    assert len(spec) == len(axes)
+    used = []
+    for name, entry, dim in zip(axes, spec, dims):
+        if name is None:
+            assert entry is None    # unnamed dims never shard
+        if entry is None:
+            continue
+        assert dim % _size(mesh_shape, entry) == 0, (axes, dims, spec)
+        used += list(_axes_of(entry))
+    assert len(used) == len(set(used)), (axes, dims, spec)
+
+
+@given(st.sampled_from(MESH_SHAPES),
+       st.lists(st.sampled_from(AXIS_NAMES + [None]),
+                min_size=1, max_size=5))
+@settings(max_examples=100, deadline=None)
+def test_spec_without_shape_never_reuses_axes(mesh_shape, axes):
+    """No `shape` means no divisibility guard — the reuse invariant must
+    hold on its own."""
+    spec = ShardingRules(fake_mesh(mesh_shape)).spec(axes)
+    used = [a for e in spec if e is not None for a in _axes_of(e)]
+    assert len(used) == len(set(used)), (axes, spec)
+
+
+def test_spec_priority_gives_model_to_kv_heads_not_head_dim():
+    """Regression for the paged-cache spec: ``cache_kv_heads`` and its
+    fallback ``cache_head_dim`` both list ``model``; the priority table
+    must hand it to the head axis and leave head_dim replicated — never
+    assign one mesh axis twice in one shape."""
+    rules = ShardingRules(fake_mesh({"data": 2, "model": 2}))
+    axes = ("layers", "cache_batch", None, "cache_kv_heads",
+            "cache_head_dim")
+    spec = rules.spec(axes, (2, 4, 64, 2, 32))
+    assert spec[3] == "model"
+    assert spec[4] is None
+    # ... and when the head count does NOT divide, the fallback axis
+    # inherits the mesh axis instead (whisper-style 12-head configs on
+    # an 8-way model axis would hit this with head_dim 64)
+    spec = rules.spec(axes, (2, 4, 64, 3, 32))
+    assert spec[3] is None
+    assert spec[4] == "model"
+    used = [a for e in spec if e is not None for a in _axes_of(e)]
+    assert len(used) == len(set(used))
+
+
+def test_serve_mesh_shape_and_insufficient_devices():
+    m = serve_mesh(1)
+    assert dict(m.shape) == {"data": 1, "model": 1}
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        serve_mesh(4096)
+
+
+def test_fleet_submeshes_split_rows():
+    import jax
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices (XLA_FLAGS host device count)")
+    m = serve_mesh(1, data=2)
+    subs = fleet_submeshes(m)
+    assert len(subs) == 2
+    assert all(dict(s.shape) == {"data": 1, "model": 1} for s in subs)
+    devs = [s.devices.reshape(-1)[0] for s in subs]
+    assert devs[0] != devs[1]
