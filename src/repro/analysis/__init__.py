@@ -1,0 +1,36 @@
+"""Static analysis over the serving runtime's compiled surface.
+
+EMPA's contract is that parallelization meta-information is *static*:
+the compiler proves properties ahead of time and the supervisor trusts
+them at run time (PAPER.md; the programming companion makes the
+ahead-of-time production of the meta-info explicit).  Seven PRs of this
+repo accumulated exactly such hand-maintained static properties —
+donation lists on every ``jax.jit`` tick, the one-sync-per-tick
+discipline, bounded pow2 compile buckets, a ``ref.py`` oracle per
+Pallas kernel — and PR 6 showed how silently one can rot.  This package
+is the tool that re-proves them on every push:
+
+* :mod:`repro.analysis.manifest` — the jit-site registry every tick
+  builder reports into (name, donated state args, static keys);
+* :mod:`repro.analysis.families` — enumerates every tick family the
+  repo can build (decode / chunked / solo / speculative / over-commit
+  resume, x contiguous/paged, x single-device/mesh) as lowerable specs;
+* :mod:`repro.analysis.donation` — every persistent-state input is
+  donated and actually aliased in the lowered module;
+* :mod:`repro.analysis.transfers` — no callback / host-transfer
+  primitive inside any tick jaxpr, plus a ``jax.transfer_guard``
+  harness over a live engine step;
+* :mod:`repro.analysis.retrace` — the static-argument key space per jit
+  site is finite and within its declared budget;
+* :mod:`repro.analysis.constants` — no large constants baked into a
+  tick jaxpr;
+* :mod:`repro.analysis.lint` — AST-level repo rules (no host syncs in
+  pure transition modules, oracle/test pairing per kernel package, no
+  Python branches on traced tick parameters);
+* :mod:`repro.analysis.audit` — the CLI gluing it together
+  (``python -m repro.analysis.audit --strict``), writing ``AUDIT.json``
+  and exiting nonzero on any violation.
+
+Import discipline: ``manifest`` must stay dependency-free — the runtime
+imports it at module load, so anything heavier would be a cycle.
+"""

@@ -1,0 +1,144 @@
+"""The tick auditor CLI: ``python -m repro.analysis.audit [--strict]``.
+
+Lowers every serve tick cell the repo can build (five families x two
+cache layouts, x mesh when >= 2 devices are visible) and runs the four
+jaxpr/executable analyses on each — donation coverage, host-transfer
+freedom, bounded retrace keys, constant hygiene — plus the AST lint
+rules and a live transfer-guard harness.  Writes ``AUDIT.json`` and
+exits nonzero on any violation (``--strict`` also fails warnings).
+
+This is the EMPA stance applied to our own runtime: the supervisor
+trusts *static* meta-information, so the properties the serving engine
+relies on are proven by a tool before execution, not carried in
+reviewers' heads.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional
+
+import jax
+
+from repro.analysis import constants as constants_lib
+from repro.analysis import donation as donation_lib
+from repro.analysis import lint as lint_lib
+from repro.analysis import manifest
+from repro.analysis import retrace as retrace_lib
+from repro.analysis import transfers as transfers_lib
+from repro.analysis.families import (BLOCK_SIZE, MAX_SEQ, N_SLOTS,
+                                     audit_config, build_tick_specs,
+                                     lower_spec)
+from repro.analysis.report import Report, info, summarize
+
+# satellite record: what the first audit run over the pre-audit tree
+# surfaced, and what changed.  Kept in the report so the before/after
+# does not live only in git archaeology.
+BEFORE_AFTER = (
+    "before: CorePool (core/supervisor.py) performed implicit "
+    "device->host syncs — int()/bool() on device arrays in "
+    "rent/release/set_phase/available — 16 implicit materializations "
+    "over a 2-step contiguous stream and 23 over the 5-step paged "
+    "overcommit stream, several per request retirement *inside* the "
+    "serving step (caught by the harness's TransferSpy; XLA's own "
+    "transfer guard is inert on the shared-memory CPU backend). "
+    "after: the ledger is host-resident (one explicit jax.device_get "
+    "per transition), queries are free host reads, and both harness "
+    "cells drive their full streams with zero implicit transfers."
+)
+
+
+def register_admit_sites() -> None:
+    """Admission jit sites register at engine construction; the audit
+    builds them directly so the manifest is complete without one."""
+    from repro.models.model import PagedLayout
+    from repro.runtime import serve as serve_lib
+    cfg, _ = audit_config()
+    serve_lib.build_admit_step(cfg, MAX_SEQ)
+    serve_lib.build_admit_step_paged(
+        cfg, MAX_SEQ, PagedLayout(block_size=BLOCK_SIZE,
+                                  n_blocks=N_SLOTS * MAX_SEQ // BLOCK_SIZE))
+
+
+def collect_key_spaces() -> dict:
+    """Reachable static-key spaces per jit site, both layouts."""
+    from repro.runtime import serve as serve_lib
+    spaces = {}
+    for layout_name, bs in (("contiguous", None), ("paged", BLOCK_SIZE)):
+        sp = serve_lib.retrace_key_spaces(
+            max_seq=MAX_SEQ, n_slots=N_SLOTS, block_size=bs)
+        for name, space in sp.items():
+            if name == "admit_step":
+                spaces[f"admit_step/{layout_name}"] = space
+            elif name.endswith("/" + layout_name):
+                spaces[name] = space
+    return spaces
+
+
+def run_audit(*, with_mesh: Optional[bool] = None, harness: bool = True,
+              const_threshold: int = constants_lib.DEFAULT_THRESHOLD_BYTES
+              ) -> Report:
+    report = Report()
+    cfg, shape = audit_config()
+    report.meta = {
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "config": {"arch": cfg.name, "n_slots": N_SLOTS,
+                   "max_seq": MAX_SEQ, "block_size": BLOCK_SIZE},
+        "before_after": BEFORE_AFTER,
+    }
+
+    specs = build_tick_specs(with_mesh=with_mesh)
+    register_admit_sites()
+    report.families = [s.to_json() for s in specs]
+    report.sites = [site.to_json()
+                    for _, site in sorted(manifest.sites().items())]
+
+    for spec in specs:
+        lowered = lower_spec(spec)
+        report.extend(donation_lib.audit_donation(spec, lowered))
+        report.extend(transfers_lib.audit_transfers(spec))
+        report.extend(constants_lib.audit_constants(
+            spec, threshold=const_threshold))
+
+    report.extend(retrace_lib.audit_retrace(
+        collect_key_spaces(), max_seq=MAX_SEQ, n_slots=N_SLOTS))
+    report.extend(lint_lib.lint_repo())
+
+    if harness:
+        report.extend(transfers_lib.run_transfer_harness())
+    else:
+        report.extend([info("transfers", "harness",
+                            "skipped (--no-harness)")])
+    return report
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        description="static audit over every lowered serve tick")
+    parser.add_argument("--strict", action="store_true",
+                        help="fail on warnings too")
+    parser.add_argument("--out", default="AUDIT.json",
+                        help="report path (default AUDIT.json)")
+    parser.add_argument("--no-harness", action="store_true",
+                        help="skip the live transfer-guard engine run")
+    parser.add_argument("--mesh", choices=("auto", "on", "off"),
+                        default="auto",
+                        help="mesh cells: auto = when >= 2 devices")
+    parser.add_argument("--const-threshold", type=int,
+                        default=constants_lib.DEFAULT_THRESHOLD_BYTES,
+                        help="constant-bloat threshold in bytes")
+    args = parser.parse_args(argv)
+
+    with_mesh = {"auto": None, "on": True, "off": False}[args.mesh]
+    report = run_audit(with_mesh=with_mesh, harness=not args.no_harness,
+                       const_threshold=args.const_threshold)
+    report.write(args.out)
+    print(summarize(report, strict=args.strict))
+    print(f"report written to {args.out}")
+    return 0 if report.ok(strict=args.strict) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,100 @@
+"""Donation coverage: every persistent-state buffer donated AND aliased.
+
+Two failure modes, both silent at run time:
+
+* **declared-but-unaliased** — an argnum is in ``donate_argnums`` but
+  XLA could not alias some of its leaves to outputs (a dtype/shape
+  drift between the state a tick takes and the state it returns), so
+  the "in-place" tick quietly double-buffers.  The lowered StableHLO
+  carries one ``tf.aliasing_output`` attribute per leaf that really
+  aliases; we count them against the donated leaf count.
+* **persistent-but-undonated** — the tick signature grew a new state
+  buffer (cache-sized, flowing input -> output) that nobody added to
+  ``donate_argnums``.  Detected structurally: a non-donated argnum
+  whose leaf (shape, dtype) multiset is contained in the outputs' and
+  whose byte size is within ``CANDIDATE_FRACTION`` of the largest
+  donated buffer is state by any reasonable reading — params (argnum 0)
+  are exempt (weights are shared across ticks, never donated).
+"""
+from __future__ import annotations
+
+import re
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.analysis.families import TickSpec, lower_spec
+from repro.analysis.report import Finding, info, violation
+
+ALIAS_ATTR = re.compile(r"tf\.aliasing_output")
+
+# an undonated input this fraction of the largest donated buffer (or
+# larger) that also round-trips to the outputs is persistent state
+CANDIDATE_FRACTION = 0.25
+
+
+def _leaves(tree):
+    return jax.tree_util.tree_leaves(tree)
+
+
+def _nbytes(leaf) -> int:
+    return int(np.prod(leaf.shape, dtype=np.int64)) * \
+        np.dtype(leaf.dtype).itemsize
+
+
+def _sig(tree):
+    """Leaf (shape, dtype) multiset of a pytree."""
+    sig = {}
+    for leaf in _leaves(tree):
+        key = (tuple(leaf.shape), np.dtype(leaf.dtype).str)
+        sig[key] = sig.get(key, 0) + 1
+    return sig
+
+
+def _contained(small: dict, big: dict) -> bool:
+    return all(big.get(k, 0) >= n for k, n in small.items())
+
+
+def audit_donation(spec: TickSpec, lowered=None) -> List[Finding]:
+    findings: List[Finding] = []
+
+    # -- aliasing: donated leaves must appear as tf.aliasing_output ------
+    donated_leaves = sum(len(_leaves(spec.abstract_args[i]))
+                         for i in spec.donate_argnums)
+    if lowered is None:
+        lowered = lower_spec(spec)
+    aliased = len(ALIAS_ATTR.findall(lowered.as_text()))
+    if aliased < donated_leaves:
+        findings.append(violation(
+            "donation", spec.name,
+            f"{donated_leaves - aliased} of {donated_leaves} donated "
+            f"leaves lowered without tf.aliasing_output — the donation "
+            f"is declared but XLA could not alias them (shape/dtype "
+            f"drift between state in and state out); the tick "
+            f"double-buffers"))
+    else:
+        findings.append(info(
+            "donation", spec.name,
+            f"all {donated_leaves} donated leaves aliased in the "
+            f"compiled output"))
+
+    # -- coverage: no large persistent input left undonated --------------
+    out_sig = _sig(jax.eval_shape(spec.step_fn, *spec.abstract_args))
+    donated_bytes = [sum(_nbytes(leaf) for leaf in
+                         _leaves(spec.abstract_args[i]))
+                     for i in spec.donate_argnums]
+    floor = CANDIDATE_FRACTION * max(donated_bytes) if donated_bytes else 0
+    for argnum, arg in enumerate(spec.abstract_args):
+        if argnum == 0 or argnum in spec.donate_argnums:
+            continue
+        arg_bytes = sum(_nbytes(leaf) for leaf in _leaves(arg))
+        if arg_bytes >= floor and floor > 0 and \
+                _contained(_sig(arg), out_sig):
+            findings.append(violation(
+                "donation", spec.name,
+                f"argnum {argnum} ({arg_bytes} bytes) flows input -> "
+                f"output like persistent state but is not in "
+                f"donate_argnums={spec.donate_argnums} — donate it or "
+                f"the tick copies it every call"))
+    return findings

@@ -1,0 +1,114 @@
+"""Enumerate every serve tick cell the repo can build, as lowerable specs.
+
+The audit matrix is {decode, chunked-prefill, solo-prefill, speculative,
+over-commit resume} x {contiguous, paged} x {single-device, mesh}: the
+five families come from ``ClusterSupervisor.plan_serve_families`` (one
+entry point, explicit shardings, donated caches), the layouts from the
+``paged`` kwarg, and the mesh axis from re-planning on a ``(1, 2)``
+serve grid when the process has >= 2 devices (CI's multidevice job
+forces 8 host devices, so the mesh cells run there).
+
+Each cell is a :class:`TickSpec` — exactly the fields the four analyses
+need, decoupled from the supervisor's ``Plan`` so the known-bad test
+fixtures can hand-build specs without a model."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class TickSpec:
+    """One auditable jit cell: a step function plus its compile contract."""
+
+    name: str                     # e.g. "speculative/paged/mesh2"
+    family: str                   # plan family name
+    layout: str                   # "contiguous" | "paged"
+    mesh_devices: int             # 1 for the single-device cells
+    step_fn: Any
+    abstract_args: Tuple
+    donate_argnums: Tuple[int, ...]
+    in_shardings: Optional[Tuple] = None
+    out_shardings: Optional[Any] = None
+
+    def to_json(self) -> dict:
+        return {"name": self.name, "family": self.family,
+                "layout": self.layout, "mesh_devices": self.mesh_devices,
+                "donate_argnums": list(self.donate_argnums)}
+
+
+# the audit's tiny-but-real engine shape: one layer of the granite
+# arch, the conformance matrix's serve geometry
+N_SLOTS = 4
+MAX_SEQ = 48
+BLOCK_SIZE = 8
+N_BLOCKS = 24
+FRAGMENT = 8
+SPEC_K = 3
+
+
+def audit_config():
+    """The reduced arch + serve shape every audit cell lowers with."""
+    from repro.configs import ShapeConfig, get_arch, reduced
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=1, d_model=64,
+                  vocab=128)
+    shape = ShapeConfig("audit_tiny", MAX_SEQ, N_SLOTS, "serve")
+    return cfg, shape
+
+
+def _paged_layout():
+    from repro.models.model import PagedLayout
+    return PagedLayout(block_size=BLOCK_SIZE, n_blocks=N_BLOCKS)
+
+
+def build_tick_specs(*, with_mesh: Optional[bool] = None) -> list:
+    """The full audit matrix.  ``with_mesh=None`` auto-detects: mesh
+    cells are added when the process has >= 2 devices."""
+    from jax.sharding import Mesh
+    from repro.runtime.sharding import serve_mesh
+    from repro.runtime.supervisor import ClusterSupervisor
+
+    cfg, shape = audit_config()
+    base_mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                     ("data", "model"))
+    sup = ClusterSupervisor(base_mesh, cfg, shape, dtype=jnp.float32)
+    if with_mesh is None:
+        with_mesh = jax.device_count() >= 2
+
+    meshes = [(1, None)]
+    if with_mesh:
+        meshes.append((2, serve_mesh(2)))
+
+    specs = []
+    for n_dev, mesh in meshes:
+        for layout_name, layout in (("contiguous", None),
+                                    ("paged", _paged_layout())):
+            plans = sup.plan_serve_families(
+                paged=layout, fragment=FRAGMENT, spec_k=SPEC_K, mesh=mesh)
+            for family, plan in plans.items():
+                suffix = f"/mesh{n_dev}" if n_dev > 1 else ""
+                specs.append(TickSpec(
+                    name=f"{family}/{layout_name}{suffix}",
+                    family=family, layout=layout_name, mesh_devices=n_dev,
+                    step_fn=plan.step_fn,
+                    abstract_args=tuple(plan.abstract_args),
+                    donate_argnums=tuple(plan.donate_argnums),
+                    in_shardings=tuple(plan.in_shardings),
+                    out_shardings=plan.out_shardings))
+    return specs
+
+
+def lower_spec(spec: TickSpec):
+    """Lower a cell exactly the way the fleet does (explicit shardings
+    and donation); returns the ``Lowered`` object the analyses walk."""
+    kw = {}
+    if spec.in_shardings is not None:
+        kw["in_shardings"] = spec.in_shardings
+    if spec.out_shardings is not None:
+        kw["out_shardings"] = spec.out_shardings
+    return jax.jit(spec.step_fn, donate_argnums=spec.donate_argnums,
+                   **kw).lower(*spec.abstract_args)

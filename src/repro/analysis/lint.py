@@ -1,0 +1,240 @@
+"""AST-level repo lint: the rules a reviewer used to enforce by memory.
+
+Three rules, all specific to this codebase's discipline:
+
+* **L1 host-sync-in-transition** — the pure transition modules
+  (``runtime/pool.py``, ``runtime/paging.py``, ``runtime/draft.py``)
+  run *inside* jitted device programs; a ``int()`` / ``float()`` /
+  ``bool()`` / ``.item()`` / ``np.asarray`` on a traced value there is
+  either a trace error waiting to happen or a hidden host sync.  Each
+  module's explicitly host-side helpers (invariant checkers, stats
+  mergers, the host admission seeding) are allowlisted by name.
+* **L2 kernel-oracle-pairing** — every ``kernels/<name>/`` package
+  ships ``kernel.py`` + ``ops.py`` + ``ref.py`` and is named in
+  ``repro.kernels.KERNEL_TESTS`` with an existing interpret-mode test
+  under ``tests/kernels/`` that actually references the package.
+* **L3 tracer-branch** — inside a tick builder (``serve.build_*``),
+  the nested step functions close over *traced* parameters; a Python
+  ``if``/``while`` on one is a silent trace-time constant fold (it
+  branches on the tracer, not the value).  Static uses — ``.shape`` /
+  ``.dtype`` / ``.ndim`` / ``.size`` attributes and ``is None``
+  identity checks — are fine.
+
+Every rule takes source text, so the known-bad fixtures in
+``tests/analysis`` feed synthetic modules straight in.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.report import Finding, info, violation
+
+# L1: functions in the transition modules that are host-side *by
+# design* — they take already-materialized state (invariant checking,
+# cross-engine stats merging) or host data (admission-time prompt
+# seeding), never traced values
+HOST_ALLOWLIST: Dict[str, Set[str]] = {
+    "pool.py": {"check_invariants", "merge_stats"},
+    "paging.py": {"check_invariants", "merge_block_stats"},
+    "draft.py": {"seed_slot"},
+}
+
+HOST_BUILTINS = {"int", "float", "bool"}
+STATIC_ATTRS = {"shape", "dtype", "ndim", "size"}
+
+
+def _host_call_label(node: ast.Call) -> Optional[str]:
+    """Name of the host-sync call this node performs, if any."""
+    fn = node.func
+    if isinstance(fn, ast.Name) and fn.id in HOST_BUILTINS:
+        return f"{fn.id}()"
+    if isinstance(fn, ast.Attribute):
+        if fn.attr == "item":
+            return ".item()"
+        if isinstance(fn.value, ast.Name):
+            if fn.value.id == "np" and fn.attr in {"asarray", "array"}:
+                return f"np.{fn.attr}()"
+            if fn.value.id == "jax" and fn.attr == "device_get":
+                return "jax.device_get()"
+    return None
+
+
+def lint_transition_source(src: str, module_name: str,
+                           allowlist: Optional[Set[str]] = None
+                           ) -> List[Finding]:
+    """L1 over one module's source.  ``module_name`` is the bare file
+    name (``pool.py``); the allowlist defaults to HOST_ALLOWLIST."""
+    if allowlist is None:
+        allowlist = HOST_ALLOWLIST.get(module_name, set())
+    tree = ast.parse(src)
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if node.name in allowlist:
+            continue
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                label = _host_call_label(sub)
+                if label:
+                    findings.append(violation(
+                        "lint/host-sync", f"{module_name}:{node.name}",
+                        f"{label} at line {sub.lineno} — a host sync "
+                        f"inside a pure transition module (allowlist "
+                        f"host-side helpers by name if intentional)"))
+    return findings
+
+
+def _traced_names(expr: ast.AST, params: Set[str]) -> Set[str]:
+    """Parameter names whose *value* (not a static attribute) the
+    expression depends on."""
+    bad: Set[str] = set()
+
+    def visit(node: ast.AST) -> None:
+        if isinstance(node, ast.Attribute) and node.attr in STATIC_ATTRS:
+            return                      # x.shape[...] etc — static
+        if isinstance(node, ast.Compare) and \
+                all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return                      # `x is None` — host identity
+        if isinstance(node, ast.Name) and node.id in params:
+            bad.add(node.id)
+            return
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    visit(expr)
+    return bad
+
+
+def lint_tick_builder_source(src: str, module_name: str = "serve.py"
+                             ) -> List[Finding]:
+    """L3 over one module's source: no Python ``if``/``while`` on a
+    traced parameter inside functions nested in a ``build_*`` builder
+    (the builder's own arguments — ``chunk``, ``jit``, ``paged`` — are
+    static config and branch freely)."""
+    tree = ast.parse(src)
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.FunctionDef)
+                and node.name.startswith("build_")):
+            continue
+        for inner in ast.walk(node):
+            if not isinstance(inner, ast.FunctionDef) or inner is node:
+                continue
+            params = {a.arg for a in
+                      inner.args.args + inner.args.kwonlyargs
+                      + inner.args.posonlyargs}
+            for stmt in ast.walk(inner):
+                if isinstance(stmt, (ast.If, ast.While)):
+                    bad = _traced_names(stmt.test, params)
+                    if bad:
+                        kind = "if" if isinstance(stmt, ast.If) \
+                            else "while"
+                        findings.append(violation(
+                            "lint/tracer-branch",
+                            f"{module_name}:{node.name}.{inner.name}",
+                            f"Python `{kind}` on traced parameter(s) "
+                            f"{sorted(bad)} at line {stmt.lineno} — "
+                            f"branches on the tracer, not the value "
+                            f"(use jnp.where / lax.cond)"))
+    return findings
+
+
+def _repo_root() -> str:
+    # src/repro/analysis/lint.py -> repo root is three dirs up from src
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def lint_kernel_manifest(root: Optional[str] = None) -> List[Finding]:
+    """L2: package tree <-> KERNEL_TESTS manifest <-> tests/kernels."""
+    from repro.kernels import KERNEL_TESTS
+    root = root or _repo_root()
+    kdir = os.path.join(root, "src", "repro", "kernels")
+    tdir = os.path.join(root, "tests", "kernels")
+    findings: List[Finding] = []
+    packages = sorted(
+        name for name in os.listdir(kdir)
+        if os.path.isfile(os.path.join(kdir, name, "kernel.py")))
+    for name in packages:
+        pkg = os.path.join(kdir, name)
+        for required in ("ref.py", "ops.py"):
+            if not os.path.isfile(os.path.join(pkg, required)):
+                findings.append(violation(
+                    "lint/kernel-oracle", f"kernels/{name}",
+                    f"missing {required} — every kernel package ships "
+                    f"a pure-jnp oracle and a jit'd wrapper"))
+        test_file = KERNEL_TESTS.get(name)
+        if test_file is None:
+            findings.append(violation(
+                "lint/kernel-oracle", f"kernels/{name}",
+                "not listed in repro.kernels.KERNEL_TESTS — no "
+                "interpret-mode test claims this kernel"))
+            continue
+        test_path = os.path.join(tdir, test_file)
+        if not os.path.isfile(test_path):
+            findings.append(violation(
+                "lint/kernel-oracle", f"kernels/{name}",
+                f"manifest names tests/kernels/{test_file}, which does "
+                f"not exist"))
+            continue
+        with open(test_path) as fh:
+            if name not in fh.read():
+                findings.append(violation(
+                    "lint/kernel-oracle", f"kernels/{name}",
+                    f"tests/kernels/{test_file} never references "
+                    f"'{name}' — the manifest pairing is dead"))
+    for name in sorted(set(KERNEL_TESTS) - set(packages)):
+        findings.append(violation(
+            "lint/kernel-oracle", f"kernels/{name}",
+            "listed in KERNEL_TESTS but no such package (stale manifest "
+            "entry)"))
+    if not findings:
+        findings.append(info(
+            "lint/kernel-oracle", "kernels",
+            f"{len(packages)} packages, each with ref.py + ops.py + a "
+            f"live interpret-mode test"))
+    return findings
+
+
+def lint_repo(root: Optional[str] = None) -> List[Finding]:
+    """All three rules over the working tree."""
+    root = root or _repo_root()
+    rdir = os.path.join(root, "src", "repro", "runtime")
+    findings: List[Finding] = []
+    for module_name in ("pool.py", "paging.py", "draft.py"):
+        with open(os.path.join(rdir, module_name)) as fh:
+            findings.extend(lint_transition_source(fh.read(), module_name))
+    with open(os.path.join(rdir, "serve.py")) as fh:
+        findings.extend(lint_tick_builder_source(fh.read(), "serve.py"))
+    findings.extend(lint_kernel_manifest(root))
+    if not any(f.severity == "violation" for f in findings):
+        findings.append(info("lint", "repo", "all lint rules clean"))
+    return findings
+
+
+def main(argv=None) -> int:
+    import argparse
+    parser = argparse.ArgumentParser(
+        description="repo AST lint (host-sync / kernel-oracle / "
+                    "tracer-branch rules)")
+    parser.add_argument("--root", default=None,
+                        help="repo root (default: derived from __file__)")
+    args = parser.parse_args(argv)
+    findings = lint_repo(args.root)
+    bad = 0
+    for f in findings:
+        if f.severity == "violation":
+            bad += 1
+            print(f"[violation] {f.analysis}: {f.subject}: {f.message}")
+        else:
+            print(f"[{f.severity}] {f.analysis}: {f.subject}: "
+                  f"{f.message}")
+    print(f"lint: {bad} violation(s)")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

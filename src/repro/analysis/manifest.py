@@ -1,0 +1,70 @@
+"""Jit-site registry: the auditor's static meta-information manifest.
+
+Every tick builder in ``runtime/serve.py`` finishes through one helper
+(``serve._register_jit_site``) that records a :class:`JitSite` here —
+the site's donation contract (which argnums carry persistent device
+state) and its static-shape keys (the values that force a recompile
+when they change).  The auditor cross-checks the registry against what
+actually lowered: a tick whose signature grew a new state buffer that
+nobody donated, or whose static key space silently became unbounded,
+fails the audit instead of shipping.
+
+This module must stay import-light (stdlib only): ``runtime/serve.py``
+imports it at module load, so pulling jax or the analysis passes in
+here would create a cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class JitSite:
+    """One ``jax.jit`` call site in the serving runtime.
+
+    ``state_args`` maps donated argnum -> the name of the persistent
+    device buffer it carries (``cache`` / ``bstate`` / ``dstate``);
+    ``static_keys`` are the (name, value) pairs baked into this build's
+    compiled shape — the retrace audit enumerates their reachable
+    space.
+    """
+
+    name: str                       # e.g. "decode_chunk/paged"
+    family: str                     # builder family, e.g. "decode_chunk"
+    layout: str                     # "contiguous" | "paged"
+    donate_argnums: Tuple[int, ...]
+    state_args: Dict[int, str]
+    static_keys: Tuple[Tuple[str, object], ...] = ()
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "family": self.family,
+            "layout": self.layout,
+            "donate_argnums": list(self.donate_argnums),
+            "state_args": {str(k): v for k, v in self.state_args.items()},
+            "static_keys": [[k, v] for k, v in self.static_keys],
+        }
+
+
+_REGISTRY: Dict[str, JitSite] = {}
+
+
+def register_site(site: JitSite) -> None:
+    """Record (or refresh) a jit site.  Builders run many times per
+    process with different static keys; latest build wins — the auditor
+    builds its family matrix immediately before reading the registry."""
+    _REGISTRY[site.name] = site
+
+
+def sites() -> Dict[str, JitSite]:
+    return dict(_REGISTRY)
+
+
+def get(name: str) -> JitSite:
+    return _REGISTRY[name]
+
+
+def clear() -> None:
+    _REGISTRY.clear()

@@ -1,0 +1,87 @@
+"""Findings and the machine-readable audit report (``AUDIT.json``)."""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class Finding:
+    """One audit result.  ``severity`` is ``"violation"`` (always fails
+    the run), ``"warning"`` (fails under ``--strict``) or ``"info"``
+    (recorded, never fails — the before/after notes live here)."""
+
+    analysis: str               # donation | transfers | retrace | ...
+    subject: str                # family/site/module the finding is about
+    severity: str               # violation | warning | info
+    message: str
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def violation(analysis: str, subject: str, message: str) -> Finding:
+    return Finding(analysis, subject, "violation", message)
+
+
+def warning(analysis: str, subject: str, message: str) -> Finding:
+    return Finding(analysis, subject, "warning", message)
+
+
+def info(analysis: str, subject: str, message: str) -> Finding:
+    return Finding(analysis, subject, "info", message)
+
+
+@dataclasses.dataclass
+class Report:
+    """The full audit run: per-family analysis results plus repo lint."""
+
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    families: List[dict] = dataclasses.field(default_factory=list)
+    sites: List[dict] = dataclasses.field(default_factory=list)
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def extend(self, findings) -> None:
+        self.findings.extend(findings)
+
+    def violations(self, strict: bool = False) -> List[Finding]:
+        bad = {"violation", "warning"} if strict else {"violation"}
+        return [f for f in self.findings if f.severity in bad]
+
+    def ok(self, strict: bool = False) -> bool:
+        return not self.violations(strict)
+
+    def to_json(self) -> dict:
+        counts = {"violation": 0, "warning": 0, "info": 0}
+        for f in self.findings:
+            counts[f.severity] = counts.get(f.severity, 0) + 1
+        return {
+            "version": 1,
+            "meta": self.meta,
+            "counts": counts,
+            "clean": counts["violation"] == 0,
+            "families": self.families,
+            "jit_sites": self.sites,
+            "findings": [f.to_json() for f in self.findings],
+        }
+
+    def write(self, path: str) -> None:
+        with open(path, "w") as fh:
+            json.dump(self.to_json(), fh, indent=2, sort_keys=False)
+            fh.write("\n")
+
+
+def summarize(report: Report, strict: bool = False) -> str:
+    lines = []
+    for f in report.findings:
+        if f.severity == "info":
+            continue
+        lines.append(f"[{f.severity}] {f.analysis}: {f.subject}: "
+                     f"{f.message}")
+    n_bad = len(report.violations(strict))
+    verdict = "CLEAN" if n_bad == 0 else f"{n_bad} FAILURE(S)"
+    lines.append(f"audit: {len(report.families)} tick cells, "
+                 f"{len(report.sites)} jit sites, "
+                 f"{len(report.findings)} findings -> {verdict}")
+    return "\n".join(lines)

@@ -1,0 +1,79 @@
+"""Retrace-key audit: every jit site's static key space is small and finite.
+
+A jit site recompiles once per distinct static key (fragment width,
+spec width, pow2 span/group bucket).  The repo's discipline is that
+every such space is *bounded by construction* — PR 6's perf diagnosis
+found the one that wasn't (``seed_slot`` keyed on raw prompt length,
+one retrace per distinct length) and it silently erased the
+speculation win.  This audit enumerates each site's reachable key
+space by *evaluating the actual bucketing code* over the full input
+range (``serve.retrace_key_spaces`` brute-forces ``_pow2_bucket`` over
+every admissible length — a hand-kept list could rot exactly like the
+donation lists this package exists to check) and fails if any space is
+unbounded (``None``) or exceeds its declared budget.
+
+Budgets: ``log2`` bucketing means the admission space is
+``(log2(max_seq)+1) * (log2(n_slots)+1)`` keys; every tick family is a
+singleton (its keys are fixed at engine construction).  A site may
+declare a larger budget in ``BUDGETS``; anything undeclared gets
+``DEFAULT_BUDGET``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.analysis.report import Finding, info, violation
+
+DEFAULT_BUDGET = 8          # singleton tick families, with headroom
+
+# per-site-family overrides; admission compiles one variant per
+# (span bucket, group bucket) pair
+BUDGETS: Dict[str, int] = {}
+
+
+def admission_budget(max_seq: int, n_slots: int) -> int:
+    return (max_seq.bit_length() + 1) * (n_slots.bit_length() + 1)
+
+
+def audit_retrace(spaces: Dict[str, Optional[list]], *,
+                  max_seq: int, n_slots: int,
+                  budgets: Optional[Dict[str, int]] = None) -> List[Finding]:
+    """``spaces`` maps site name -> list of reachable static keys, or
+    ``None`` for a site whose key space could not be bounded (always a
+    violation — an unbounded site compiles per request)."""
+    budgets = dict(BUDGETS, **(budgets or {}))
+    findings: List[Finding] = []
+    for name in sorted(spaces):
+        space = spaces[name]
+        budget = budgets.get(
+            name, admission_budget(max_seq, n_slots)
+            if name.startswith("admit_step") else DEFAULT_BUDGET)
+        if space is None:
+            findings.append(violation(
+                "retrace", name,
+                "static key space is unbounded — the site recompiles "
+                "per distinct runtime value (the seed_slot failure "
+                "mode)"))
+        elif len(space) > budget:
+            findings.append(violation(
+                "retrace", name,
+                f"{len(space)} reachable static keys exceed the "
+                f"declared budget of {budget} — bucketing has rotted "
+                f"(raw lengths reaching a jit boundary?)"))
+        else:
+            findings.append(info(
+                "retrace", name,
+                f"{len(space)} reachable static key(s) within budget "
+                f"{budget}"))
+    return findings
+
+
+def serve_key_spaces(*, max_seq: int, n_slots: int,
+                     block_size: Optional[int] = None,
+                     offset: int = 0) -> Dict[str, list]:
+    """The serving runtime's actual key spaces (after the tick builders
+    have registered their sites — call via the families enumeration)."""
+    from repro.runtime import serve as serve_lib
+    return serve_lib.retrace_key_spaces(
+        max_seq=max_seq, n_slots=n_slots, block_size=block_size,
+        offset=offset)

@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -34,25 +35,37 @@ from repro.runtime.pool import SlotPoolState
 class CorePool:
     """Host wrapper over the jittable EMPA pool transitions.
 
-    Thin by construction: every method is one `runtime.pool` transition
-    plus host-side error raising — the device-resident serving supervisor
-    and this host pool can never drift apart.
+    Thin by construction: every transition is one `runtime.pool` step
+    plus host-side error raising — the device-resident serving
+    supervisor and this host pool can never drift apart.
+
+    The ledger itself lives on the host: each transition's result is
+    pulled back with one *explicit* ``jax.device_get``, so ``state``
+    holds numpy leaves and every query (``available`` inside the
+    admission loop, ``phase_of`` / the rented check in ``set_phase``)
+    is a free host read instead of an implicit device->host sync.  The
+    static auditor's transfer harness runs engine ticks under
+    ``jax.transfer_guard_device_to_host("disallow")``, which lets these
+    explicit ledger pulls through and catches any implicit ``int()`` /
+    ``bool()`` on a device array creeping back in — the pre-audit
+    wrapper performed one such hidden sync per rent/release/set_phase
+    call, several per retirement inside the serving tick.
     """
 
     n: int
     state: SlotPoolState = dataclasses.field(init=False)
 
     def __post_init__(self):
-        self.state = pool_lib.init_pool(self.n)
+        self.state = jax.device_get(pool_lib.init_pool(self.n))
 
-    # -- queries ----------------------------------------------------------
+    # -- queries (host reads over the numpy mirror) -------------------------
     @property
     def available(self) -> int:
-        return int(pool_lib.available(self.state))
+        return int(np.sum(self.state.free & ~self.state.disabled))
 
     @property
     def used(self) -> int:
-        return int(pool_lib.used(self.state))
+        return int(np.sum(~self.state.free))
 
     @property
     def created_total(self) -> int:
@@ -63,7 +76,7 @@ class CorePool:
         return int(self.state.peak_used)
 
     def children_of(self, unit: int) -> list[int]:
-        mask = np.asarray(pool_lib.children_mask(self.state, unit))
+        mask = (self.state.parent == unit) & ~self.state.free
         return [int(i) for i in np.flatnonzero(mask)]
 
     def parent_of(self, unit: int) -> int:
@@ -91,29 +104,31 @@ class CorePool:
         """Rent the first available unit; administer parent/child masks."""
         if parent is not None:
             self._check_unit(parent)
-        self.state, unit = pool_lib.rent(
+        state, unit = pool_lib.rent(
             self.state, pool_lib.NO_PARENT if parent is None else parent,
             prefer_preallocated=prefer_preallocated)
+        self.state, unit = jax.device_get((state, unit))
         unit = int(unit)
         return None if unit < 0 else unit
 
     def rent_many(self, k: int) -> list[int]:
         """Rent up to `k` units in one vectorized transition (same grant
         order as `k` sequential rents).  Returns the granted unit ids."""
-        self.state, units = pool_lib.rent_many(
-            self.state, jnp.ones((k,), bool))
-        return [int(u) for u in np.asarray(units) if int(u) >= 0]
+        state, units = pool_lib.rent_many(self.state, jnp.ones((k,), bool))
+        self.state, units = jax.device_get((state, units))
+        return [int(u) for u in units if int(u) >= 0]
 
     def preallocate(self, parent: int, k: int) -> list[int]:
         """Mark k free units as preallocated for `parent` (§5.1: guarantees
         a core is always available for the iterations)."""
         self._check_unit(parent)
-        self.state, granted = pool_lib.preallocate(self.state, parent, k)
-        return [int(i) for i in np.flatnonzero(np.asarray(granted))]
+        state, granted = pool_lib.preallocate(self.state, parent, k)
+        self.state, granted = jax.device_get((state, granted))
+        return [int(i) for i in np.flatnonzero(granted)]
 
     def release(self, unit: int) -> None:
         """Terminate the QT on `unit`: clear masks, return to pool (§4.3)."""
-        new_state, status = pool_lib.release(self.state, unit)
+        new_state, status = jax.device_get(pool_lib.release(self.state, unit))
         status = int(status)
         if status == pool_lib.ERR_NOT_RENTED:
             raise ValueError(f"unit {unit} is not rented")
@@ -132,16 +147,17 @@ class CorePool:
         self._check_unit(unit)
         if bool(self.state.free[unit]):
             raise ValueError(f"unit {unit} is not rented")
-        self.state = pool_lib.set_phase(self.state, unit, phase)
+        self.state = jax.device_get(
+            pool_lib.set_phase(self.state, unit, phase))
 
     def disable(self, unit: int) -> None:
         """A unit becomes unavailable ('overheating' / failed host)."""
         self._check_unit(unit)
-        self.state = pool_lib.disable(self.state, unit)
+        self.state = jax.device_get(pool_lib.disable(self.state, unit))
 
     def enable(self, unit: int) -> None:
         self._check_unit(unit)
-        self.state = pool_lib.enable(self.state, unit)
+        self.state = jax.device_get(pool_lib.enable(self.state, unit))
 
     # -- invariants (property-tested) --------------------------------------
     def check_invariants(self) -> None:

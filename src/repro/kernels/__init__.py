@@ -13,3 +13,19 @@
 #   paged_attention — SUMUP decode attention over the paged KV cache:
 #                     scalar-prefetched block tables aim each KV DMA at
 #                     the supervisor-rented physical block
+#   chunk_attention — span-clamped fragment attention for the serving
+#                     tick (contiguous and paged variants)
+
+# Oracle/test pairing manifest: every kernel package must name the
+# interpret-mode test file (under tests/kernels/) that asserts it
+# allclose against its ref.py.  `python -m repro.analysis.lint`
+# cross-checks this map against the package tree — an unlisted package,
+# a missing ref.py, or a dead test path fails CI.
+KERNEL_TESTS = {
+    "sumup": "test_kernels.py",
+    "massmap": "test_kernels.py",
+    "flash_attention": "test_kernels.py",
+    "ssd_scan": "test_kernels.py",
+    "paged_attention": "test_paged_attention.py",
+    "chunk_attention": "test_chunk_attention.py",
+}

@@ -119,6 +119,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.analysis import manifest as audit_manifest
 from repro.configs.base import ArchConfig
 from repro.core.supervisor import CorePool
 from repro.models import model as model_lib
@@ -150,6 +151,34 @@ def build_decode_step(cfg: ArchConfig,
         with use_rules(rules):
             return model_lib.decode_step(params, token, cache, cfg)
     return decode_step
+
+
+def _register_jit_site(fn, *, family: str, jit: bool,
+                       paged: Optional[PagedLayout],
+                       donate_state: dict, static_keys=()):
+    """Single finishing step for every tick builder: register the site
+    with the static auditor's manifest, then jit with the donation list.
+
+    The contiguous/paged wrapper pairs that used to close each builder
+    (``if not jit: return fn`` / ``return jax.jit(fn, donate_argnums=
+    ...)``) collapse here: the two variants differ only in which
+    argnums carry donated persistent state, and that mapping
+    (``donate_state``: argnum -> buffer name) is exactly the meta-info
+    ``python -m repro.analysis.audit`` needs to prove donation coverage
+    and enumerate the retrace-key space — so declaring it IS publishing
+    it.  Registration happens even for ``jit=False`` builds (the
+    cluster supervisor re-jits with explicit shardings but the donation
+    contract is the same).
+    """
+    layout = "contiguous" if paged is None else "paged"
+    donate = tuple(sorted(donate_state))
+    audit_manifest.register_site(audit_manifest.JitSite(
+        name=f"{family}/{layout}", family=family, layout=layout,
+        donate_argnums=donate, state_args=dict(donate_state),
+        static_keys=tuple(static_keys)))
+    if not jit:
+        return fn
+    return jax.jit(fn, donate_argnums=donate)
 
 
 # ---------------------------------------------------------------------------
@@ -256,9 +285,9 @@ def build_decode_chunk(cfg: ArchConfig, *, chunk: int, eos_id: int,
                 cond, body, (jnp.int32(0), state, cache, emitted0))
             return state, cache, emitted, iters
 
-        if not jit:    # the cluster supervisor jits with explicit shardings
-            return chunk_fn
-        return jax.jit(chunk_fn, donate_argnums=(2,))
+        return _register_jit_site(
+            chunk_fn, family="decode_chunk", jit=jit, paged=paged,
+            donate_state={2: "cache"}, static_keys=(("chunk", chunk),))
 
     def chunk_fn_paged(params, state: DecodeState, cache, bstate):
         n = state.tokens.shape[0]
@@ -287,9 +316,10 @@ def build_decode_chunk(cfg: ArchConfig, *, chunk: int, eos_id: int,
             (jnp.int32(0), state, cache, bstate, emitted0, jnp.int32(0)))
         return state, cache, bstate, emitted, iters, stalls
 
-    if not jit:
-        return chunk_fn_paged
-    return jax.jit(chunk_fn_paged, donate_argnums=(2, 3))
+    return _register_jit_site(
+        chunk_fn_paged, family="decode_chunk", jit=jit, paged=paged,
+        donate_state={2: "cache", 3: "bstate"},
+        static_keys=(("chunk", chunk),))
 
 
 def build_mixed_tick(cfg: ArchConfig, *, chunk_tokens: int, eos_id: int,
@@ -364,9 +394,10 @@ def build_mixed_tick(cfg: ArchConfig, *, chunk_tokens: int, eos_id: int,
             return run(params, state, cache, state.active, frag_tokens,
                        frag_len, frag_last, frag_max_new, frag_skip)
 
-        if not jit:
-            return tick
-        return jax.jit(tick, donate_argnums=(2,))
+        return _register_jit_site(
+            tick, family="mixed_tick", jit=jit, paged=paged,
+            donate_state={2: "cache"},
+            static_keys=(("chunk_tokens", chunk_tokens),))
 
     def tick_paged(params, state: DecodeState, cache, bstate, frag_tokens,
                    frag_len, frag_last, frag_max_new, frag_skip, frag_cols,
@@ -387,9 +418,10 @@ def build_mixed_tick(cfg: ArchConfig, *, chunk_tokens: int, eos_id: int,
                                     frag_max_new, frag_skip)
         return state, cache, bstate, emitted, stalls
 
-    if not jit:
-        return tick_paged
-    return jax.jit(tick_paged, donate_argnums=(2, 3))
+    return _register_jit_site(
+        tick_paged, family="mixed_tick", jit=jit, paged=paged,
+        donate_state={2: "cache", 3: "bstate"},
+        static_keys=(("chunk_tokens", chunk_tokens),))
 
 
 def build_spec_tick(cfg: ArchConfig, *, spec_k: int, chunk_tokens: int,
@@ -447,9 +479,10 @@ def build_spec_tick(cfg: ArchConfig, *, spec_k: int, chunk_tokens: int,
                        dlen, frag_tokens, frag_len, frag_last, frag_max_new,
                        frag_skip)[:6]
 
-        if not jit:
-            return tick
-        return jax.jit(tick, donate_argnums=(2, 3))
+        return _register_jit_site(
+            tick, family="spec_tick", jit=jit, paged=paged,
+            donate_state={2: "dstate", 3: "cache"},
+            static_keys=(("spec_k", spec_k), ("chunk_tokens", W)))
 
     def tick_paged(params, state: DecodeState, dstate, cache, bstate,
                    frag_tokens, frag_len, frag_last, frag_max_new,
@@ -474,9 +507,10 @@ def build_spec_tick(cfg: ArchConfig, *, spec_k: int, chunk_tokens: int,
         return state, dstate, cache, bstate, emitted, drafted, accepted, \
             stalls
 
-    if not jit:
-        return tick_paged
-    return jax.jit(tick_paged, donate_argnums=(2, 3, 4))
+    return _register_jit_site(
+        tick_paged, family="spec_tick", jit=jit, paged=paged,
+        donate_state={2: "dstate", 3: "cache", 4: "bstate"},
+        static_keys=(("spec_k", spec_k), ("chunk_tokens", W)))
 
 
 def _spec_core(cfg: ArchConfig, *, spec_k: int, width: int, eos_id: int,
@@ -651,9 +685,10 @@ def build_spec_chunk(cfg: ArchConfig, *, spec_k: int, eos_id: int,
             return (state, dstate, cache, emitted, fwd, slot_fwd, drafted,
                     accepted)
 
-        if not jit:
-            return chunk_fn
-        return jax.jit(chunk_fn, donate_argnums=(2, 3))
+        return _register_jit_site(
+            chunk_fn, family="spec_chunk", jit=jit, paged=paged,
+            donate_state={2: "dstate", 3: "cache"},
+            static_keys=(("spec_k", spec_k), ("iters", iters)))
 
     def chunk_fn_paged(params, state: DecodeState, dstate, cache, bstate):
         n = state.tokens.shape[0]
@@ -691,9 +726,10 @@ def build_spec_chunk(cfg: ArchConfig, *, spec_k: int, eos_id: int,
         return (state, dstate, cache, bstate, emitted, fwd, slot_fwd,
                 drafted, accepted, stalls)
 
-    if not jit:
-        return chunk_fn_paged
-    return jax.jit(chunk_fn_paged, donate_argnums=(2, 3, 4))
+    return _register_jit_site(
+        chunk_fn_paged, family="spec_chunk", jit=jit, paged=paged,
+        donate_state={2: "dstate", 3: "cache", 4: "bstate"},
+        static_keys=(("spec_k", spec_k), ("iters", iters)))
 
 
 def build_solo_prefill_tick(cfg: ArchConfig, *, chunk_tokens: int,
@@ -759,9 +795,10 @@ def build_solo_prefill_tick(cfg: ArchConfig, *, chunk_tokens: int,
                                     frag_last, frag_max_new)
             return state, cache, emitted
 
-        if not jit:
-            return tick
-        return jax.jit(tick, donate_argnums=(2,))
+        return _register_jit_site(
+            tick, family="solo_prefill", jit=jit, paged=paged,
+            donate_state={2: "cache"},
+            static_keys=(("chunk_tokens", W),))
 
     def tick_paged(params, state: DecodeState, cache, bstate, slot,
                    frag_tokens, frag_len, frag_last, frag_max_new,
@@ -787,9 +824,10 @@ def build_solo_prefill_tick(cfg: ArchConfig, *, chunk_tokens: int,
                                 frag_max_new)
         return state, cache, bstate, emitted
 
-    if not jit:
-        return tick_paged
-    return jax.jit(tick_paged, donate_argnums=(2, 3))
+    return _register_jit_site(
+        tick_paged, family="solo_prefill", jit=jit, paged=paged,
+        donate_state={2: "cache", 3: "bstate"},
+        static_keys=(("chunk_tokens", W),))
 
 
 def build_admit_step(cfg: ArchConfig, max_seq: int,
@@ -821,7 +859,9 @@ def build_admit_step(cfg: ArchConfig, max_seq: int,
         first = first.at[slots].set(ftok, mode="drop")
         return state, cache, first
 
-    return jax.jit(admit_fn, donate_argnums=(6,))
+    return _register_jit_site(
+        admit_fn, family="admit_step", jit=True, paged=None,
+        donate_state={6: "cache"}, static_keys=(("max_seq", max_seq),))
 
 
 def _group_prefill(params, tokens, lengths, cfg, span, rules):
@@ -892,7 +932,11 @@ def build_admit_step_paged(cfg: ArchConfig, max_seq: int,
         first = first.at[slots].set(ftok, mode="drop")
         return state, cache, bstate, first
 
-    return jax.jit(admit_fn, donate_argnums=(8, 9))
+    return _register_jit_site(
+        admit_fn, family="admit_step", jit=True, paged=layout,
+        donate_state={8: "cache", 9: "bstate"},
+        static_keys=(("max_seq", max_seq),
+                     ("block_size", layout.block_size)))
 
 
 # ---------------------------------------------------------------------------
@@ -919,6 +963,59 @@ def _pow2_bucket(n: int, cap: int) -> int:
     while b < n:
         b <<= 1
     return min(b, cap)
+
+
+def admit_span_buckets(max_seq: int, *, block_size: Optional[int] = None,
+                       offset: int = 0, packed: bool = True,
+                       _bucket: Callable[[int, int], int] = None) -> list:
+    """Reachable compiled *span* buckets of the packed admission prefill.
+
+    Derived by evaluating the engine's actual bucketing over every
+    admissible prompt length — not a parallel hand-kept list, so if the
+    bucketing in :meth:`ServingEngine._prefill_group` rots (PR 6's
+    ``seed_slot`` lesson: a raw length reaching a jit boundary compiles
+    once per distinct length), the enumerated space explodes and the
+    retrace audit fails instead of the fleet silently recompiling.
+    ``_bucket`` exists for the auditor's known-bad fixtures."""
+    bucket = _bucket or _pow2_bucket
+    spans = set()
+    for maxlen in range(1, max_seq + 1):
+        span = bucket(maxlen, max_seq) if packed else maxlen
+        if block_size is not None:
+            span += (-(span + offset)) % block_size
+        spans.add(span)
+    return sorted(spans)
+
+
+def admit_group_buckets(n_slots: int, *, packed: bool = True,
+                        _bucket: Callable[[int, int], int] = None) -> list:
+    """Reachable compiled group-row buckets (same derivation rule)."""
+    bucket = _bucket or _pow2_bucket
+    return sorted({bucket(g, n_slots) if packed else g
+                   for g in range(1, n_slots + 1)})
+
+
+def retrace_key_spaces(*, max_seq: int, n_slots: int,
+                       block_size: Optional[int] = None, offset: int = 0,
+                       packed: bool = True) -> dict:
+    """Static-argument key space per jit-site family, for the retrace
+    audit: family name -> list of reachable static keys (one compile
+    each), or ``None`` for an unbounded site (always a violation).
+
+    The admission site is the only one whose key space depends on
+    runtime data (prompt length, group size); every tick family's keys
+    are fixed at engine construction and published through the
+    manifest's ``static_keys``, so their space is the singleton the
+    manifest already records."""
+    spans = admit_span_buckets(max_seq, block_size=block_size,
+                               offset=offset, packed=packed)
+    gpads = admit_group_buckets(n_slots, packed=packed)
+    spaces = {"admit_step": [(s, g) for s in spans for g in gpads]}
+    for name, site in audit_manifest.sites().items():
+        if site.family == "admit_step":
+            continue
+        spaces[name] = [site.static_keys]
+    return spaces
 
 
 @dataclasses.dataclass
@@ -997,7 +1094,8 @@ class ServingEngine:
                  max_prefill_tokens_per_tick: Optional[int] = None,
                  speculative: bool = False, spec_k: int = 4,
                  spec_hist: int = 64,
-                 overcommit: bool = False):
+                 overcommit: bool = False,
+                 debug_transfers: bool = False):
         # tensor-parallel tick: with a (data, model) mesh the engine
         # shards attention heads / KV along "model" per the logical-axis
         # rules (divisibility fallback included) and places params, cache
@@ -1011,6 +1109,7 @@ class ServingEngine:
             rules = ShardingRules(mesh)
         self.mesh, self.rules = mesh, rules
         self.params, self.cfg = params, cfg
+        self.debug_transfers = debug_transfers
         self.max_seq, self.eos_id, self.chunk = max_seq, eos_id, chunk
         self.pool = CorePool(n_slots)
         self.active: dict[int, Request] = {}
@@ -1839,6 +1938,22 @@ class ServingEngine:
 
     # -- one decode chunk over all active slots -----------------------------
     def step(self) -> list[Request]:
+        """Advance every active slot up to `chunk` tokens; one host sync.
+
+        With ``debug_transfers=True`` the whole tick runs under
+        ``jax.transfer_guard_device_to_host("disallow")``: the budgeted
+        per-tick sync is an *explicit* ``jax.device_get`` (as is every
+        pool-ledger read), so it passes, while any stray implicit
+        device->host transfer smuggled into the serving path — an
+        ``int()``/``bool()``/``np.asarray`` on a device array — raises
+        instead of silently serializing the dispatch stream.  The
+        static auditor's transfer harness runs engines in this mode."""
+        if not self.debug_transfers:
+            return self._step()
+        with jax.transfer_guard_device_to_host("disallow"):
+            return self._step()
+
+    def _step(self) -> list[Request]:
         """Advance every active slot up to `chunk` tokens; one host sync.
 
         With chunked prefill, while any slot is still consuming prompt

@@ -255,6 +255,27 @@ class ClusterSupervisor:
             donate_argnums=donate,
             rules=self.rules, qt_graph=self.qt_graph(), notes=self._notes())
 
+    def plan_serve_families(self, *, paged: Optional[model_lib.PagedLayout]
+                            = None, chunk: int = 8, fragment: int = 8,
+                            spec_k: int = 3, eos_id: int = 1,
+                            mesh: Optional[Mesh] = None) -> dict:
+        """Every serve tick family the repo can build, keyed by name —
+        the static auditor's enumeration hook (`repro.analysis.families`
+        turns these into lowerable specs and proves donation coverage,
+        transfer freedom, bounded retrace keys and constant hygiene on
+        each).  The chunked-prefill and over-commit families lower the
+        same device step; they are listed separately because their
+        donation contracts must hold under *both* host policies and the
+        audit report names them the way the engines do."""
+        kw = dict(paged=paged, eos_id=eos_id, mesh=mesh)
+        return {
+            "decode": self.plan_serve(chunk=chunk, **kw),
+            "chunked_prefill": self.plan_serve(chunked=fragment, **kw),
+            "solo_prefill": self.plan_serve(solo_prefill=fragment, **kw),
+            "speculative": self.plan_serve(speculative=spec_k, **kw),
+            "overcommit_resume": self.plan_serve(overcommit=fragment, **kw),
+        }
+
     def _plan_serve_mixed(self, *, chunk_tokens: int, eos_id: int,
                           paged: Optional[model_lib.PagedLayout]
                           ) -> Plan:

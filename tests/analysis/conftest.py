@@ -1,0 +1,25 @@
+"""Fixture helpers for the auditor's own tests.
+
+The known-bad specs here are hand-built :class:`TickSpec` objects — no
+model, no supervisor — exercising exactly the failure mode each
+analysis exists to catch.  The clean-tree tests then run the same
+analyses over the real serve plans and assert silence.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.analysis.families import TickSpec
+
+
+@pytest.fixture
+def make_spec():
+    """Hand-build a minimal auditable spec around a step function."""
+    def _make(step_fn, abstract_args, donate_argnums=(),
+              name="fixture/contiguous"):
+        return TickSpec(
+            name=name, family="fixture", layout="contiguous",
+            mesh_devices=1, step_fn=step_fn,
+            abstract_args=tuple(abstract_args),
+            donate_argnums=tuple(donate_argnums))
+    return _make

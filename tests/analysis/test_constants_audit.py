@@ -1,0 +1,75 @@
+"""Constant-bloat audit: trace-time closures over big arrays fire."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.constants import audit_constants
+
+F32 = jnp.float32
+BIG = np.ones((64, 1024), np.float32)        # 256 KiB > 64 KiB threshold
+
+
+def _violations(findings):
+    return [f for f in findings if f.severity == "violation"]
+
+
+def test_big_closure_constant_fires(make_spec):
+    def step(params, tok, cache):
+        return tok + 1, cache + jnp.asarray(BIG)
+
+    spec = make_spec(
+        step,
+        (jax.ShapeDtypeStruct((8,), F32),
+         jax.ShapeDtypeStruct((4,), jnp.int32),
+         jax.ShapeDtypeStruct((64, 1024), F32)))
+    bad = _violations(audit_constants(spec))
+    assert bad, "a 256 KiB baked-in constant must be a violation"
+    assert any("262144" in f.message for f in bad)
+
+
+def test_big_constant_in_subjaxpr_fires(make_spec):
+    # recursion check: the constant is closed over inside a cond branch
+    def step(params, tok, cache):
+        cache = jax.lax.cond(tok[0] > 0,
+                             lambda c: c + jnp.asarray(BIG),
+                             lambda c: c, cache)
+        return tok, cache
+
+    spec = make_spec(
+        step,
+        (jax.ShapeDtypeStruct((8,), F32),
+         jax.ShapeDtypeStruct((4,), jnp.int32),
+         jax.ShapeDtypeStruct((64, 1024), F32)))
+    assert _violations(audit_constants(spec))
+
+
+def test_small_constants_are_clean(make_spec):
+    small = np.arange(16, dtype=np.float32)
+
+    def step(params, tok, cache):
+        return tok + 1, cache + jnp.asarray(small)
+
+    spec = make_spec(
+        step,
+        (jax.ShapeDtypeStruct((8,), F32),
+         jax.ShapeDtypeStruct((4,), jnp.int32),
+         jax.ShapeDtypeStruct((4, 16), F32)))
+    findings = audit_constants(spec)
+    assert not _violations(findings)
+    assert any(f.severity == "info" for f in findings)
+
+
+def test_threshold_is_configurable(make_spec):
+    small = np.arange(16, dtype=np.float32)
+
+    def step(params, tok, cache):
+        return tok, cache + jnp.asarray(small)
+
+    spec = make_spec(
+        step,
+        (jax.ShapeDtypeStruct((8,), F32),
+         jax.ShapeDtypeStruct((4,), jnp.int32),
+         jax.ShapeDtypeStruct((4, 16), F32)))
+    assert _violations(audit_constants(spec, threshold=8))

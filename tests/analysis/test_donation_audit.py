@@ -1,0 +1,65 @@
+"""Donation audit: fires on undonated state and unaliasable donation."""
+from __future__ import annotations
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.donation import audit_donation
+
+F32 = jnp.float32
+CACHE = jax.ShapeDtypeStruct((4, 64, 16), F32)      # 16 KiB of "state"
+
+
+def _violations(findings):
+    return [f for f in findings if f.severity == "violation"]
+
+
+def test_undonated_state_buffer_fires(make_spec):
+    # bstate (argnum 3) is cache-sized, flows input -> output, and is
+    # missing from donate_argnums: the deliberately un-donated jit.
+    def step(params, tok, cache, bstate):
+        return tok + 1, cache + params[0], bstate * 2
+
+    spec = make_spec(
+        step,
+        (jax.ShapeDtypeStruct((64,), F32),
+         jax.ShapeDtypeStruct((4,), jnp.int32), CACHE, CACHE),
+        donate_argnums=(2,))
+    bad = _violations(audit_donation(spec))
+    assert bad, "undonated persistent buffer must be a violation"
+    assert any("argnum 3" in f.message for f in bad)
+
+
+def test_declared_but_unaliasable_donation_fires(make_spec):
+    # donated f32 cache comes back bf16: XLA cannot alias the buffers,
+    # so the declared donation silently double-buffers.
+    def step(params, tok, cache):
+        return tok + 1, cache.astype(jnp.bfloat16)
+
+    spec = make_spec(
+        step,
+        (jax.ShapeDtypeStruct((64,), F32),
+         jax.ShapeDtypeStruct((4,), jnp.int32), CACHE),
+        donate_argnums=(2,))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")       # XLA's own donation gripe
+        bad = _violations(audit_donation(spec))
+    assert bad, "unaliased donated leaves must be a violation"
+    assert any("tf.aliasing_output" in f.message for f in bad)
+
+
+def test_fully_donated_spec_is_clean(make_spec):
+    def step(params, tok, cache):
+        return tok + 1, cache * params[0]
+
+    spec = make_spec(
+        step,
+        (jax.ShapeDtypeStruct((64,), F32),
+         jax.ShapeDtypeStruct((4,), jnp.int32), CACHE),
+        donate_argnums=(2,))
+    findings = audit_donation(spec)
+    assert not _violations(findings)
+    assert any(f.severity == "info" and "aliased" in f.message
+               for f in findings)

@@ -1,0 +1,123 @@
+"""AST lint rules: host-sync, tracer-branch, kernel-oracle pairing."""
+from __future__ import annotations
+
+import os
+import textwrap
+
+from repro.analysis.lint import (lint_kernel_manifest, lint_repo,
+                                 lint_tick_builder_source,
+                                 lint_transition_source)
+
+
+def _violations(findings):
+    return [f for f in findings if f.severity == "violation"]
+
+
+# ---------------------------------------------------------------- L1 --
+BAD_TRANSITION = textwrap.dedent("""
+    def release(state, unit):
+        idx = int(unit)
+        ok = state.free[idx].item()
+        return bool(ok)
+""")
+
+
+def test_host_sync_in_transition_fires():
+    bad = _violations(lint_transition_source(BAD_TRANSITION, "pool.py",
+                                             allowlist=set()))
+    labels = "".join(f.message for f in bad)
+    assert "int()" in labels and ".item()" in labels and "bool()" in labels
+
+
+def test_allowlisted_helper_is_exempt():
+    assert not lint_transition_source(BAD_TRANSITION, "pool.py",
+                                      allowlist={"release"})
+
+
+def test_np_asarray_and_device_get_fire():
+    src = textwrap.dedent("""
+        def seed(state, prompt):
+            buf = np.asarray(prompt)
+            return jax.device_get(buf)
+    """)
+    bad = _violations(lint_transition_source(src, "draft.py",
+                                             allowlist=set()))
+    labels = "".join(f.message for f in bad)
+    assert "np.asarray()" in labels and "jax.device_get()" in labels
+
+
+# ---------------------------------------------------------------- L3 --
+def test_tracer_branch_in_builder_fires():
+    src = textwrap.dedent("""
+        def build_decode_step(cfg, chunk):
+            def step(params, tok, cache, frag_len):
+                if frag_len > 0:
+                    tok = tok + 1
+                return tok, cache
+            return step
+    """)
+    bad = _violations(lint_tick_builder_source(src))
+    assert bad
+    assert "frag_len" in bad[0].message
+
+
+def test_while_on_traced_param_fires():
+    src = textwrap.dedent("""
+        def build_spec_tick(cfg):
+            def step(params, accepted):
+                while accepted:
+                    accepted = accepted - 1
+                return accepted
+            return step
+    """)
+    assert _violations(lint_tick_builder_source(src))
+
+
+def test_static_attr_and_none_checks_are_clean():
+    src = textwrap.dedent("""
+        def build_decode_step(cfg, chunk):
+            def step(params, tok, cache, mask):
+                if mask is None:
+                    mask = tok * 0
+                if tok.shape[0] > 1:
+                    tok = tok[:1]
+                if chunk > 2:
+                    tok = tok + chunk
+                return tok, cache
+            return step
+    """)
+    assert not lint_tick_builder_source(src)
+
+
+def test_branch_outside_builder_is_ignored():
+    src = textwrap.dedent("""
+        def helper(n):
+            if n > 0:
+                return n
+            return 0
+    """)
+    assert not lint_tick_builder_source(src)
+
+
+# ---------------------------------------------------------------- L2 --
+def test_kernel_manifest_clean_on_repo():
+    assert not _violations(lint_kernel_manifest())
+
+
+def test_kernel_missing_ref_and_stale_entry_fire(tmp_path):
+    # a fake repo: one package with kernel.py but no ref.py/ops.py, and
+    # none of the real KERNEL_TESTS packages present (all stale)
+    kdir = tmp_path / "src" / "repro" / "kernels" / "ghost"
+    os.makedirs(kdir)
+    (kdir / "kernel.py").write_text("# stub\n")
+    os.makedirs(tmp_path / "tests" / "kernels")
+    bad = _violations(lint_kernel_manifest(str(tmp_path)))
+    msgs = "".join(f.message for f in bad)
+    assert "missing ref.py" in msgs
+    assert "not listed" in msgs            # ghost has no manifest entry
+    assert "stale manifest entry" in msgs  # real entries have no package
+
+
+# ------------------------------------------------------------- repo --
+def test_working_tree_is_lint_clean():
+    assert not _violations(lint_repo())

@@ -1,0 +1,56 @@
+"""Retrace audit: unbounded key spaces and rotted bucketing both fire."""
+from __future__ import annotations
+
+from repro.analysis.retrace import admission_budget, audit_retrace
+from repro.runtime.serve import (admit_group_buckets, admit_span_buckets,
+                                 retrace_key_spaces)
+
+MAX_SEQ, N_SLOTS = 48, 4
+
+
+def _violations(findings):
+    return [f for f in findings if f.severity == "violation"]
+
+
+def test_unbounded_space_fires():
+    bad = _violations(audit_retrace({"seed_slot/raw-length": None},
+                                    max_seq=MAX_SEQ, n_slots=N_SLOTS))
+    assert bad
+    assert "unbounded" in bad[0].message
+
+
+def test_rotted_bucketing_fires():
+    # the known-bad enumerator: an identity "bucket" admits one compile
+    # per raw span length — exactly the pre-PR-6 seed_slot failure
+    spans = admit_span_buckets(MAX_SEQ, _bucket=lambda n, cap: n)
+    assert len(spans) > admission_budget(MAX_SEQ, N_SLOTS)
+    bad = _violations(audit_retrace({"admit_step/identity-bucket": spans},
+                                    max_seq=MAX_SEQ, n_slots=N_SLOTS))
+    assert bad
+    assert "exceed" in bad[0].message
+
+
+def test_over_budget_tick_site_fires():
+    # a non-admit site gets the singleton budget; 9 keys blow it
+    space = [("chunk", c) for c in range(9)]
+    bad = _violations(audit_retrace({"decode/contiguous": space},
+                                    max_seq=MAX_SEQ, n_slots=N_SLOTS))
+    assert bad
+
+
+def test_real_pow2_bucketing_is_within_budget():
+    spans = admit_span_buckets(MAX_SEQ)
+    groups = admit_group_buckets(N_SLOTS)
+    # pow2 bucketing: log-many distinct spans/groups
+    assert len(spans) <= MAX_SEQ.bit_length() + 1
+    assert len(groups) <= N_SLOTS.bit_length() + 1
+    spaces = retrace_key_spaces(max_seq=MAX_SEQ, n_slots=N_SLOTS)
+    findings = audit_retrace(spaces, max_seq=MAX_SEQ, n_slots=N_SLOTS)
+    assert not _violations(findings)
+
+
+def test_paged_rounding_stays_bounded():
+    spaces = retrace_key_spaces(max_seq=MAX_SEQ, n_slots=N_SLOTS,
+                                block_size=8)
+    findings = audit_retrace(spaces, max_seq=MAX_SEQ, n_slots=N_SLOTS)
+    assert not _violations(findings)

@@ -1,0 +1,18 @@
+"""The live harness: a real engine stream under guard + spy stays clean."""
+from __future__ import annotations
+
+import pytest
+
+from repro.analysis.transfers import run_transfer_harness
+
+
+@pytest.mark.slow
+def test_harness_both_cells_clean():
+    findings = run_transfer_harness()
+    cells = {f.subject for f in findings}
+    assert cells == {"harness/contiguous/decode",
+                     "harness/paged/chunked+spec+overcommit"}
+    bad = [f for f in findings if f.severity == "violation"]
+    assert not bad, [f.message for f in bad]
+    # the budgeted sync accounting made it into the messages
+    assert all("budgeted syncs" in f.message for f in findings)

@@ -82,6 +82,24 @@ def test_token_exact_across_configs(serve_setup, serve_harness, oracle,
         assert eng.stalls == 0
 
 
+def test_debug_transfers_cell_token_exact(serve_setup, serve_harness,
+                                          oracle):
+    """One matrix cell runs with ``debug_transfers=True``: every tick
+    executes under ``jax.transfer_guard_device_to_host("disallow")``, so
+    any *implicit* device->host sync smuggled into the hot path raises
+    while the engine's explicit budgeted pulls pass — and the guarded
+    stream must still be token-exact.  (`python -m repro.analysis.audit`
+    drives the same guard plus the CPU-side TransferSpy over both
+    layouts.)"""
+    cfg, params = serve_setup
+    kw = _engine_kw("paged", "chunked", "greedy", "overcommit")
+    outputs, eng = serve_harness.run(
+        params, cfg, serve_harness.pressure_requests(),
+        preempt_at=(2, 5), debug_transfers=True, **kw)
+    assert outputs == oracle
+    serve_harness.assert_drained(eng)
+
+
 def test_overcommit_small_pool_beats_reserved_occupancy(serve_setup,
                                                         serve_harness):
     """The tentpole's point: on a pool too small for every worst case,
