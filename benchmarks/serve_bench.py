@@ -52,7 +52,14 @@ Measures the refactored engine on CPU-sized configs and writes
   single-device oracle.  Floors: every point token-exact and every
   replica routed to; ``sharded_token_exact`` true.  Also appends the
   single-device baseline to ``benchmarks/artifacts/
-  serve_trajectory.jsonl`` (the perf-trajectory anchor).
+  serve_trajectory.jsonl`` (the perf-trajectory anchor),
+* ``fault_recovery`` — chaos: a seeded FaultPlan kills replica 0 of a
+  2-replica fleet mid-run; the fleet quarantines it and migrates its
+  in-flight requests to the survivor via token-exact replay.  Records
+  ``requests_migrated`` / ``migrated_token_exact`` / ``dead_letter`` /
+  ``recovery_overhead_x`` (fault-free tok/s over faulted tok/s).
+  Floors: >= 1 migration, bit-exact vs the unfaulted single-engine
+  oracle, zero dead letters.
 """
 import json
 import os
@@ -837,9 +844,113 @@ def run_scaling(out_path: str = None) -> list[str]:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Chaos: fault injection, quarantine, and in-flight request migration
+# ---------------------------------------------------------------------------
+#
+# A 2-replica fleet serves the same stream twice: once fault-free (the
+# throughput baseline) and once with a seeded FaultPlan killing replica
+# 0's tick mid-run.  The fleet quarantines the replica and migrates its
+# in-flight requests to the survivor by replaying prompt +
+# generated-so-far through chunked prefill — greedy determinism makes
+# the replay token-exact, asserted against the unfaulted single-engine
+# oracle.  ``fault_recovery`` records the cost of surviving: migrated
+# request count, exactness, dead letters (must be zero — the fleet sheds
+# throughput, never correctness), and throughput vs the fault-free run.
+
+CHAOS_FAULT_KIND = "tick_exception"
+CHAOS_FAULT_TICK = 4
+
+
+def run_chaos(out_path: str = None) -> list[str]:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_arch, reduced
+    from repro.models import model as model_lib
+    from repro.runtime import faults
+    from repro.runtime.serve import Request, ServingEngine
+    from repro.runtime.supervisor import FleetSupervisor
+
+    out_path = out_path or os.path.join(os.getcwd(), "BENCH_serve.json")
+    cfg = reduced(get_arch("granite-3-2b"), n_layers=2, d_model=128,
+                  vocab=512)
+    params = model_lib.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    kw = dict(n_slots=4, max_seq=96, chunk=8, paged=True, block_size=16,
+              n_blocks=24, chunked_prefill=True, prefill_chunk_tokens=8)
+
+    # the unfaulted single-replica oracle every survivor is held to
+    oracle = ServingEngine(params, cfg, **kw)
+    done, _ = oracle.run_to_completion(_scaling_requests(np, Request, cfg))
+    want = {r.rid: list(r.out) for r in done}
+
+    def fleet_run(plan):
+        fleet = FleetSupervisor(params, cfg, n_replicas=2, model=1,
+                                devices=jax.devices()[:1],
+                                validate_outputs=True, **kw)
+        for eng in fleet.engines:   # warm each replica's jitted closures
+            eng.run_to_completion([Request(99,
+                                           np.arange(1, 9, dtype=np.int32),
+                                           max_new=4)])
+            eng.reset_stats()
+        if plan is not None:
+            fleet.arm_faults(plan)
+        reqs = _scaling_requests(np, Request, cfg)
+        t0 = time.perf_counter()
+        done, _ = fleet.run_to_completion(reqs, max_wall_s=600)
+        dt = time.perf_counter() - t0
+        got = {r.rid: list(r.out) for r in done}
+        return got, sum(len(t) for t in got.values()) / dt, fleet
+
+    got0, tps0, _ = fleet_run(None)
+    assert got0 == want, "fault-free fleet diverged from the oracle"
+
+    plan = faults.FaultPlan([faults.FaultEvent(
+        kind=CHAOS_FAULT_KIND, tick=CHAOS_FAULT_TICK, replica=0)])
+    got_f, tps_f, fleet = fleet_run(plan)
+    fh = fleet.fleet_health()
+
+    fault_recovery = {
+        "fault_kind": CHAOS_FAULT_KIND,
+        "fault_tick": CHAOS_FAULT_TICK,
+        "requests_migrated": fh["migrations"],
+        "migrated_token_exact": got_f == want,
+        "migrate_replay_mismatches": fh["migrate_replay_mismatches"],
+        "dead_letter": len(fh["dead_letters"]),
+        "replicas_quarantined": len(fleet.engines) - fh["healthy"],
+        "tokens_per_s": tps_f,
+        "fault_free_tokens_per_s": tps0,
+        "recovery_overhead_x": tps0 / tps_f,
+    }
+    record = json.load(open(out_path))
+    record["fault_recovery"] = fault_recovery
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+
+    rows = [
+        f"serve,fault_recovery,requests_migrated,"
+        f"{fault_recovery['requests_migrated']},"
+        f"token_exact={fault_recovery['migrated_token_exact']};"
+        f"dead_letter={fault_recovery['dead_letter']}",
+        f"serve,fault_recovery,tokens_per_s,{tps_f:.0f},"
+        f"fault_free={tps0:.0f};"
+        f"overhead={fault_recovery['recovery_overhead_x']:.2f}x;"
+        f"quarantined={fault_recovery['replicas_quarantined']}",
+    ]
+    # acceptance floors: work really migrated, every survivor bit-exact
+    # vs the unfaulted oracle, and nothing was dead-lettered — losing a
+    # replica mid-run costs throughput, never tokens
+    assert fault_recovery["requests_migrated"] >= 1, fault_recovery
+    assert fault_recovery["migrated_token_exact"] is True, fault_recovery
+    assert fault_recovery["migrate_replay_mismatches"] == 0, fault_recovery
+    assert fault_recovery["dead_letter"] == 0, fault_recovery
+    return rows
+
+
 def run() -> list[str]:
     return run_serve() + run_latency() + run_spec() + run_overcommit() \
-        + run_scaling()
+        + run_scaling() + run_chaos()
 
 
 if __name__ == "__main__":

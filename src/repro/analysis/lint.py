@@ -1,6 +1,6 @@
 """AST-level repo lint: the rules a reviewer used to enforce by memory.
 
-Three rules, all specific to this codebase's discipline:
+Four rules, all specific to this codebase's discipline:
 
 * **L1 host-sync-in-transition** — the pure transition modules
   (``runtime/pool.py``, ``runtime/paging.py``, ``runtime/draft.py``)
@@ -19,6 +19,15 @@ Three rules, all specific to this codebase's discipline:
   branches on the tracer, not the value).  Static uses — ``.shape`` /
   ``.dtype`` / ``.ndim`` / ``.size`` attributes and ``is None``
   identity checks — are fine.
+* **L4 fault-hook** — the chaos layer (``runtime/faults.py``) must be
+  dead code unless a ``FaultPlan`` is armed, and must never reach
+  traced code.  Two sub-rules: (a) tick builders (``build_*``) and
+  everything nested in them may not reference any fault-named symbol —
+  no chaos branches on traced values; (b) outside the arming allowlist
+  (``__init__`` / ``arm_faults``), every ``_faults`` reference must sit
+  lexically inside an ``if`` whose test mentions ``_faults``, so a
+  never-armed engine takes exactly one pointer-is-None branch per tick
+  and zero fault-layer calls.
 
 Every rule takes source text, so the known-bad fixtures in
 ``tests/analysis`` feed synthetic modules straight in.
@@ -142,6 +151,90 @@ def lint_tick_builder_source(src: str, module_name: str = "serve.py"
     return findings
 
 
+# L4: the only functions allowed to touch `_faults` unguarded — the
+# null initialization and the arming entry point itself
+FAULT_HOOK_ALLOWLIST: Set[str] = {"__init__", "arm_faults"}
+
+
+def _is_fault_name(name: str) -> bool:
+    # "default" contains "fault": strip it before matching, or every
+    # `default_mask=None` keyword would trip the rule
+    return "fault" in name.lower().replace("default", "")
+
+
+def _ref_label(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _mentions_faults(expr: ast.AST) -> bool:
+    return any(_ref_label(n) == "_faults" for n in ast.walk(expr))
+
+
+def lint_fault_hooks_source(src: str, module_name: str = "serve.py",
+                            allowlist: Optional[Set[str]] = None
+                            ) -> List[Finding]:
+    """L4 over one module's source.
+
+    (a) ``build_*`` tick builders are traced: any fault-named reference
+    inside one means chaos reached compiled code.  (b) everywhere else,
+    a ``_faults`` reference outside the allowlist must be lexically
+    inside an ``if`` testing ``_faults`` — fault hooks are dead code
+    until :meth:`arm_faults` runs."""
+    if allowlist is None:
+        allowlist = FAULT_HOOK_ALLOWLIST
+    tree = ast.parse(src)
+    findings: List[Finding] = []
+
+    # (a) no fault-named symbol anywhere under a tick builder
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.FunctionDef)
+                and node.name.startswith("build_")):
+            continue
+        for sub in ast.walk(node):
+            label = _ref_label(sub)
+            if label and _is_fault_name(label):
+                findings.append(violation(
+                    "lint/fault-hook", f"{module_name}:{node.name}",
+                    f"fault-injection symbol {label!r} at line "
+                    f"{sub.lineno} inside a tick builder — chaos must "
+                    f"never reach traced code"))
+
+    # (b) `_faults` outside the allowlist only under an `if _faults` guard
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if fn.name in allowlist:
+            continue
+
+        def visit(node: ast.AST, guarded: bool) -> None:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not fn:
+                return                      # walked on its own
+            if isinstance(node, ast.If) and _mentions_faults(node.test):
+                for child in node.body:     # the guard itself is the
+                    visit(child, True)      # one allowed bare reference
+                for child in node.orelse:
+                    visit(child, guarded)
+                return
+            if not guarded and _ref_label(node) == "_faults":
+                findings.append(violation(
+                    "lint/fault-hook", f"{module_name}:{fn.name}",
+                    f"unguarded `_faults` reference at line "
+                    f"{node.lineno} — fault hooks must be dead code "
+                    f"unless a FaultPlan is armed (wrap in "
+                    f"`if self._faults is not None:` or allowlist the "
+                    f"arming function)"))
+            for child in ast.iter_child_nodes(node):
+                visit(child, guarded)
+
+        visit(fn, False)
+    return findings
+
+
 def _repo_root() -> str:
     # src/repro/analysis/lint.py -> repo root is three dirs up from src
     here = os.path.dirname(os.path.abspath(__file__))
@@ -200,7 +293,7 @@ def lint_kernel_manifest(root: Optional[str] = None) -> List[Finding]:
 
 
 def lint_repo(root: Optional[str] = None) -> List[Finding]:
-    """All three rules over the working tree."""
+    """All four rules over the working tree."""
     root = root or _repo_root()
     rdir = os.path.join(root, "src", "repro", "runtime")
     findings: List[Finding] = []
@@ -208,7 +301,11 @@ def lint_repo(root: Optional[str] = None) -> List[Finding]:
         with open(os.path.join(rdir, module_name)) as fh:
             findings.extend(lint_transition_source(fh.read(), module_name))
     with open(os.path.join(rdir, "serve.py")) as fh:
-        findings.extend(lint_tick_builder_source(fh.read(), "serve.py"))
+        serve_src = fh.read()
+    findings.extend(lint_tick_builder_source(serve_src, "serve.py"))
+    findings.extend(lint_fault_hooks_source(serve_src, "serve.py"))
+    with open(os.path.join(rdir, "supervisor.py")) as fh:
+        findings.extend(lint_fault_hooks_source(fh.read(), "supervisor.py"))
     findings.extend(lint_kernel_manifest(root))
     if not any(f.severity == "violation" for f in findings):
         findings.append(info("lint", "repo", "all lint rules clean"))
@@ -219,7 +316,7 @@ def main(argv=None) -> int:
     import argparse
     parser = argparse.ArgumentParser(
         description="repo AST lint (host-sync / kernel-oracle / "
-                    "tracer-branch rules)")
+                    "tracer-branch / fault-hook rules)")
     parser.add_argument("--root", default=None,
                         help="repo root (default: derived from __file__)")
     args = parser.parse_args(argv)

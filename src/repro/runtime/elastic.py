@@ -39,11 +39,28 @@ LADDER = [
 CHIPS_PER_HOST = 4  # v5e host = 4 chips
 
 
+# One shared health-event vocabulary for the *training* fleet (this
+# module) and the *serving* fleet's replica quarantine
+# (runtime/supervisor.FleetSupervisor).  Both fault paths append the same
+# record type to their event logs, so the two cannot drift apart — the
+# common health-event fixture in tests/runtime/conftest.py asserts every
+# emitted event against this vocabulary for both managers.
+EVENT_KINDS = frozenset({
+    "fail", "slow", "swap", "relower", "recover",        # training hosts
+    "quarantine", "migrate", "dead_letter", "readmit",   # serving replicas
+})
+
+
 @dataclasses.dataclass
 class Event:
-    kind: str          # fail | slow | swap | relower | recover
-    host: int
+    kind: str          # one of EVENT_KINDS
+    host: int          # host (training) / replica (serving); -1 fleet-wide
     detail: str = ""
+
+    def __post_init__(self):
+        if self.kind not in EVENT_KINDS:
+            raise ValueError(f"unknown health-event kind {self.kind!r}; "
+                             f"known: {sorted(EVENT_KINDS)}")
 
 
 class ElasticManager:
@@ -105,8 +122,14 @@ class ElasticManager:
         return ev
 
     def recover(self, host: int) -> None:
-        """A repaired host rejoins the pool as a spare."""
+        """A repaired host rejoins the pool as a spare.
+
+        A failed host keeps its rent while benched (disable only flags
+        it), so rejoining means enable *and* release — otherwise the
+        "spare" could never be granted by the next `fail`'s rent."""
         self.pool.enable(host)
+        if host not in self.active:
+            self.pool.release(host)
         self.events.append(Event("recover", host))
 
     def check_invariants(self) -> None:

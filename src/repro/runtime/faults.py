@@ -1,0 +1,169 @@
+"""Deterministic fault injection: chaos as a first-class supervisor input.
+
+The paper's supervisor exists so a core that "overheats" can be withdrawn
+and its job reassigned without the caller noticing (§4.1.2, preallocated
+spares §5.1); the follow-up EMPA paper (2006.00532) makes that
+supervisor-mediated reassignment the defining operation of the model.
+To *test* that story end to end the fleet needs faults on demand — this
+module is the chaos counterpart of the static auditor's known-bad
+fixtures (PR 8): a seeded, replayable :class:`FaultPlan` that injects
+
+* ``tick_exception``  — the serving tick raises mid-run,
+* ``nan_poison``      — the replica's KV cache floats are NaN'd and the
+  corruption surfaces at the next host sync (see below),
+* ``hang``            — the tick sleeps past the fleet's deadline clock,
+* ``ledger_corruption`` — a forged bit in the host slot-pool ledger (the
+  exact class of corruption ``pool.check_invariants`` exists to catch),
+
+into a chosen replica at a chosen tick.  Every event is host-side: the
+hooks run between jitted ticks, never inside one — a compiled tick must
+not branch on "is a fault armed" (the lint rule ``lint/fault-hook``
+enforces exactly that, the L3 tracer-branch discipline extended to the
+fault layer).
+
+**How NaN poisoning surfaces.**  The serving engine's one budgeted host
+sync per tick carries int32 token buffers, so a float NaN in the cache
+reaches the host as *wrong tokens*, not as a NaN bit pattern.  The
+injector therefore does both halves of the real failure: it NaNs every
+float leaf of the device cache (any path reading the cache is genuinely
+corrupted from that tick on) and marks the next synced emitted row with
+:data:`POISON_TOKEN` — the out-of-range bit pattern a corrupted forward
+presents at an integer boundary — which the engine's
+``validate_outputs`` tripwire catches with slot/tick attribution, with
+no device sync added.  Migration then replays from the *host-side* token
+history, which the poison never touched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.runtime import pool as pool_lib
+
+KINDS = ("tick_exception", "nan_poison", "hang", "ledger_corruption")
+
+# the "NaN at an int32 boundary" sentinel: far outside any vocabulary,
+# so the range tripwire cannot mistake it for a real token
+POISON_TOKEN = int(np.iinfo(np.int32).min)
+
+
+class InjectedFault(RuntimeError):
+    """Raised by an armed ``tick_exception`` event (and nothing else):
+    chaos tests can tell an injected crash from a genuine engine bug."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One fault, aimed at one replica's tick clock.
+
+    ``tick`` counts the target replica's *host steps* (serving ticks)
+    since the plan was armed — deterministic under greedy decoding, so
+    the same plan replays the same failure every run.
+    """
+    kind: str
+    tick: int
+    replica: int = 0
+    hang_s: float = 0.0      # only meaningful for kind == "hang"
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; known: {KINDS}")
+        if self.tick < 0:
+            raise ValueError(f"fault tick must be >= 0, got {self.tick}")
+        if self.kind == "hang" and self.hang_s <= 0:
+            raise ValueError("hang events need hang_s > 0")
+
+
+class ReplicaFaults:
+    """The slice of a plan aimed at one replica: what an engine arms.
+
+    ``due(step)`` pops (fire-once) every event scheduled at or before
+    ``step`` — a replica that ticks past a scheduled point (it was idle
+    when the tick number came up) still fires the fault on its next
+    real tick, keeping schedules robust to routing choices.
+    """
+
+    def __init__(self, events: Sequence[FaultEvent]):
+        self._events = sorted(events, key=lambda e: e.tick)
+
+    def __bool__(self) -> bool:
+        return bool(self._events)
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+    def due(self, step: int) -> list[FaultEvent]:
+        fired = [e for e in self._events if e.tick <= step]
+        if fired:
+            self._events = [e for e in self._events if e.tick > step]
+        return fired
+
+
+class FaultPlan:
+    """A deterministic, replayable fault schedule for a serving fleet."""
+
+    def __init__(self, events: Iterable[FaultEvent] = ()):
+        self.events = tuple(events)
+        for e in self.events:
+            if not isinstance(e, FaultEvent):
+                raise TypeError(f"FaultPlan takes FaultEvents, got {e!r}")
+
+    @classmethod
+    def seeded(cls, seed: int, *, n_replicas: int, max_tick: int,
+               kinds: Sequence[str] = KINDS, n_events: int = 1,
+               hang_s: float = 0.25) -> "FaultPlan":
+        """Sample a schedule from a seed: same seed, same chaos."""
+        rng = np.random.default_rng(seed)
+        events = []
+        for _ in range(n_events):
+            kind = str(rng.choice(list(kinds)))
+            events.append(FaultEvent(
+                kind=kind,
+                tick=int(rng.integers(0, max(1, max_tick))),
+                replica=int(rng.integers(0, max(1, n_replicas))),
+                hang_s=hang_s if kind == "hang" else 0.0))
+        return cls(events)
+
+    def for_replica(self, replica: int) -> ReplicaFaults:
+        return ReplicaFaults(
+            [e for e in self.events if e.replica == replica])
+
+
+# -- the injectors (host-side effectors the engine hook applies) -------------
+
+def poison_cache(cache: dict) -> dict:
+    """NaN every float leaf of a serving cache (k/v pages or slots);
+    integer bookkeeping (``pos``, block tables) is left intact so the
+    corruption is *silent* — exactly the failure shape that makes NaN
+    faults dangerous."""
+    def nan_like(leaf):
+        if hasattr(leaf, "dtype") and np.issubdtype(leaf.dtype, np.floating):
+            return (leaf * np.nan).astype(leaf.dtype)
+        return leaf
+    return jax.tree_util.tree_map(nan_like, cache)
+
+
+def corrupt_pool_ledger(pool) -> str:
+    """Forge one bit in a host `CorePool` ledger so that
+    ``pool.check_invariants`` (the health probe) catches it: a rented,
+    phased unit is marked free — the "free unit with a phase" violation
+    the §4.3 rent/terminate discipline forbids.  Falls back to phasing a
+    free unit when nothing is rented.  Returns a description of the
+    forgery (for the chaos log)."""
+    state = pool.state
+    free = np.asarray(state.free).copy()
+    phase = np.asarray(state.phase).copy()
+    target = np.flatnonzero(~free & (phase != pool_lib.PHASE_IDLE))
+    if target.size:
+        unit = int(target[0])
+        free[unit] = True
+        pool.state = state._replace(free=free)
+        return f"forged free bit on rented unit {unit}"
+    unit = int(np.flatnonzero(free)[0]) if np.any(free) else 0
+    phase[unit] = pool_lib.PHASE_DECODE
+    pool.state = state._replace(phase=phase)
+    return f"forged phase on free unit {unit}"

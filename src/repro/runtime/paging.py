@@ -29,7 +29,7 @@ Transitions (all pure, all jit-compatible):
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -243,6 +243,19 @@ def merge_block_stats(states) -> dict:
         out["free"] += int(free_blocks(s))
         out["peak_used"] += int(s.pool.peak_used)
     return out
+
+
+def invariant_violation(state: BlockPoolState, tables=None) -> Optional[str]:
+    """`check_invariants` as a health probe (reason string, not a raise)
+    — the block-ledger twin of ``pool.invariant_violation``.  The fleet
+    supervisor reads it as a *diagnostic* on an already-quarantined
+    replica: it materializes device state, so it stays off the serving
+    hot path."""
+    try:
+        check_invariants(state, tables)
+    except AssertionError as exc:
+        return str(exc)
+    return None
 
 
 def check_invariants(state: BlockPoolState, tables=None) -> None:

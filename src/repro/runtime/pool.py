@@ -24,7 +24,7 @@ exceptions the old numpy implementation raised.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Union
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -270,6 +270,19 @@ def merge_stats(states) -> dict:
 
 
 # -- invariants (host-side; property-tested) ---------------------------------
+
+def invariant_violation(state: SlotPoolState) -> Optional[str]:
+    """`check_invariants` as a health probe: the failure *reason* instead
+    of an AssertionError.  This is what the serving fleet's per-tick
+    ledger sampling reads — a forged free bit (faults.corrupt_pool_ledger
+    is the chaos twin) comes back as a quarantine reason, not a crash in
+    the supervisor loop."""
+    try:
+        check_invariants(state)
+    except AssertionError as exc:
+        return str(exc)
+    return None
+
 
 def check_invariants(state: SlotPoolState) -> None:
     free = np.asarray(state.free)

@@ -125,6 +125,7 @@ from repro.core.supervisor import CorePool
 from repro.models import model as model_lib
 from repro.models.model import PagedLayout
 from repro.runtime import draft as draft_lib
+from repro.runtime import faults as faults_lib
 from repro.runtime import paging
 from repro.runtime import pool as pool_lib
 from repro.runtime.sharding import ShardingRules, use_rules
@@ -1049,6 +1050,18 @@ class _PrefillJob:
     cursor: int = 0
     registered: int = 0
     drop_first: bool = False
+    # a fleet-migrated request's replay (ServingEngine.adopt): the
+    # drop_first cross-check books its mismatches separately so a
+    # migration that silently diverged is distinguishable from a local
+    # preemption-resume bug
+    migrated: bool = False
+
+
+class OutputValidationError(RuntimeError):
+    """The host-side output tripwire (``validate_outputs=True``) caught a
+    non-finite or out-of-vocabulary value in a synced emitted buffer —
+    NaN/garbage logits upstream.  Carries slot/tick attribution in the
+    message; the fleet supervisor treats it as a replica health failure."""
 
 
 class ServingEngine:
@@ -1095,7 +1108,8 @@ class ServingEngine:
                  speculative: bool = False, spec_k: int = 4,
                  spec_hist: int = 64,
                  overcommit: bool = False,
-                 debug_transfers: bool = False):
+                 debug_transfers: bool = False,
+                 validate_outputs: bool = False):
         # tensor-parallel tick: with a (data, model) mesh the engine
         # shards attention heads / KV along "model" per the logical-axis
         # rules (divisibility fallback included) and places params, cache
@@ -1110,6 +1124,21 @@ class ServingEngine:
         self.mesh, self.rules = mesh, rules
         self.params, self.cfg = params, cfg
         self.debug_transfers = debug_transfers
+        # health surface (chaos tentpole): the output tripwire validates
+        # every synced emitted row on the host (no device sync added),
+        # the bound being the padded vocab (padded unembed columns are
+        # legal argmax winners on some configs); the fault hook is dead
+        # code until `arm_faults` installs a plan (lint-enforced); the
+        # per-tick wall clock feeds the fleet's deadline watchdog
+        self.validate_outputs = validate_outputs
+        self._vocab_bound = int(getattr(cfg, "vocab_padded", cfg.vocab))
+        self._faults: Optional[faults_lib.ReplicaFaults] = None
+        self._fault_step = 0
+        self._poison_pending = False
+        self.last_tick_wall_s = 0.0
+        self.migrations_in = 0
+        self.migrate_replay_mismatches = 0
+        self._admit_wall: dict[int, float] = {}   # rid -> admission time
         self.max_seq, self.eos_id, self.chunk = max_seq, eos_id, chunk
         self.pool = CorePool(n_slots)
         self.active: dict[int, Request] = {}
@@ -1388,6 +1417,7 @@ class ServingEngine:
             req.slot = slot
             self._admit_seq += 1
             self._slot_seq[slot] = self._admit_seq
+            self._admit_wall[req.rid] = time.perf_counter()
             granted.append(req)
             consumed += 1
         if not granted:
@@ -1720,18 +1750,58 @@ class ServingEngine:
                     self.draft_state, slot, job.stream)
         return fin
 
+    def _checked_row(self, req: Request, slot: int, row):
+        """Host-side output tripwire over one *already-synced* emitted
+        row: NaN/inf for float buffers, vocab-range for the int32 token
+        buffers the ticks actually emit.  Raises
+        :class:`OutputValidationError` with slot/tick attribution —
+        before the row can reach ``req.out``, so a poisoned replica's
+        host-side token history stays clean for migration replay.  Reads
+        only host memory: no device sync is added (the PR 8 transfer
+        audit stays clean)."""
+        if self._poison_pending:
+            # an armed NaN fault poisoned the device cache; at the int32
+            # token boundary the corruption surfaces as an out-of-range
+            # bit pattern in the next synced row (see runtime/faults.py)
+            row = np.array(row, copy=True)
+            if row.size:
+                row[0] = faults_lib.POISON_TOKEN
+            self._poison_pending = False
+        if not self.validate_outputs:
+            return row
+        arr = np.asarray(row)
+        if np.issubdtype(arr.dtype, np.floating):
+            if not np.all(np.isfinite(arr)):
+                raise OutputValidationError(
+                    f"non-finite emitted value for slot {slot} (rid "
+                    f"{req.rid}) at device tick {self.device_ticks}")
+        else:
+            bad = arr[(arr != NO_TOKEN)
+                      & ((arr < 0) | (arr >= self._vocab_bound))]
+            if bad.size:
+                raise OutputValidationError(
+                    f"invalid token {int(bad[0])} emitted for slot {slot} "
+                    f"(rid {req.rid}) at device tick {self.device_ticks}: "
+                    f"outside [0, {self._vocab_bound}) — NaN/garbage "
+                    f"logits upstream")
+        return row
+
     def _emit_row(self, req: Request, slot: int, row,
                   fin: dict[int, _PrefillJob]) -> int:
         """Deliver one emitted row to `req`; returns how many *decode*
         tokens it carried (a finishing fragment's first token is prefill
         output, and a resumed job's replayed token is dropped — already
         delivered before eviction — after an exactness check)."""
+        row = self._checked_row(req, slot, row)
         new_toks = [int(t) for t in row if t != NO_TOKEN]
         job = fin.get(slot)
         if job is not None and job.drop_first and new_toks:
             replay = new_toks.pop(0)
             if not req.out or replay != req.out[-1]:
-                self.preempt_replay_mismatches += 1
+                if job.migrated:
+                    self.migrate_replay_mismatches += 1
+                else:
+                    self.preempt_replay_mismatches += 1
         req.out.extend(new_toks)
         return 0 if slot in fin else len(new_toks)
 
@@ -1811,15 +1881,24 @@ class ServingEngine:
             if slot in self._need_first:
                 req.out.append(int(first[slot]))
                 self._need_first.discard(slot)
-            new_toks = [int(t) for t in em[slot] if t != NO_TOKEN]
+            row = self._checked_row(req, slot, em[slot])
+            new_toks = [int(t) for t in row if t != NO_TOKEN]
             req.out.extend(new_toks)
             self.decode_tokens += len(new_toks)
             self.spec_decode_tokens += len(new_toks)
             self.baseline_syncs += len(new_toks)
             if not active_mask[slot]:
-                finished.append(req)
-                del self.active[slot]
+                # hand off through _finished_instant and retire BEFORE
+                # dropping from `active`: if a corrupt ledger makes the
+                # release raise mid-loop, every request finished this
+                # tick is still reachable — rescued or drained by the
+                # fleet's quarantine, whose replay re-derives any tokens
+                # the raise discarded
+                self._finished_instant.append(req)
                 self._retire_slot(slot, req)
+                del self.active[slot]
+        finished += self._finished_instant
+        self._finished_instant = []
         return finished
 
     def _spec_step(self) -> list[Request]:
@@ -1882,9 +1961,17 @@ class ServingEngine:
             self.spec_decode_tokens += n_dec
             self.baseline_syncs += n_dec
             if not active_mask[slot]:
-                finished.append(req)
-                del self.active[slot]
+                # hand off through _finished_instant and retire BEFORE
+                # dropping from `active`: if a corrupt ledger makes the
+                # release raise mid-loop, every request finished this
+                # tick is still reachable — rescued or drained by the
+                # fleet's quarantine, whose replay re-derives any tokens
+                # the raise discarded
+                self._finished_instant.append(req)
                 self._retire_slot(slot, req)
+                del self.active[slot]
+        finished += self._finished_instant
+        self._finished_instant = []
         return finished
 
     def _mixed_step(self) -> list[Request]:
@@ -1931,9 +2018,17 @@ class ServingEngine:
             self.decode_tokens += n_dec
             self.baseline_syncs += n_dec
             if not active_mask[slot]:
-                finished.append(req)
-                del self.active[slot]
+                # hand off through _finished_instant and retire BEFORE
+                # dropping from `active`: if a corrupt ledger makes the
+                # release raise mid-loop, every request finished this
+                # tick is still reachable — rescued or drained by the
+                # fleet's quarantine, whose replay re-derives any tokens
+                # the raise discarded
+                self._finished_instant.append(req)
                 self._retire_slot(slot, req)
+                del self.active[slot]
+        finished += self._finished_instant
+        self._finished_instant = []
         return finished
 
     # -- one decode chunk over all active slots -----------------------------
@@ -1974,6 +2069,11 @@ class ServingEngine:
             self._resume_parked(force=not self.active)
         if not self.active:
             return finished
+        if self._faults is not None:
+            # chaos hook: fires only between jitted ticks, only when a
+            # plan is armed (lint/fault-hook enforces this stays guarded)
+            self._fire_faults(self._faults)
+            self._fault_step += 1
         self.occ_ticks += 1
         self.occ_slot_ticks += len(self.active)
         stall_mark = self.stalls
@@ -1996,7 +2096,9 @@ class ServingEngine:
         # denominator of the bench's decode tokens/s (admission work is
         # identical across engine configs and, on CPU, dominated by
         # per-prompt-bucket XLA compiles that would drown the signal)
-        self.decode_wall_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.decode_wall_s += dt
+        self.last_tick_wall_s = dt
         if self.overcommit and (self._pressure or self.stalls > stall_mark):
             # the tick ran the block pool dry: claw chains back until a
             # block actually came free — a fully-shared victim relieves
@@ -2036,15 +2138,23 @@ class ServingEngine:
             if slot in self._need_first:
                 req.out.append(int(first[slot]))
                 self._need_first.discard(slot)
-            row = em[slot]
+            row = self._checked_row(req, slot, em[slot])
             new_toks = [int(t) for t in row if t != NO_TOKEN]
             req.out.extend(new_toks)
             self.decode_tokens += len(new_toks)
             self.baseline_syncs += len(new_toks)
             if not active_mask[slot]:
-                finished.append(req)
-                del self.active[slot]
+                # hand off through _finished_instant and retire BEFORE
+                # dropping from `active`: if a corrupt ledger makes the
+                # release raise mid-loop, every request finished this
+                # tick is still reachable — rescued or drained by the
+                # fleet's quarantine, whose replay re-derives any tokens
+                # the raise discarded
+                self._finished_instant.append(req)
                 self._retire_slot(slot, req)
+                del self.active[slot]
+        finished += self._finished_instant
+        self._finished_instant = []
         return finished
 
     # -- preemption: evict under KV pressure, resume by replay --------------
@@ -2192,7 +2302,80 @@ class ServingEngine:
         self._drop_chain_host(slot, evict=False)
         self.pool.release(slot)
 
-    def run_to_completion(self, requests: list[Request], max_ticks=10_000):
+    # -- chaos & health ------------------------------------------------------
+    def arm_faults(self, faults) -> None:
+        """Arm a :class:`runtime.faults.ReplicaFaults` schedule.  Until
+        this is called the fault hooks in the tick path are dead code —
+        ``self._faults`` stays ``None`` and every hook is behind that
+        guard (the ``lint/fault-hook`` rule enforces it stays that way,
+        and that no compiled tick ever branches on fault state)."""
+        self._faults = faults
+
+    def _fire_faults(self, faults) -> None:
+        """Apply every due fault event (host-side, between ticks)."""
+        for ev in faults.due(self._fault_step):
+            if ev.kind == "tick_exception":
+                raise faults_lib.InjectedFault(
+                    f"injected tick exception at step {self._fault_step}")
+            if ev.kind == "hang":
+                time.sleep(ev.hang_s)
+            elif ev.kind == "nan_poison":
+                self.cache = faults_lib.poison_cache(self.cache)
+                self._poison_pending = True
+            elif ev.kind == "ledger_corruption":
+                faults_lib.corrupt_pool_ledger(self.pool)
+
+    def health_check(self) -> Optional[str]:
+        """Sample the host-side slot-pool ledger invariants; returns a
+        reason string when the replica should be quarantined, ``None``
+        when healthy.  Reads only the host ledger mirror — no device
+        sync — so the fleet can afford it every tick."""
+        reason = pool_lib.invariant_violation(self.pool.state)
+        if reason is not None:
+            return f"slot-pool ledger: {reason}"
+        return None
+
+    def adopt(self, req: Request) -> bool:
+        """Adopt an in-flight request drained from a quarantined sibling:
+        replay prompt + generated-so-far through the chunked-prefill
+        resume path (the same machinery preemption uses), token-exact by
+        greedy determinism — the replayed pending token is cross-checked
+        in ``_emit_row`` and any divergence counts in
+        ``migrate_replay_mismatches``.  Returns False (without side
+        effects) when this engine has no capacity right now."""
+        if not self._can_preempt:
+            raise RuntimeError(
+                "migration needs the chunked-prefill resume path: "
+                "construct the engine with chunked=True")
+        slot = self.pool.rent()
+        if slot is None:
+            return False
+        stream, max_new_eff, drop = self._resume_stream(req)
+        job = _PrefillJob(req=req, max_new_eff=max_new_eff,
+                          stream=stream, drop_first=drop, migrated=True)
+        if self.layout is not None:
+            plan = self._plan_chain(stream, len(stream) + self._offset,
+                                    max_new_eff, rent_now=False)
+            if plan is None:
+                self.pool.release(slot)
+                return False
+            self._commit_plan_chunked(slot, plan)
+            job.cursor = min(plan.n_shared * self.layout.block_size,
+                             len(stream) - 1)
+            job.registered = plan.n_shared
+        self.cache["pos"] = self.cache["pos"].at[slot].set(job.cursor)
+        req.slot = slot
+        self.active[slot] = req
+        self._jobs[slot] = job
+        self.pool.set_phase(slot, pool_lib.PHASE_PREFILL)
+        self._admit_seq += 1
+        self._slot_seq[slot] = self._admit_seq
+        self._admit_wall[req.rid] = time.perf_counter()
+        self.migrations_in += 1
+        return True
+
+    def run_to_completion(self, requests: list[Request], max_ticks=10_000,
+                          max_wall_s: Optional[float] = None):
         """Continuous batching: admit whenever slots free up, decode in
         device-resident chunks.  Returns (done, device decode ticks).
 
@@ -2200,10 +2383,13 @@ class ServingEngine:
         requests still pending or active — the pre-fix behavior silently
         returned only the finished subset, so a too-small budget looked
         like a successful (shorter) run.  Partial outputs stay on the
-        undrained ``Request`` objects for inspection."""
+        undrained ``Request`` objects for inspection.  ``max_wall_s``
+        bounds host wall clock the same way (a hung tick burns no device
+        ticks, so ``max_ticks`` alone cannot catch it)."""
         pending = list(requests)
         done = []
         start_ticks = self.device_ticks
+        t_start = time.perf_counter()
         while (pending or self.active or self._parked
                or self._finished_instant) and \
                 self.device_ticks - start_ticks < max_ticks:
@@ -2215,6 +2401,14 @@ class ServingEngine:
                     raise RuntimeError(self._stuck_report(pending))
                 break
             done += self.step()
+            if max_wall_s is not None \
+                    and time.perf_counter() - t_start > max_wall_s:
+                raise RuntimeError(self._stuck_report(
+                    pending,
+                    reason=f"max_wall_s={max_wall_s} exceeded with "
+                           f"{len(self.active)} active, "
+                           f"{len(self._parked)} preempted and "
+                           f"{len(pending)} pending requests undrained"))
         if self._finished_instant:     # complete, just not yet reported
             done += self._finished_instant
             self._finished_instant = []
@@ -2229,14 +2423,27 @@ class ServingEngine:
                 f"outputs remain on the Request objects")
         return done, self.device_ticks - start_ticks
 
-    def _stuck_report(self, pending: list[Request]) -> str:
+    def _stuck_report(self, pending: list[Request],
+                      reason: Optional[str] = None) -> str:
         """Per-request block demand vs pool capacity for the stuck-pool
-        error: a bare stuck-request count makes over-commit failures
-        (and any undersized pool) undiagnosable."""
-        lines = [f"{len(pending)} requests stuck: pool has no rentable "
+        error — plus per-request in-flight ages and the replica's health
+        state, so a wall-clock timeout or a quarantine is diagnosable
+        from the message alone."""
+        lines = [reason if reason is not None else
+                 f"{len(pending)} requests stuck: pool has no rentable "
                  f"slot/blocks and no active request to drain"]
         lines.append(f"slot pool: {self.pool.n} slots, "
                      f"{self.pool.available} available")
+        now = time.perf_counter()
+        in_flight = list(self.active.values()) + list(self._parked.values())
+        for r in in_flight[:8]:
+            age = now - self._admit_wall.get(r.rid, now)
+            lines.append(f"  in flight rid {r.rid}: {len(r.out)} tokens "
+                         f"out, {age:.2f}s since admission")
+        if len(in_flight) > 8:
+            lines.append(f"  ... and {len(in_flight) - 8} more in flight")
+        lines.append(f"health: {self.health_check() or 'ok'}; "
+                     f"last tick {self.last_tick_wall_s * 1e3:.1f}ms")
         if self.layout is not None:
             bs = self.layout.block_size
             free = int(np.sum(self._ref_host == 0))
@@ -2275,6 +2482,7 @@ class ServingEngine:
         self.spec_drafted = self.spec_accepted = 0
         self.preemptions = self.resumes = 0
         self.preempted_tokens = self.preempt_replay_mismatches = 0
+        self.migrations_in = self.migrate_replay_mismatches = 0
         self.occ_ticks = self.occ_slot_ticks = 0
         if self.layout is not None:
             # the block high-water mark restarts from what is in use now
@@ -2336,6 +2544,9 @@ class ServingEngine:
             "preempted_tokens_recomputed": int(self.preempted_tokens),
             "preempt_replay_mismatches":
                 int(self.preempt_replay_mismatches),
+            "migrations_in": int(self.migrations_in),
+            "migrate_replay_mismatches":
+                int(self.migrate_replay_mismatches),
         }
 
     def kv_stats(self) -> dict:

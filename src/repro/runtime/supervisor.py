@@ -10,6 +10,7 @@ dry-run prints it, the roofline reads it.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Optional
 
 import jax
@@ -18,12 +19,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.qt import QT, MassMode, QTGraph
+from repro.core.supervisor import CorePool
 from repro.launch import inputs as inputs_lib
 from repro.models import model as model_lib
 from repro.optim import adamw
 from repro.runtime import pool as pool_lib
 from repro.runtime import serve as serve_lib
 from repro.runtime import train as train_lib
+from repro.runtime.elastic import Event
 from repro.runtime.sharding import ShardingRules, fleet_submeshes, serve_mesh
 
 
@@ -525,16 +528,42 @@ class FleetSupervisor:
     ledger sums delegated to :func:`repro.runtime.pool.merge_stats` and
     :func:`repro.runtime.paging.merge_block_stats` (disjoint pools: used,
     peaks and capacities add).
+
+    **Fault tolerance**: each replica is a rentable core of a fleet-level
+    `CorePool` (the paper's SV discipline one level up, same as
+    `runtime/elastic.ElasticManager` over training hosts).  Every fleet
+    step watches each replica three ways — a raised tick (exceptions
+    propagate out of ``engine.step()``), a wall-clock deadline
+    (``tick_deadline_s``), and a sampled slot-pool ledger invariant check
+    — and a failed check **quarantines** the replica: its pool unit is
+    disabled, its in-flight requests are drained into a migration queue
+    and **replayed token-exactly** (prompt + generated-so-far through the
+    chunked-prefill resume path, cross-checked like preemption resume)
+    on healthy replicas, with exponential backoff, dead-lettering after
+    ``max_migration_attempts`` failures, and re-admission on
+    :meth:`recover`.  Degradation is graceful: a fleet that loses
+    replicas sheds throughput, never correctness.
     """
 
     def __init__(self, params, cfg: ArchConfig, *,
                  n_replicas: Optional[int] = None, model: int = 1,
                  devices: Optional[list] = None,
-                 mesh: Optional[Mesh] = None, **engine_kw):
+                 mesh: Optional[Mesh] = None,
+                 tick_deadline_s: Optional[float] = None,
+                 ledger_check_every: int = 1,
+                 max_migration_attempts: int = 3,
+                 migration_backoff_steps: int = 2, **engine_kw):
         """``mesh`` (a (data, model) grid) or ``n_replicas``/``model``
         pick the fleet shape; without either, one replica per available
         device.  ``engine_kw`` is forwarded to every `ServingEngine`
-        (n_slots, max_seq, paged, speculative, overcommit, ...)."""
+        (n_slots, max_seq, paged, speculative, overcommit, ...).
+
+        ``tick_deadline_s`` arms the per-tick watchdog (leave ``None``
+        until every replica's tick families are compiled — a first-call
+        jit compile takes seconds and would trip it).
+        ``ledger_check_every`` samples `ServingEngine.health_check` every
+        N fleet steps; migration retries back off exponentially from
+        ``migration_backoff_steps`` fleet steps."""
         if mesh is not None:
             self.meshes = fleet_submeshes(mesh)
         else:
@@ -558,6 +587,25 @@ class FleetSupervisor:
             serve_lib.ServingEngine(params, cfg, mesh=m, **engine_kw)
             for m in self.meshes]
         self.routed = [0] * len(self.engines)
+        # replica health: the fleet's own rent/disable ledger (a replica
+        # is a core), plus the human-readable state the router reads
+        self._params, self._cfg = params, cfg
+        self._engine_kw = dict(engine_kw)
+        self.tick_deadline_s = tick_deadline_s
+        self.ledger_check_every = max(1, int(ledger_check_every))
+        self.max_migration_attempts = int(max_migration_attempts)
+        self.migration_backoff_steps = int(migration_backoff_steps)
+        self.replica_pool = CorePool(len(self.engines))
+        self._replica_units = self.replica_pool.rent_many(len(self.engines))
+        self.health = [{"state": "healthy", "reason": None}
+                       for _ in self.engines]
+        self.health_events: list[Event] = []
+        self._migration_queue: list[dict] = []
+        self.dead_letters: list[serve_lib.Request] = []
+        self.migrations = 0
+        self._fleet_steps = 0
+        self._retired_ticks = 0
+        self._finished_rescued: list[serve_lib.Request] = []
 
     @property
     def n_replicas(self) -> int:
@@ -567,8 +615,12 @@ class FleetSupervisor:
     def _busy(self, e: serve_lib.ServingEngine) -> bool:
         return bool(e.active or e._parked or e._finished_instant)
 
+    def healthy(self, i: int) -> bool:
+        return self.health[i]["state"] == "healthy"
+
     def route_order(self) -> list[int]:
-        """Replica indices in routing-preference order (see class doc)."""
+        """Replica indices in routing-preference order (see class doc);
+        quarantined replicas are not candidates."""
         loads = [e.load() for e in self.engines]
 
         def key(i):
@@ -579,7 +631,8 @@ class FleetSupervisor:
             return (not penalized, ld["free_slots"] > 0, blocks,
                     -self.routed[i])
 
-        return sorted(range(len(self.engines)), key=key, reverse=True)
+        return sorted((i for i in range(len(self.engines))
+                       if self.healthy(i)), key=key, reverse=True)
 
     def admit_many(self, pending: list[serve_lib.Request]) -> int:
         """Route-and-admit queued requests, head of queue first, until no
@@ -597,48 +650,252 @@ class FleetSupervisor:
                 break
         return n
 
+    # -- chaos & health ----------------------------------------------------
+    def arm_faults(self, plan) -> None:
+        """Arm a :class:`runtime.faults.FaultPlan` across the fleet: each
+        replica gets its slice of the schedule (engines with no events
+        stay entirely fault-free — their hooks remain dead code)."""
+        for i, e in enumerate(self.engines):
+            rf = plan.for_replica(i)
+            if rf:
+                e.arm_faults(rf)
+
+    def _quarantine(self, i: int, reason: str) -> None:
+        """Withdraw replica `i` (§4.1.2 'overheating'): disable its fleet
+        pool unit, drain its in-flight requests into the migration queue
+        (their host-side token histories are intact — the output tripwire
+        fires *before* a bad row can reach ``req.out``), and rescue any
+        finished-but-unreported requests.  The device state is abandoned;
+        :meth:`recover` rebuilds the engine from scratch."""
+        e = self.engines[i]
+        detail = reason
+        if e.layout is not None:
+            # post-quarantine diagnostic (materializes device state —
+            # fine here, the replica is already off the hot path)
+            from repro.runtime import paging
+            try:
+                block_reason = paging.invariant_violation(
+                    jax.device_get(e.bstate))
+            except Exception:
+                block_reason = None
+            if block_reason is not None:
+                detail += f"; block ledger: {block_reason}"
+        self.health[i] = {"state": "quarantined", "reason": detail,
+                          "since_step": self._fleet_steps}
+        self.replica_pool.disable(self._replica_units[i])
+        self.health_events.append(Event("quarantine", i, detail))
+        drained = list(e.active.values()) \
+            + [e._parked[s] for s in e._park_order]
+        for req in drained:
+            req.slot = None
+            self._migration_queue.append(
+                {"req": req, "attempts": 0, "due": self._fleet_steps})
+        self._finished_rescued += e._finished_instant
+        e._finished_instant = []
+        e.active.clear()
+        e._jobs.clear()
+        e._parked.clear()
+        e._park_order.clear()
+        e._need_first.clear()
+
+    def _drain_migrations(self) -> None:
+        """Adopt due queue entries on healthy replicas (routing order);
+        a failed attempt backs off exponentially, and after
+        ``max_migration_attempts`` the request is dead-lettered."""
+        if not self._migration_queue:
+            return
+        still: list[dict] = []
+        for item in self._migration_queue:
+            if item["due"] > self._fleet_steps:
+                still.append(item)
+                continue
+            req = item["req"]
+            adopted = False
+            had_capacity = False
+            for i in self.route_order():
+                e2 = self.engines[i]
+                if not e2._can_preempt:
+                    continue   # no resume path lowered: not a candidate
+                had_capacity = had_capacity or e2.pool.available > 0
+                try:
+                    adopted = e2.adopt(req)
+                except Exception as exc:  # adopting replica is sick too
+                    self._quarantine(i, f"adopt failed: {exc}")
+                    adopted = False
+                if adopted:
+                    self.routed[i] += 1
+                    self.migrations += 1
+                    self.health_events.append(Event(
+                        "migrate", i,
+                        f"rid {req.rid} (+{len(req.out)} tokens replayed)"))
+                    break
+            if not adopted:
+                if not had_capacity:
+                    # every healthy replica is simply full: wait for a
+                    # slot to drain — transient fullness is not a failed
+                    # migration, so it never burns an attempt (the run
+                    # loop's max_ticks / max_wall_s bound the wait)
+                    item["due"] = self._fleet_steps + 1
+                    still.append(item)
+                    continue
+                item["attempts"] += 1
+                if item["attempts"] >= self.max_migration_attempts:
+                    self.dead_letters.append(req)
+                    self.health_events.append(Event(
+                        "dead_letter", -1,
+                        f"rid {req.rid} after {item['attempts']} "
+                        f"failed migrations"))
+                else:
+                    item["due"] = self._fleet_steps \
+                        + self.migration_backoff_steps \
+                        * 2 ** (item["attempts"] - 1)
+                    still.append(item)
+        self._migration_queue = still
+
+    def recover(self, i: int) -> None:
+        """Re-admit a healed replica: re-enable its fleet pool unit and
+        rebuild its engine from scratch on the same submesh (the
+        quarantined device state is untrusted by construction).  The
+        router sees it immediately."""
+        if self.healthy(i):
+            return
+        self._retired_ticks += self.engines[i].device_ticks
+        self.replica_pool.enable(self._replica_units[i])
+        self.engines[i] = serve_lib.ServingEngine(
+            self._params, self._cfg, mesh=self.meshes[i], **self._engine_kw)
+        self.health[i] = {"state": "healthy", "reason": None}
+        self.health_events.append(Event("readmit", i,
+                                        "rebuilt and re-admitted"))
+
+    def fleet_health(self) -> dict:
+        """The fleet's health ledger, summarized for benches and tests."""
+        return {
+            "replicas": [dict(h) for h in self.health],
+            "healthy": sum(self.healthy(i)
+                           for i in range(len(self.engines))),
+            "migrations": int(self.migrations),
+            "migration_queue": len(self._migration_queue),
+            "dead_letters": sorted(r.rid for r in self.dead_letters),
+            "migrate_replay_mismatches":
+                sum(e.migrate_replay_mismatches for e in self.engines),
+            "events": [(ev.kind, ev.host, ev.detail)
+                       for ev in self.health_events],
+        }
+
     # -- driving -----------------------------------------------------------
     def step(self) -> list[serve_lib.Request]:
-        """One tick on every busy replica; returns finished requests."""
+        """One tick on every healthy busy replica — each tick bracketed
+        by the watchdog (exception / deadline / sampled ledger check) —
+        then one migration-queue drain.  Returns finished requests."""
+        self._fleet_steps += 1
         done: list[serve_lib.Request] = []
-        for e in self.engines:
-            if self._busy(e):
+        for i, e in enumerate(self.engines):
+            if not self.healthy(i) or not self._busy(e):
+                continue
+            t0 = time.perf_counter()
+            try:
                 done += e.step()
+            except Exception as exc:
+                self._quarantine(i, f"tick raised: {exc}")
+                continue
+            if self.tick_deadline_s is not None \
+                    and time.perf_counter() - t0 > self.tick_deadline_s:
+                self._quarantine(
+                    i, f"tick deadline exceeded "
+                       f"({time.perf_counter() - t0:.3f}s "
+                       f"> {self.tick_deadline_s}s)")
+                continue
+            if self._fleet_steps % self.ledger_check_every == 0:
+                reason = e.health_check()
+                if reason is not None:
+                    self._quarantine(i, reason)
+        self._drain_migrations()
+        if self._finished_rescued:
+            done += self._finished_rescued
+            self._finished_rescued = []
         return done
 
+    def _fleet_device_ticks(self) -> int:
+        return self._retired_ticks + sum(e.device_ticks
+                                         for e in self.engines)
+
     def run_to_completion(self, requests: list[serve_lib.Request],
-                          max_ticks: int = 10_000):
+                          max_ticks: int = 10_000,
+                          max_wall_s: Optional[float] = None):
         """Continuous batching across the fleet: route/admit whenever any
         replica has capacity, tick every busy replica.  Returns (done,
-        total device ticks) like `ServingEngine.run_to_completion`."""
+        total device ticks) like `ServingEngine.run_to_completion`.
+        ``max_wall_s`` bounds host wall clock (hung replicas burn no
+        device ticks).  With every replica quarantined, queued migrations
+        are dead-lettered rather than spun on forever — the fleet sheds
+        throughput, never correctness."""
         pending = list(requests)
         done: list[serve_lib.Request] = []
-        start = sum(e.device_ticks for e in self.engines)
+        start = self._fleet_device_ticks()
+        t_start = time.perf_counter()
 
         def ticks():
-            return sum(e.device_ticks for e in self.engines) - start
+            return self._fleet_device_ticks() - start
 
-        while pending or any(self._busy(e) for e in self.engines):
+        def busy_healthy():
+            return any(self.healthy(i) and self._busy(e)
+                       for i, e in enumerate(self.engines))
+
+        while pending or self._migration_queue or self._finished_rescued \
+                or busy_healthy():
             n = self.admit_many(pending)
             del pending[:n]
-            if not any(self._busy(e) for e in self.engines):
+            if self._migration_queue \
+                    and not any(self.healthy(i)
+                                for i in range(len(self.engines))):
+                for item in self._migration_queue:
+                    self.dead_letters.append(item["req"])
+                    self.health_events.append(Event(
+                        "dead_letter", -1,
+                        f"rid {item['req'].rid}: no healthy replica"))
+                self._migration_queue = []
+                continue
+            if not busy_healthy() and not self._migration_queue \
+                    and not self._finished_rescued:
                 if pending:
-                    raise RuntimeError(
-                        f"{len(pending)} requests stuck: no replica can "
-                        f"admit and none is draining; per-replica loads "
-                        f"{[e.load() for e in self.engines]}")
+                    raise RuntimeError(self._stuck_report(pending))
                 break
             done += self.step()
             if ticks() > max_ticks:
                 raise RuntimeError(
                     f"max_ticks={max_ticks} exhausted with "
                     f"{sum(len(e.active) for e in self.engines)} active "
-                    f"and {len(pending)} pending requests undrained")
+                    f"and {len(pending)} pending requests undrained\n"
+                    + self._stuck_report(pending))
+            if max_wall_s is not None \
+                    and time.perf_counter() - t_start > max_wall_s:
+                raise RuntimeError(
+                    f"max_wall_s={max_wall_s} exceeded\n"
+                    + self._stuck_report(pending))
         for e in self.engines:
             if e._finished_instant:
                 done += e._finished_instant
                 e._finished_instant = []
         return done, ticks()
+
+    def _stuck_report(self, pending: list[serve_lib.Request]) -> str:
+        """Fleet-level diagnosis: per-replica health + load, the
+        migration queue and the dead-letter ledger."""
+        lines = [f"{len(pending)} requests stuck: no healthy replica can "
+                 f"admit and none is draining"]
+        for i, e in enumerate(self.engines):
+            h = self.health[i]
+            state = h["state"] + (f" ({h['reason']})" if h["reason"]
+                                  else "")
+            lines.append(f"  replica {i}: {state}; load {e.load()}")
+        if self._migration_queue:
+            rids = [item["req"].rid for item in self._migration_queue]
+            lines.append(f"  migration queue: rids {rids}")
+        if self.dead_letters:
+            lines.append(
+                f"  dead letters: rids "
+                f"{sorted(r.rid for r in self.dead_letters)}")
+        return "\n".join(lines)
 
     # -- accounting --------------------------------------------------------
     def reset_stats(self) -> None:
@@ -683,6 +940,9 @@ class FleetSupervisor:
                 sum(p["preempted_tokens_recomputed"] for p in per),
             "preempt_replay_mismatches":
                 sum(p["preempt_replay_mismatches"] for p in per),
+            "migrations_in": sum(p["migrations_in"] for p in per),
+            "migrate_replay_mismatches":
+                sum(p["migrate_replay_mismatches"] for p in per),
         }
         return {"fleet": fleet, "per_replica": per}
 

@@ -1,10 +1,11 @@
-"""AST lint rules: host-sync, tracer-branch, kernel-oracle pairing."""
+"""AST lint rules: host-sync, tracer-branch, kernel-oracle, fault-hook."""
 from __future__ import annotations
 
 import os
 import textwrap
 
-from repro.analysis.lint import (lint_kernel_manifest, lint_repo,
+from repro.analysis.lint import (lint_fault_hooks_source,
+                                 lint_kernel_manifest, lint_repo,
                                  lint_tick_builder_source,
                                  lint_transition_source)
 
@@ -97,6 +98,68 @@ def test_branch_outside_builder_is_ignored():
             return 0
     """)
     assert not lint_tick_builder_source(src)
+
+
+# ---------------------------------------------------------------- L4 --
+def test_unguarded_fault_hook_fires():
+    # the known-bad shape: a hook that calls into the fault plan every
+    # tick regardless of whether one was armed
+    src = textwrap.dedent("""
+        class Engine:
+            def __init__(self):
+                self._faults = None
+            def arm_faults(self, faults):
+                self._faults = faults
+            def _step(self):
+                self._faults.due(0)
+    """)
+    bad = _violations(lint_fault_hooks_source(src))
+    assert bad
+    assert "_step" in bad[0].subject
+    assert "unguarded" in bad[0].message
+
+
+def test_guarded_fault_hook_is_clean():
+    src = textwrap.dedent("""
+        class Engine:
+            def __init__(self):
+                self._faults = None
+            def arm_faults(self, faults):
+                self._faults = faults
+            def _step(self):
+                if self._faults is not None:
+                    self._fire_faults(self._faults)
+    """)
+    assert not lint_fault_hooks_source(src)
+
+
+def test_fault_symbol_in_tick_builder_fires():
+    # chaos leaking into traced code: a builder's nested step function
+    # calling into the fault layer
+    src = textwrap.dedent("""
+        def build_decode_step(cfg):
+            def step(params, tok, cache):
+                tok = faults_lib.maybe_inject(tok)
+                return tok, cache
+            return step
+    """)
+    bad = _violations(lint_fault_hooks_source(src))
+    assert bad
+    assert "build_decode_step" in bad[0].subject
+    assert "traced" in bad[0].message
+
+
+def test_default_is_not_a_fault_name():
+    # "default" contains "fault" — the matcher must not trip on it
+    src = textwrap.dedent("""
+        def build_decode_step(cfg, default_mask=None):
+            def step(params, tok):
+                if default_mask is None:
+                    return tok
+                return tok * default_mask
+            return step
+    """)
+    assert not lint_fault_hooks_source(src)
 
 
 # ---------------------------------------------------------------- L2 --

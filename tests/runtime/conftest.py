@@ -135,6 +135,7 @@ class ServeHarness:
         assert eng.pool.used == 0
         assert not eng._parked and not eng._jobs
         assert eng.preempt_replay_mismatches == 0
+        assert eng.migrate_replay_mismatches == 0
         if eng.layout is not None:
             assert int(paging.blocks_in_use(eng.bstate)) == 0
             paging.check_invariants(eng.bstate, eng.cache["block_tables"])
@@ -143,3 +144,26 @@ class ServeHarness:
 @pytest.fixture(scope="session")
 def serve_harness():
     return ServeHarness
+
+
+@pytest.fixture
+def assert_health_events():
+    """The common health-event checker shared by the *training* fleet
+    (runtime/elastic.ElasticManager) and the *serving* fleet
+    (runtime/supervisor.FleetSupervisor): every emitted event must be
+    an ``elastic.Event`` drawn from the single ``EVENT_KINDS``
+    vocabulary — the two fault paths cannot drift apart.  Returns the
+    kind sequence so tests can assert ordering."""
+    from repro.runtime import elastic
+
+    def check(events, expect_kinds=()):
+        for ev in events:
+            assert isinstance(ev, elastic.Event), ev
+            assert ev.kind in elastic.EVENT_KINDS, ev
+            assert isinstance(ev.host, int), ev
+        kinds = [ev.kind for ev in events]
+        for k in expect_kinds:
+            assert k in kinds, (k, kinds)
+        return kinds
+
+    return check

@@ -194,6 +194,107 @@ def test_overcommit_rejects_unsupported_families(serve_harness):
                       overcommit=True)
 
 
+# -- chaos cells -------------------------------------------------------------
+#
+# The conformance contract under seeded faults: a FaultPlan injects a
+# tick exception / NaN-poisoned cache / hung tick / forged pool-ledger
+# bit into replica 0 of a 2-replica fleet mid-run, the fleet
+# quarantines the replica and migrates its in-flight requests to the
+# healthy one by replaying prompt + generated-so-far through chunked
+# prefill — and every surviving request must stay bit-exact against the
+# same uncontended single-engine oracle the fault-free cells use.
+# Chaos engines are chunked (chunked_prefill=True), so a plain warmup
+# compiles the solo/mixed/decode families — required before arming the
+# hang cell's tick deadline, which must never fire on a compile.
+
+CHAOS_MATRIX = [
+    ("paged", "tick_exception"),
+    ("paged", "nan_poison"),
+    ("paged", "ledger_corruption"),
+    ("paged", "hang"),
+    ("contiguous", "tick_exception"),
+]
+
+
+@pytest.mark.parametrize(
+    "layout,kind", CHAOS_MATRIX,
+    ids=["chaos-" + "-".join(cell) for cell in CHAOS_MATRIX])
+def test_chaos_cells_token_exact(serve_setup, serve_harness, oracle,
+                                 layout, kind):
+    import jax
+
+    from repro.runtime import faults
+    from repro.runtime.supervisor import FleetSupervisor
+    cfg, params = serve_setup
+    kw = dict(n_slots=N_SLOTS, max_seq=MAX_SEQ, chunk=CHUNK,
+              chunked_prefill=True, prefill_chunk_tokens=4,
+              validate_outputs=True)
+    if layout == "paged":
+        kw.update(paged=True, block_size=8, n_blocks=BIG_POOL)
+    fleet = FleetSupervisor(params, cfg, n_replicas=2, model=1,
+                            devices=jax.devices()[:1], **kw)
+    if kind == "hang":
+        for e in fleet.engines:     # compile every family, then arm
+            e.run_to_completion(serve_harness.pressure_requests(3,
+                                                               seed=99))
+            e.reset_stats()
+        fleet.tick_deadline_s = 0.5
+        plan = faults.FaultPlan([faults.FaultEvent(
+            kind="hang", tick=2, replica=0, hang_s=1.2)])
+    else:
+        plan = faults.FaultPlan([faults.FaultEvent(
+            kind=kind, tick=3, replica=0)])
+    fleet.arm_faults(plan)
+
+    done, _ = fleet.run_to_completion(serve_harness.pressure_requests(),
+                                      max_wall_s=120)
+    got = {r.rid: r.out for r in done}
+    assert got == oracle, (layout, kind)        # survivors bit-exact
+    fh = fleet.fleet_health()
+    assert fh["replicas"][0]["state"] == "quarantined", fh
+    assert fh["healthy"] == 1
+    assert fh["migrations"] >= 1                # work really moved
+    assert fh["dead_letters"] == []             # nothing shed
+    assert fh["migrate_replay_mismatches"] == 0
+    if kind == "hang":
+        assert "deadline" in fh["replicas"][0]["reason"]
+    serve_harness.assert_drained(fleet.engines[1])
+
+
+def test_chaos_tripwire_attributes_slot_and_tick(serve_setup,
+                                                 serve_harness):
+    """The `validate_outputs` tripwire reads only the already-synced
+    emitted buffer (no new device pull) and names the slot/rid/tick in
+    its raise, so a NaN'd cache is attributable, not a silent garbage
+    stream."""
+    from repro.runtime import faults
+    from repro.runtime.serve import OutputValidationError
+    cfg, params = serve_setup
+    eng = ServingEngine(params, cfg, validate_outputs=True,
+                        n_slots=N_SLOTS, max_seq=MAX_SEQ, chunk=CHUNK,
+                        paged=True, block_size=8, n_blocks=BIG_POOL)
+    eng.arm_faults(faults.FaultPlan([faults.FaultEvent(
+        kind="nan_poison", tick=2)]).for_replica(0))
+    with pytest.raises(OutputValidationError, match=r"slot \d+"):
+        eng.run_to_completion(serve_harness.pressure_requests(3))
+
+
+def test_chaos_max_wall_s_names_inflight_requests(serve_setup,
+                                                  serve_harness):
+    """`run_to_completion(max_wall_s=...)` bounds host wall clock (hung
+    ticks burn no device ticks, so max_ticks alone cannot catch them)
+    and the stuck report names each in-flight request with its age and
+    the engine's health."""
+    cfg, params = serve_setup
+    eng = ServingEngine(params, cfg, n_slots=N_SLOTS, max_seq=MAX_SEQ,
+                        chunk=CHUNK)
+    with pytest.raises(RuntimeError, match="max_wall_s") as exc:
+        eng.run_to_completion(serve_harness.pressure_requests(2),
+                              max_wall_s=1e-4)
+    assert "in flight rid" in str(exc.value)
+    assert "health:" in str(exc.value)
+
+
 # -- mesh-sharded cells ------------------------------------------------------
 #
 # The same contract one level up: a tensor-parallel engine (heads and KV

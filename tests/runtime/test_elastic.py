@@ -1,0 +1,96 @@
+"""Elastic fleet manager: the fail/slow/swap/relower ladder.
+
+The training fleet's fault path mirrors the serving fleet's quarantine
+path (test_fleet.py) through one shared health-event vocabulary — both
+suites validate their event logs with the common ``assert_health_events``
+fixture, so the two managers cannot drift apart.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.runtime import elastic
+from repro.runtime.elastic import CHIPS_PER_HOST, ElasticManager, Event
+
+
+def _mgr(n_hosts, spares=2, on_relower=None):
+    m = ElasticManager(n_hosts, spares=spares, on_relower=on_relower)
+    m.check_invariants()
+    return m
+
+
+def test_init_rents_active_fleet_and_preallocates_spares():
+    m = _mgr(130, spares=2)
+    assert len(m.active) == 128
+    assert m.healthy_chips == 128 * CHIPS_PER_HOST == 512
+    assert m.level == 0 and m.required_level() == 0
+    assert m.events == []
+
+
+def test_fail_with_spare_swaps_without_relower(assert_health_events):
+    m = _mgr(130, spares=2)
+    victim = m.active[0]
+    ev = m.fail(victim)
+    assert ev.kind == "swap"
+    assert m.level == 0                      # mesh shape unchanged
+    assert m.healthy_chips == 512            # spare restored capacity
+    assert victim not in m.active
+    kinds = assert_health_events(m.events, expect_kinds=("fail", "swap"))
+    assert kinds == ["fail", "swap"]
+    m.check_invariants()
+
+
+def test_spares_exhausted_relowers_the_ladder(assert_health_events):
+    levels = []
+    m = _mgr(130, spares=2, on_relower=levels.append)
+    for _ in range(2):                       # burn both spares
+        m.fail(m.active[0])
+    assert m.level == 0 and levels == []
+    ev = m.fail(m.active[0])                 # 125 hosts = 500 chips
+    assert ev.kind == "relower"
+    assert m.level == 1 and levels == [1]
+    assert_health_events(m.events,
+                         expect_kinds=("fail", "swap", "relower"))
+    m.check_invariants()
+
+
+def test_straggler_is_benched_like_a_failure(assert_health_events):
+    m = _mgr(130, spares=2)
+    slow = m.active[3]
+    m.straggler(slow)
+    assert slow not in m.active
+    assert m.healthy_chips == 512            # hot-swapped, no relower
+    kinds = assert_health_events(m.events, expect_kinds=("slow",))
+    assert kinds == ["fail", "swap", "slow"]
+    m.check_invariants()
+
+
+def test_recover_rejoins_as_spare(assert_health_events):
+    m = _mgr(130, spares=2)
+    victim = m.active[0]
+    m.fail(victim)                           # burns spare 1
+    m.fail(m.active[0])                      # burns spare 2
+    m.recover(victim)                        # repaired host -> spare pool
+    ev = m.fail(m.active[0])                 # next loss swaps it back in
+    assert ev.kind == "swap"
+    assert m.level == 0 and m.healthy_chips == 512
+    assert_health_events(m.events, expect_kinds=("recover", "swap"))
+    m.check_invariants()
+
+
+def test_below_minimum_capacity_raises():
+    m = _mgr(17, spares=1)                   # 16 active = 64 chips (L4)
+    assert m.required_level() == len(elastic.LADDER) - 1
+    m.fail(m.active[0])                      # spare keeps it at 64
+    with pytest.raises(RuntimeError, match="below minimum"):
+        m.fail(m.active[0])                  # 60 chips: off the ladder
+    m.check_invariants()
+
+
+def test_event_vocabulary_is_closed():
+    with pytest.raises(ValueError, match="unknown health-event kind"):
+        Event("meltdown", 0)
+    # both fleets' kinds live in the one vocabulary
+    assert {"fail", "swap", "relower"} < elastic.EVENT_KINDS
+    assert {"quarantine", "migrate", "dead_letter",
+            "readmit"} < elastic.EVENT_KINDS

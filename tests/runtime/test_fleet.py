@@ -165,3 +165,70 @@ def test_fleet_insufficient_devices_for_model_parallel(serve_setup):
     with pytest.raises(ValueError, match="devices"):
         FleetSupervisor(params, cfg, n_replicas=max(
             2, jax.device_count()), model=2, n_slots=2, max_seq=32)
+
+
+# -- chaos: quarantine / migration / re-admission ---------------------------
+
+def test_quarantine_heal_readmit_round_trip(serve_setup, serve_harness,
+                                            assert_health_events):
+    """The full fault lifecycle: a mid-run tick exception quarantines
+    replica 0, its in-flight requests migrate token-exactly, `recover`
+    re-admits the replica, and the router sends it work again."""
+    from repro.runtime import faults
+
+    cfg, params = serve_setup
+    want, _ = _oracle(serve_setup, serve_harness, paged=True)
+    fleet = FleetSupervisor(params, cfg, n_replicas=2, model=1,
+                            devices=jax.devices()[:1],
+                            validate_outputs=True, **_kw(True))
+    fleet.arm_faults(faults.FaultPlan(
+        [faults.FaultEvent(kind="tick_exception", tick=3, replica=0)]))
+    got = _run_fleet(fleet, serve_harness.pressure_requests())
+
+    assert got == want                       # survivors bit-exact
+    fh = fleet.fleet_health()
+    assert fh["replicas"][0]["state"] == "quarantined"
+    assert fh["healthy"] == 1
+    assert fh["migrations"] >= 1
+    assert fh["dead_letters"] == []
+    assert fh["migrate_replay_mismatches"] == 0
+    assert_health_events(fleet.health_events,
+                         expect_kinds=("quarantine", "migrate"))
+
+    # heal: replica 0 is rebuilt, re-enabled, and routed to again
+    fleet.recover(0)
+    assert fleet.fleet_health()["replicas"][0]["state"] == "healthy"
+    r0 = fleet.routed[0]
+    got2 = _run_fleet(fleet, serve_harness.pressure_requests(4, seed=7))
+    assert fleet.routed[0] > r0              # router trusts it again
+    assert {rid: len(t) for rid, t in got2.items()}  # all served
+    kinds = assert_health_events(
+        fleet.health_events,
+        expect_kinds=("quarantine", "migrate", "readmit"))
+    assert kinds.index("readmit") > kinds.index("quarantine")
+    serve_harness.assert_drained(fleet.engines[1])
+
+
+def test_all_replicas_down_dead_letters_not_hangs(serve_setup,
+                                                  serve_harness,
+                                                  assert_health_events):
+    """Graceful degradation: with every replica quarantined, queued
+    migrations are dead-lettered (shed throughput) instead of spinning
+    the drain loop forever (losing liveness) or fabricating tokens
+    (losing correctness)."""
+    from repro.runtime import faults
+
+    cfg, params = serve_setup
+    fleet = FleetSupervisor(params, cfg, n_replicas=1, model=1,
+                            devices=jax.devices()[:1], **_kw(True))
+    fleet.arm_faults(faults.FaultPlan(
+        [faults.FaultEvent(kind="tick_exception", tick=3, replica=0)]))
+    reqs = serve_harness.pressure_requests(3)   # all admit before tick 3
+    done, _ = fleet.run_to_completion(reqs)
+
+    fh = fleet.fleet_health()
+    assert fh["healthy"] == 0
+    assert len(done) + len(fh["dead_letters"]) == len(reqs)
+    assert fh["dead_letters"]                   # something was shed
+    assert_health_events(fleet.health_events,
+                         expect_kinds=("quarantine", "dead_letter"))
