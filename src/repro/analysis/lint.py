@@ -1,6 +1,6 @@
 """AST-level repo lint: the rules a reviewer used to enforce by memory.
 
-Four rules, all specific to this codebase's discipline:
+Five rules, all specific to this codebase's discipline:
 
 * **L1 host-sync-in-transition** — the pure transition modules
   (``runtime/pool.py``, ``runtime/paging.py``, ``runtime/draft.py``)
@@ -28,6 +28,12 @@ Four rules, all specific to this codebase's discipline:
   lexically inside an ``if`` whose test mentions ``_faults``, so a
   never-armed engine takes exactly one pointer-is-None branch per tick
   and zero fault-layer calls.
+* **L5 tier-host-side** — ``Request.tier`` is host-side scheduling
+  metadata: any ``.tier`` attribute read inside a tick builder
+  (``serve.build_*``) would bake the scheduling class into compiled
+  code, breaking the tiered engine's token-exactness-by-construction
+  guarantee (and adding a retrace axis).  The rule bans the attribute
+  from builders outright.
 
 Every rule takes source text, so the known-bad fixtures in
 ``tests/analysis`` feed synthetic modules straight in.
@@ -235,6 +241,30 @@ def lint_fault_hooks_source(src: str, module_name: str = "serve.py",
     return findings
 
 
+def lint_tier_reads_source(src: str, module_name: str = "serve.py"
+                           ) -> List[Finding]:
+    """L5 over one module's source: no ``.tier`` attribute access
+    anywhere under a ``build_*`` tick builder.  The scheduling class is
+    read only by the host-side admission controller / router — a traced
+    tick that branched on it would compile the policy into the program
+    (and silently fold it at trace time, exactly the L3 failure mode)."""
+    tree = ast.parse(src)
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.FunctionDef)
+                and node.name.startswith("build_")):
+            continue
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Attribute) and sub.attr == "tier":
+                findings.append(violation(
+                    "lint/tier-host-side", f"{module_name}:{node.name}",
+                    f"`.tier` read at line {sub.lineno} inside a tick "
+                    f"builder — Request.tier is host-side scheduling "
+                    f"metadata and must never reach traced code (keep "
+                    f"tier policy in the admission controller)"))
+    return findings
+
+
 def _repo_root() -> str:
     # src/repro/analysis/lint.py -> repo root is three dirs up from src
     here = os.path.dirname(os.path.abspath(__file__))
@@ -293,7 +323,7 @@ def lint_kernel_manifest(root: Optional[str] = None) -> List[Finding]:
 
 
 def lint_repo(root: Optional[str] = None) -> List[Finding]:
-    """All four rules over the working tree."""
+    """All five rules over the working tree."""
     root = root or _repo_root()
     rdir = os.path.join(root, "src", "repro", "runtime")
     findings: List[Finding] = []
@@ -304,6 +334,7 @@ def lint_repo(root: Optional[str] = None) -> List[Finding]:
         serve_src = fh.read()
     findings.extend(lint_tick_builder_source(serve_src, "serve.py"))
     findings.extend(lint_fault_hooks_source(serve_src, "serve.py"))
+    findings.extend(lint_tier_reads_source(serve_src, "serve.py"))
     with open(os.path.join(rdir, "supervisor.py")) as fh:
         findings.extend(lint_fault_hooks_source(fh.read(), "supervisor.py"))
     findings.extend(lint_kernel_manifest(root))
@@ -316,7 +347,7 @@ def main(argv=None) -> int:
     import argparse
     parser = argparse.ArgumentParser(
         description="repo AST lint (host-sync / kernel-oracle / "
-                    "tracer-branch / fault-hook rules)")
+                    "tracer-branch / fault-hook / tier-host-side rules)")
     parser.add_argument("--root", default=None,
                         help="repo root (default: derived from __file__)")
     args = parser.parse_args(argv)

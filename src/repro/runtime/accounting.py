@@ -14,13 +14,20 @@ accounting:
   trip count parsed from the loop condition.  Numbers are PER-DEVICE wire
   bytes (the module is post-partitioning).  ``conditional`` branches take
   the max (conservative for zamba2's every-6th shared block).
+* :class:`TierAccounting` — per-tier latency SLO accounting for the async
+  request frontier (``ServingEngine.submit``/``poll``): TTFT from submit
+  to first emitted token and inter-token gaps per request, aggregated
+  into per-tier p50/p99.  Entirely host-side — it watches ``len(req.out)``
+  transitions at the per-chunk sync the engine already pays for, so the
+  SLO ledger adds zero device syncs.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import re
-from typing import Any
+import time
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -238,3 +245,102 @@ def hlo_collectives(hlo_text: str) -> dict:
     return {"bytes": dict(acc), "counts": dict(counts),
             "total_bytes": float(sum(acc.values())),
             "top": entries[:20]}
+
+
+# ---------------------------------------------------------------------------
+# per-tier TTFT / inter-token SLO accounting (async request frontier)
+# ---------------------------------------------------------------------------
+
+TIERS = ("latency", "throughput")
+
+
+@dataclasses.dataclass
+class _RequestClock:
+    """One request's latency ledger on the frontier."""
+
+    tier: str
+    submit_t: float
+    ttft_s: Optional[float] = None     # submit -> first emitted token
+    last_t: Optional[float] = None     # last time the output grew
+    n_out: int = 0
+    gaps: List[float] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class TierAccounting:
+    """Per-tier TTFT and inter-token SLOs over the async frontier.
+
+    ``arrive`` stamps a request's submit time; ``observe`` is called at
+    every host sync with the request's current output length — the first
+    growth records TTFT, and a growth of ``k`` tokens after a gap of
+    ``dt`` records ``k`` inter-token intervals of ``dt / k`` (a chunked
+    tick delivers several tokens per sync; attributing the whole gap to
+    the last one would overstate p99 by the chunk width).  All clocks are
+    host wall time; pass ``now`` explicitly for deterministic tests.
+
+    The tier is pure host-side scheduling metadata (``Request.tier``):
+    nothing here ever reaches a traced tick, which is what keeps the
+    tiered engine token-exact vs the untiered oracle by construction.
+    """
+
+    def __init__(self):
+        self._clocks: Dict[int, _RequestClock] = {}
+
+    def __contains__(self, rid: int) -> bool:
+        return rid in self._clocks
+
+    def __len__(self) -> int:
+        return len(self._clocks)
+
+    def arrive(self, rid: int, tier: str,
+               now: Optional[float] = None) -> None:
+        if tier not in TIERS:
+            raise ValueError(f"request {rid}: unknown tier {tier!r} "
+                             f"(expected one of {TIERS})")
+        self._clocks[rid] = _RequestClock(
+            tier=tier, submit_t=time.perf_counter() if now is None else now)
+
+    def observe(self, rid: int, n_out: int,
+                now: Optional[float] = None) -> None:
+        clk = self._clocks.get(rid)
+        if clk is None or clk.done:
+            return
+        k = n_out - clk.n_out
+        if k <= 0:
+            return
+        t = time.perf_counter() if now is None else now
+        if clk.ttft_s is None:
+            clk.ttft_s = t - clk.submit_t
+            k -= 1                      # the first token is TTFT, not a gap
+            clk.last_t = t              # same-sync siblings get zero gaps
+        if k > 0 and clk.last_t is not None:
+            clk.gaps.extend([(t - clk.last_t) / k] * k)
+        clk.last_t = t
+        clk.n_out = n_out
+
+    def finish(self, rid: int) -> None:
+        clk = self._clocks.get(rid)
+        if clk is not None:
+            clk.done = True
+
+    @staticmethod
+    def _pct(xs: List[float], q: float) -> Optional[float]:
+        return float(np.percentile(np.asarray(xs), q)) if xs else None
+
+    def report(self) -> dict:
+        """Per-tier SLO summary over every tracked request (in-flight
+        requests contribute what they have measured so far)."""
+        out: dict = {}
+        for tier in TIERS:
+            clocks = [c for c in self._clocks.values() if c.tier == tier]
+            ttfts = [c.ttft_s for c in clocks if c.ttft_s is not None]
+            gaps = [g for c in clocks for g in c.gaps]
+            out[tier] = {
+                "n": len(clocks),
+                "finished": sum(c.done for c in clocks),
+                "ttft_p50": self._pct(ttfts, 50),
+                "ttft_p99": self._pct(ttfts, 99),
+                "inter_token_p50": self._pct(gaps, 50),
+                "inter_token_p99": self._pct(gaps, 99),
+            }
+        return out

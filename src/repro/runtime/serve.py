@@ -128,6 +128,7 @@ from repro.runtime import draft as draft_lib
 from repro.runtime import faults as faults_lib
 from repro.runtime import paging
 from repro.runtime import pool as pool_lib
+from repro.runtime.accounting import TierAccounting
 from repro.runtime.sharding import ShardingRules, use_rules
 
 NO_TOKEN = -1          # emitted-buffer sentinel: slot idle this iteration
@@ -951,6 +952,12 @@ class Request:
     max_new: int = 16
     out: list = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
+    # scheduling class — host-side metadata ONLY (the lint/tier-host-side
+    # rule proves no traced tick ever reads it, which is what keeps the
+    # tiered engine token-exact vs the untiered oracle by construction):
+    # "latency" admits ahead of queue order and may displace
+    # throughput-tier victims; "throughput" is the default class
+    tier: str = "throughput"
 
 
 def _pow2_bucket(n: int, cap: int) -> int:
@@ -1266,6 +1273,18 @@ class ServingEngine:
         self._slot_seq: dict[int, int] = {}
         self._pressure = False
         self._evicted_recently = False
+        # async request frontier (priority/SLA tiers): submit() enqueues
+        # arrivals without blocking, _admit_frontier() drains them
+        # tier-aware between ticks (latency-tier heads jump the queue and
+        # may displace throughput-tier victims through preempt()), and
+        # poll() surfaces completions.  Displaced victims queue here for
+        # replay re-admission over the fleet-migration resume path.
+        self._frontier: list[Request] = []
+        self._displaced: list[Request] = []
+        self._completed: list[Request] = []
+        self._frontier_rids: set[int] = set()
+        self.displacements = 0
+        self.sla = TierAccounting()
         self.preemptions = 0
         self.resumes = 0
         self.preempted_tokens = 0
@@ -2064,7 +2083,24 @@ class ServingEngine:
         shortfall) evicts one victim at the sync."""
         finished: list[Request] = []
         if self._finished_instant:
+            # drained optimistically; a raise below restores them so the
+            # fleet's quarantine rescue still delivers them exactly once
             finished, self._finished_instant = self._finished_instant, []
+        try:
+            finished = finished + self._tick()
+        except BaseException:
+            self._finished_instant = finished + self._finished_instant
+            raise
+        if self._frontier_rids:
+            self._frontier_epilogue(finished)
+        return finished
+
+    def _tick(self) -> list[Request]:
+        """One supervised tick: frontier admission, parked resume, the
+        jitted device step, then over-commit pressure relief."""
+        finished: list[Request] = []
+        if self._frontier or self._displaced:
+            self._admit_frontier()
         if self._parked:
             self._resume_parked(force=not self.active)
         if not self.active:
@@ -2184,15 +2220,20 @@ class ServingEngine:
         self._tables_host[slot] = -1
 
     def _pick_victim(self) -> Optional[int]:
-        """The eviction policy: fewest tokens generated first, ties
-        broken toward the latest admission (LIFO under equal progress).
-        The last running slot is never evicted — the maximal-progress
-        request always retires and frees its chain, which is what makes
-        over-commit terminate instead of thrash."""
+        """The eviction policy: throughput tier before latency tier
+        (otherwise pressure eviction would immediately claw back the
+        slot a latency arrival just displaced for — on an untiered
+        stream the tier key is constant and the policy is unchanged),
+        then fewest tokens generated, ties broken toward the latest
+        admission (LIFO under equal progress).  The last running slot
+        is never evicted — the maximal-progress request always retires
+        and frees its chain, which is what makes over-commit terminate
+        instead of thrash."""
         if len(self.active) <= 1:
             return None
         return min(self.active,
-                   key=lambda s: (len(self.active[s].out),
+                   key=lambda s: (self.active[s].tier == "latency",
+                                  len(self.active[s].out),
                                   -self._slot_seq.get(s, 0)))
 
     def preempt(self, slot: Optional[int] = None) -> Optional[int]:
@@ -2335,24 +2376,21 @@ class ServingEngine:
             return f"slot-pool ledger: {reason}"
         return None
 
-    def adopt(self, req: Request) -> bool:
-        """Adopt an in-flight request drained from a quarantined sibling:
-        replay prompt + generated-so-far through the chunked-prefill
-        resume path (the same machinery preemption uses), token-exact by
-        greedy determinism — the replayed pending token is cross-checked
-        in ``_emit_row`` and any divergence counts in
-        ``migrate_replay_mismatches``.  Returns False (without side
-        effects) when this engine has no capacity right now."""
-        if not self._can_preempt:
-            raise RuntimeError(
-                "migration needs the chunked-prefill resume path: "
-                "construct the engine with chunked=True")
+    def _replay_admit(self, req: Request, *, migrated: bool) -> bool:
+        """Rent a *fresh* slot and replay ``req``'s prompt + generated
+        history through the chunked-prefill resume path — the shared
+        core of fleet migration (:meth:`adopt`) and tier-displacement
+        re-admission.  Token-exact by greedy determinism; the replayed
+        pending token is cross-checked in ``_emit_row`` (mismatches book
+        into ``migrate_replay_mismatches`` or
+        ``preempt_replay_mismatches`` by origin).  Returns False without
+        side effects when there is no capacity right now."""
         slot = self.pool.rent()
         if slot is None:
             return False
         stream, max_new_eff, drop = self._resume_stream(req)
         job = _PrefillJob(req=req, max_new_eff=max_new_eff,
-                          stream=stream, drop_first=drop, migrated=True)
+                          stream=stream, drop_first=drop, migrated=migrated)
         if self.layout is not None:
             plan = self._plan_chain(stream, len(stream) + self._offset,
                                     max_new_eff, rent_now=False)
@@ -2371,8 +2409,148 @@ class ServingEngine:
         self._admit_seq += 1
         self._slot_seq[slot] = self._admit_seq
         self._admit_wall[req.rid] = time.perf_counter()
+        return True
+
+    def adopt(self, req: Request) -> bool:
+        """Adopt an in-flight request drained from a quarantined sibling:
+        replay prompt + generated-so-far through the chunked-prefill
+        resume path (the same machinery preemption uses), token-exact by
+        greedy determinism — the replayed pending token is cross-checked
+        in ``_emit_row`` and any divergence counts in
+        ``migrate_replay_mismatches``.  Returns False (without side
+        effects) when this engine has no capacity right now."""
+        if not self._can_preempt:
+            raise RuntimeError(
+                "migration needs the chunked-prefill resume path: "
+                "construct the engine with chunked=True")
+        if not self._replay_admit(req, migrated=True):
+            return False
         self.migrations_in += 1
         return True
+
+    # -- priority tiers: the async request frontier --------------------------
+    @property
+    def has_work(self) -> bool:
+        """Anything left for an open-loop driver: queued arrivals,
+        displaced victims awaiting re-admission, in-flight or parked
+        requests, or finished-but-unreported ones."""
+        return bool(self._frontier or self._displaced or self.active
+                    or self._parked or self._finished_instant)
+
+    def submit(self, req: Request, now: Optional[float] = None) -> None:
+        """Async frontier entry: enqueue an arrival without blocking.
+        Admission happens tier-aware at the next :meth:`step` (a
+        latency-tier arrival jumps the queue and may displace
+        throughput-tier victims); completions surface through
+        :meth:`poll`.  Stamps the request into the per-tier SLO ledger
+        (:class:`~repro.runtime.accounting.TierAccounting`) — pass
+        ``now`` to replay a recorded arrival trace."""
+        self.sla.arrive(req.rid, req.tier, now=now)
+        self._frontier_rids.add(req.rid)
+        self._frontier.append(req)
+
+    def poll(self) -> list[Request]:
+        """Drain finished frontier-submitted requests (non-blocking)."""
+        done, self._completed = self._completed, []
+        return done
+
+    def _frontier_epilogue(self, finished: list[Request]) -> None:
+        """Post-tick SLO stamping + completion routing for
+        frontier-submitted requests.  Host lists and one
+        ``perf_counter`` only — the tick's sync economy is untouched."""
+        now = time.perf_counter()
+        for req in self.active.values():
+            if req.rid in self._frontier_rids:
+                self.sla.observe(req.rid, len(req.out), now=now)
+        for req in finished:
+            if req.rid in self._frontier_rids:
+                self.sla.observe(req.rid, len(req.out), now=now)
+                self.sla.finish(req.rid)
+                self._frontier_rids.discard(req.rid)
+                self._completed.append(req)
+
+    def _admit_frontier(self) -> None:
+        """Drain the frontier tier-first (host side, between ticks):
+        latency-tier arrivals admit ahead of queue order — displacing
+        throughput-tier victims when the pools are full — then displaced
+        victims re-enter before fresh throughput arrivals (they already
+        hold generated tokens; replaying them promptly is what keeps
+        their streams short), then throughput arrivals admit FIFO until
+        one fails."""
+        keep: list[Request] = []
+        blocked = False
+        for req in self._frontier:
+            if req.tier != "latency":
+                keep.append(req)
+                continue
+            if blocked or not self.admit_displacing(req):
+                keep.append(req)
+                blocked = True
+        self._frontier = keep
+        if blocked:
+            return          # a latency head is starved: nothing jumps it
+        while self._displaced:
+            if not self._replay_admit(self._displaced[0], migrated=False):
+                return
+            self._displaced.pop(0)
+            self.resumes += 1
+        while self._frontier:
+            if not self.admit(self._frontier[0]):
+                return
+            self._frontier.pop(0)
+
+    def admit_displacing(self, req: Request) -> bool:
+        """The tiered admission controller: try a plain admit; when a
+        *latency-tier* arrival cannot rent a slot or blocks, displace
+        throughput-tier victims through the public :meth:`preempt` hook
+        (KV clawback) plus a full slot release, until the arrival fits
+        or no throughput-tier victim remains.  A latency-tier arrival
+        never displaces a latency-tier slot."""
+        if self.admit(req):
+            return True
+        if req.tier != "latency" or not self._can_preempt:
+            return False
+        while True:
+            victim = self._pick_displacement_victim()
+            if victim is None:
+                return False
+            self._displace(victim)
+            if self.admit(req):
+                return True
+
+    def _pick_displacement_victim(self) -> Optional[int]:
+        """Displacement victim for a latency-tier arrival: throughput
+        tier ONLY — by construction a latency arrival never evicts a
+        latency slot (the property the conformance suite asserts).
+        Parked throughput requests go first (they hold a slot but no
+        KV, so displacing them frees a core without clawing back any
+        chain); among active ones the over-commit victim policy applies
+        (fewest tokens generated, ties to the latest admission)."""
+        for slot in self._park_order:
+            if self._parked[slot].tier != "latency":
+                return slot
+        cand = [s for s, r in self.active.items() if r.tier != "latency"]
+        if not cand:
+            return None
+        return min(cand, key=lambda s: (len(self.active[s].out),
+                                        -self._slot_seq.get(s, 0)))
+
+    def _displace(self, slot: int) -> Request:
+        """Fully evict ``slot``'s throughput-tier request — KV *and*
+        core — so a latency-tier arrival can rent both.  An active
+        victim goes through the public :meth:`preempt` hook first
+        (chain clawback + park bookkeeping), then the parked request is
+        pulled off its slot and queued for replay re-admission over the
+        fleet-migration resume path."""
+        if slot not in self._parked:
+            self.preempt(slot)
+        req = self._parked.pop(slot)
+        self._park_order.remove(slot)
+        self.pool.release(slot)
+        req.slot = None
+        self._displaced.append(req)
+        self.displacements += 1
+        return req
 
     def run_to_completion(self, requests: list[Request], max_ticks=10_000,
                           max_wall_s: Optional[float] = None):
@@ -2390,12 +2568,13 @@ class ServingEngine:
         done = []
         start_ticks = self.device_ticks
         t_start = time.perf_counter()
-        while (pending or self.active or self._parked
+        while (pending or self.active or self._parked or self._displaced
                or self._finished_instant) and \
                 self.device_ticks - start_ticks < max_ticks:
             n = self.admit_many(pending)
             del pending[:n]
             if not self.active and not self._parked \
+                    and not self._displaced \
                     and not self._finished_instant:
                 if pending:    # no capacity rentable and none draining
                     raise RuntimeError(self._stuck_report(pending))
@@ -2412,9 +2591,10 @@ class ServingEngine:
         if self._finished_instant:     # complete, just not yet reported
             done += self._finished_instant
             self._finished_instant = []
-        if pending or self.active or self._parked:
+        if pending or self.active or self._parked or self._displaced:
             rids = sorted([r.rid for r in self.active.values()] +
                           [r.rid for r in self._parked.values()] +
+                          [r.rid for r in self._displaced] +
                           [r.rid for r in pending])
             raise RuntimeError(
                 f"max_ticks={max_ticks} exhausted with {len(self.active)} "
@@ -2435,7 +2615,8 @@ class ServingEngine:
         lines.append(f"slot pool: {self.pool.n} slots, "
                      f"{self.pool.available} available")
         now = time.perf_counter()
-        in_flight = list(self.active.values()) + list(self._parked.values())
+        in_flight = (list(self.active.values()) +
+                     list(self._parked.values()) + list(self._displaced))
         for r in in_flight[:8]:
             age = now - self._admit_wall.get(r.rid, now)
             lines.append(f"  in flight rid {r.rid}: {len(r.out)} tokens "
@@ -2483,6 +2664,7 @@ class ServingEngine:
         self.preemptions = self.resumes = 0
         self.preempted_tokens = self.preempt_replay_mismatches = 0
         self.migrations_in = self.migrate_replay_mismatches = 0
+        self.displacements = 0
         self.occ_ticks = self.occ_slot_ticks = 0
         if self.layout is not None:
             # the block high-water mark restarts from what is in use now

@@ -613,20 +613,32 @@ class FleetSupervisor:
 
     # -- routing -----------------------------------------------------------
     def _busy(self, e: serve_lib.ServingEngine) -> bool:
-        return bool(e.active or e._parked or e._finished_instant)
+        return bool(e.active or e._parked or e._displaced
+                    or e._finished_instant)
 
     def healthy(self, i: int) -> bool:
         return self.health[i]["state"] == "healthy"
 
-    def route_order(self) -> list[int]:
+    def route_order(self, tier: str = "throughput",
+                    loads: Optional[list] = None) -> list[int]:
         """Replica indices in routing-preference order (see class doc);
-        quarantined replicas are not candidates."""
-        loads = [e.load() for e in self.engines]
+        quarantined replicas are not candidates.  ``loads`` (one
+        ``ServingEngine.load()`` entry per replica) lets an admit drain
+        reuse a single ledger sweep across many admissions instead of
+        re-reading every replica per request.  Latency-tier routing
+        drops the parked/pressure penalty: a latency arrival displaces
+        its way in, so a pressured replica with capacity is still a
+        fine target — what matters is free slots and blocks."""
+        if loads is None:
+            loads = [e.load() for e in self.engines]
 
         def key(i):
             ld = loads[i]
             blocks = ld["free_blocks"] if ld["free_blocks"] is not None \
                 else ld["free_slots"]
+            if tier == "latency":
+                return (True, ld["free_slots"] > 0, blocks,
+                        -self.routed[i])
             penalized = ld["parked"] > 0 or ld["pressure"]
             return (not penalized, ld["free_slots"] > 0, blocks,
                     -self.routed[i])
@@ -636,19 +648,45 @@ class FleetSupervisor:
 
     def admit_many(self, pending: list[serve_lib.Request]) -> int:
         """Route-and-admit queued requests, head of queue first, until no
-        replica takes the head.  Returns the number admitted (the caller
-        drops that prefix, `ServingEngine.admit_many` convention)."""
-        n = 0
-        while n < len(pending):
-            req = pending[n]
-            for i in self.route_order():
-                if self.engines[i].admit(req):
+        replica takes the head — except latency-tier requests, which skip
+        the queue-order admit barrier and may displace throughput-tier
+        victims (``ServingEngine.admit_displacing``).  The ledgers are
+        swept once per drain (``loads``) and only the chosen replica's
+        entry is refreshed per admission.  Returns the number admitted;
+        admitted requests are compacted to the queue's prefix first, so
+        the caller's ``del pending[:n]`` contract still holds."""
+        if not pending:
+            return 0
+        loads = [e.load() for e in self.engines]
+
+        def try_admit(req: serve_lib.Request, displacing: bool) -> bool:
+            for i in self.route_order(tier=req.tier, loads=loads):
+                e = self.engines[i]
+                if displacing and req.tier == "latency" and e._can_preempt:
+                    ok = e.admit_displacing(req)
+                else:
+                    ok = e.admit(req)
+                if ok:
                     self.routed[i] += 1
-                    n += 1
-                    break
-            else:
-                break
-        return n
+                    loads[i] = e.load()
+                    return True
+            return False
+
+        admitted: list[int] = []
+        barrier = False
+        for k, req in enumerate(pending):
+            if not barrier:
+                if try_admit(req, displacing=req.tier == "latency"):
+                    admitted.append(k)
+                else:
+                    barrier = True       # FIFO holds for throughput tier
+            elif req.tier == "latency" and try_admit(req, displacing=True):
+                admitted.append(k)       # latency heads jump the barrier
+        if admitted and barrier:
+            taken = set(admitted)
+            rest = [r for k, r in enumerate(pending) if k not in taken]
+            pending[:] = [pending[k] for k in admitted] + rest
+        return len(admitted)
 
     # -- chaos & health ----------------------------------------------------
     def arm_faults(self, plan) -> None:
@@ -685,7 +723,7 @@ class FleetSupervisor:
         self.replica_pool.disable(self._replica_units[i])
         self.health_events.append(Event("quarantine", i, detail))
         drained = list(e.active.values()) \
-            + [e._parked[s] for s in e._park_order]
+            + [e._parked[s] for s in e._park_order] + list(e._displaced)
         for req in drained:
             req.slot = None
             self._migration_queue.append(
@@ -696,6 +734,7 @@ class FleetSupervisor:
         e._jobs.clear()
         e._parked.clear()
         e._park_order.clear()
+        e._displaced.clear()
         e._need_first.clear()
 
     def _drain_migrations(self) -> None:
@@ -712,7 +751,7 @@ class FleetSupervisor:
             req = item["req"]
             adopted = False
             had_capacity = False
-            for i in self.route_order():
+            for i in self.route_order(tier=req.tier):
                 e2 = self.engines[i]
                 if not e2._can_preempt:
                     continue   # no resume path lowered: not a candidate
@@ -862,10 +901,13 @@ class FleetSupervisor:
                 break
             done += self.step()
             if ticks() > max_ticks:
+                n_parked = sum(len(e._parked) + len(e._displaced)
+                               for e in self.engines)
                 raise RuntimeError(
                     f"max_ticks={max_ticks} exhausted with "
-                    f"{sum(len(e.active) for e in self.engines)} active "
-                    f"and {len(pending)} pending requests undrained\n"
+                    f"{sum(len(e.active) for e in self.engines)} active, "
+                    f"{n_parked} preempted and {len(pending)} pending "
+                    f"requests undrained\n"
                     + self._stuck_report(pending))
             if max_wall_s is not None \
                     and time.perf_counter() - t_start > max_wall_s:
@@ -888,6 +930,10 @@ class FleetSupervisor:
             state = h["state"] + (f" ({h['reason']})" if h["reason"]
                                   else "")
             lines.append(f"  replica {i}: {state}; load {e.load()}")
+            parked = [e._parked[s].rid for s in e._park_order] \
+                + [r.rid for r in e._displaced]
+            if parked:
+                lines.append(f"    preempted rids {parked}")
         if self._migration_queue:
             rids = [item["req"].rid for item in self._migration_queue]
             lines.append(f"  migration queue: rids {rids}")

@@ -1,4 +1,5 @@
-"""AST lint rules: host-sync, tracer-branch, kernel-oracle, fault-hook."""
+"""AST lint rules: host-sync, tracer-branch, kernel-oracle, fault-hook,
+tier-host-side."""
 from __future__ import annotations
 
 import os
@@ -7,6 +8,7 @@ import textwrap
 from repro.analysis.lint import (lint_fault_hooks_source,
                                  lint_kernel_manifest, lint_repo,
                                  lint_tick_builder_source,
+                                 lint_tier_reads_source,
                                  lint_transition_source)
 
 
@@ -179,6 +181,42 @@ def test_kernel_missing_ref_and_stale_entry_fire(tmp_path):
     assert "missing ref.py" in msgs
     assert "not listed" in msgs            # ghost has no manifest entry
     assert "stale manifest entry" in msgs  # real entries have no package
+
+
+# ---------------------------------------------------------------- L5 --
+def test_tier_read_in_builder_fires():
+    # Request.tier is host-side scheduling metadata: a tick builder that
+    # reads it would bake the scheduling class into compiled code
+    src = textwrap.dedent("""
+        def build_decode_step(cfg, req):
+            def step(params, tok, cache):
+                if req.tier == "latency":
+                    tok = tok + 1
+                return tok, cache
+            return step
+    """)
+    bad = _violations(lint_tier_reads_source(src))
+    assert bad
+    assert "build_decode_step" in bad[0].subject
+    assert "host-side" in bad[0].message
+
+
+def test_tier_read_host_side_is_clean():
+    # the admission controller reads .tier freely — only builders are
+    # traced code
+    src = textwrap.dedent("""
+        def build_decode_step(cfg):
+            def step(params, tok, cache):
+                return tok, cache
+            return step
+
+        class Engine:
+            def admit_displacing(self, req):
+                if req.tier == "latency":
+                    return self._displace_and_admit(req)
+                return self.admit(req)
+    """)
+    assert not lint_tier_reads_source(src)
 
 
 # ------------------------------------------------------------- repo --

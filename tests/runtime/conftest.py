@@ -110,7 +110,7 @@ class ServeHarness:
         {rid: tokens}."""
         pending = list(requests)
         done, steps = [], 0
-        while pending or eng.active or eng._parked \
+        while pending or eng.active or eng._parked or eng._displaced \
                 or eng._finished_instant:
             n = eng.admit_many(pending)
             del pending[:n]
@@ -134,6 +134,7 @@ class ServeHarness:
         free mask / tables in agreement, replays token-exact."""
         assert eng.pool.used == 0
         assert not eng._parked and not eng._jobs
+        assert not eng._displaced and not eng._frontier
         assert eng.preempt_replay_mismatches == 0
         assert eng.migrate_replay_mismatches == 0
         if eng.layout is not None:

@@ -79,11 +79,48 @@ def test_routing_is_preemption_aware_and_round_robin(serve_setup,
     fleet.engines[0]._parked[0] = object()
     order = fleet.route_order()
     assert order[0] == 2 and set(order[1:]) == {0, 1}
+    # a precomputed ledger sweep routes identically to a fresh one (the
+    # admit-drain fast path must not change any decision)
+    loads = [e.load() for e in fleet.engines]
+    assert fleet.route_order(loads=loads) == fleet.route_order()
+    # latency-tier routing ignores the parked/pressure penalty: with
+    # equal capacity everywhere only the round-robin count orders the
+    # replicas (0 routed once already, so it goes last)
+    assert fleet.route_order(tier="latency") == [1, 2, 0]
     fleet.engines[0]._parked.clear()
     fleet.engines[1]._pressure = False
     # no free slots demotes below a replica with capacity
     fleet.engines[2].pool.rent_many(N_SLOTS)
     assert fleet.route_order()[-1] == 2
+    assert fleet.route_order(tier="latency")[-1] == 2
+
+
+def test_admit_drain_sweeps_ledgers_once(serve_setup, serve_harness):
+    """Satellite contract: one ``load()`` sweep per drain plus one
+    refresh per admission — not a full sweep per admitted request —
+    with the routing decisions unchanged (round-robin under equal
+    load)."""
+    cfg, params = serve_setup
+    fleet = FleetSupervisor(params, cfg, n_replicas=2, model=1,
+                            devices=jax.devices()[:1], **_kw(True))
+    calls = {"n": 0}
+    for e in fleet.engines:
+        orig = e.load
+
+        def counting(orig=orig):
+            calls["n"] += 1
+            return orig()
+
+        e.load = counting
+    pending = serve_harness.pressure_requests(4)
+    n = fleet.admit_many(pending)
+    assert n == 4
+    # <= one sweep + one per-admission refresh (the pre-fix O(pending x
+    # replicas) drain would have paid >= 8 here before the final sweep)
+    assert calls["n"] <= len(fleet.engines) + n
+    # equal loads round-robin across the replicas exactly as before
+    assert fleet.routed == [2, 2]
+    assert sum(len(e.active) for e in fleet.engines) == 4
 
 
 def test_fleet_stats_sum_per_replica_ledgers(serve_setup, serve_harness):
@@ -232,3 +269,113 @@ def test_all_replicas_down_dead_letters_not_hangs(serve_setup,
     assert fh["dead_letters"]                   # something was shed
     assert_health_events(fleet.health_events,
                          expect_kinds=("quarantine", "dead_letter"))
+
+
+# -- fleet diagnosis covers parked requests (satellite bugfix) ---------------
+
+def test_fleet_stuck_report_names_parked_requests(serve_setup,
+                                                  serve_harness):
+    """Regression: preempted/parked requests used to be invisible in
+    the fleet-level diagnosis — only ``e.active`` was counted.  Park
+    one and assert both the max_ticks error and the stuck report name
+    it."""
+    import pytest
+
+    cfg, params = serve_setup
+    fleet = FleetSupervisor(params, cfg, n_replicas=1, model=1,
+                            devices=jax.devices()[:1], **_kw(True))
+    reqs = serve_harness.pressure_requests(3)
+    assert fleet.admit_many(reqs) == 3
+    parked_rid = fleet.engines[0].preempt()
+    assert parked_rid is not None
+
+    report = fleet._stuck_report([])
+    assert f"preempted rids [{parked_rid}]" in report
+
+    with pytest.raises(RuntimeError) as err:
+        fleet.run_to_completion([], max_ticks=0)
+    msg = str(err.value)
+    assert "1 preempted" in msg
+    assert f"preempted rids [{parked_rid}]" in msg
+
+
+# -- same-tick quarantine/finish exactly-once (satellite bugfix) -------------
+
+def test_deadline_quarantine_on_finishing_tick_delivers_once(
+        serve_setup, serve_harness, assert_health_events):
+    """A request that finishes on the exact tick its replica trips the
+    deadline watchdog must be delivered exactly once: it exited the
+    engine's in-flight state inside ``e.step()`` before the deadline
+    check, so the quarantine drain has nothing to re-queue."""
+    cfg, params = serve_setup
+    fleet = FleetSupervisor(params, cfg, n_replicas=2, model=1,
+                            devices=jax.devices()[:1], **_kw(True))
+    req = serve_harness.pressure_requests(1)[0]
+    req.max_new = 1                       # finishes on its first tick
+    assert fleet.admit_many([req]) == 1
+    fleet.tick_deadline_s = 0.0           # every tick now "exceeds"
+    done = fleet.step()
+    assert [r.rid for r in done] == [req.rid]
+    assert fleet.health[0]["state"] == "quarantined"
+    assert fleet._migration_queue == []   # nothing left to re-queue
+    assert fleet.dead_letters == []
+    assert fleet.step() == []             # and never delivered again
+    assert_health_events(fleet.health_events,
+                         expect_kinds=("quarantine",))
+
+
+def test_instant_finish_survives_tick_exception(serve_setup,
+                                                serve_harness):
+    """Regression for the entry-drain race: ``_step`` drains
+    ``_finished_instant`` before ticking, so a tick exception used to
+    lose any instant finish drained that step — the quarantine rescue
+    saw an empty list.  The drain now restores on raise: the rescue
+    delivers it exactly once."""
+    import numpy as np
+
+    from repro.runtime import faults
+    from repro.runtime.serve import Request
+
+    cfg, params = serve_setup
+    fleet = FleetSupervisor(params, cfg, n_replicas=1, model=1,
+                            devices=jax.devices()[:1], **_kw(True))
+    fleet.arm_faults(faults.FaultPlan(
+        [faults.FaultEvent(kind="tick_exception", tick=0, replica=0)]))
+    normal = serve_harness.pressure_requests(1)[0]
+    instant = Request(99, np.array([3, 4], np.int32), max_new=0)
+    done, _ = fleet.run_to_completion([normal, instant])
+    # the instant finish is rescued through quarantine exactly once;
+    # the in-flight request dead-letters (no second replica to adopt)
+    assert [r.rid for r in done] == [instant.rid]
+    assert sorted(r.rid for r in fleet.dead_letters) == [normal.rid]
+
+
+# -- tier-aware fleet admission (tentpole) -----------------------------------
+
+def test_latency_tier_skips_fleet_admit_barrier(serve_setup,
+                                                serve_harness):
+    """A latency-tier request behind a blocked throughput head jumps
+    the queue-order admit barrier, displacing a throughput victim; the
+    compaction keeps the caller's ``del pending[:n]`` contract."""
+    from repro.runtime.serve import Request
+
+    cfg, params = serve_setup
+    fleet = FleetSupervisor(params, cfg, n_replicas=2, model=1,
+                            devices=jax.devices()[:1], **_kw(True))
+    fill = serve_harness.pressure_requests(6)      # 2 replicas x 3 slots
+    assert fleet.admit_many(fill) == 6
+    blocked = serve_harness.pressure_requests(2, seed=9)
+    head, tail = blocked
+    latency = Request(50, serve_harness.pressure_requests(1)[0].prompt,
+                      max_new=6, tier="latency")
+    pending = [head, latency, tail]
+    n = fleet.admit_many(pending)
+    assert n == 1
+    assert pending[0] is latency           # compacted to the prefix
+    assert pending[1:] == [head, tail]     # FIFO preserved behind it
+    del pending[:n]                        # the caller's contract
+    assert sum(e.displacements for e in fleet.engines) == 1
+    displaced = [r for e in fleet.engines for r in e._displaced]
+    assert all(r.tier == "throughput" for r in displaced)
+    assert any(r.rid == latency.rid
+               for e in fleet.engines for r in e.active.values())

@@ -1,0 +1,251 @@
+"""Priority/SLA tiers behind the async request frontier.
+
+Four contracts:
+
+* **token exactness** — the tiered admission controller (latency-tier
+  arrivals displacing throughput-tier victims mid-decode) must not
+  change a single token vs the untiered oracle, on every
+  {layout} x {decode} cell.  Tier is host-side scheduling metadata
+  only (the ``lint/tier-host-side`` rule proves no traced tick reads
+  it), so exactness holds by construction — these cells check the
+  host-side replay machinery keeps its end of the bargain.
+* **tier isolation** — a latency-tier arrival never displaces another
+  latency-tier slot while any throughput-tier victim exists (property
+  test over randomized slot states + a behavioral check).
+* **open-loop semantics** — ``submit()`` / ``step()`` / ``poll()``
+  deliver every request exactly once, and the engine drains clean.
+* **SLO accounting** — ``TierAccounting`` stamps TTFT on the first
+  output token and attributes inter-token gaps per token even when a
+  chunk emits several at one sync.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.runtime import serve as serve_lib
+from repro.runtime.accounting import TierAccounting
+from repro.runtime.serve import Request
+
+N_SLOTS = 3
+MAX_SEQ = 48
+CHUNK = 2
+
+
+def _engine_kw(layout, decode):
+    kw = dict(n_slots=N_SLOTS, max_seq=MAX_SEQ, chunk=CHUNK,
+              chunked_prefill=True, prefill_chunk_tokens=4)
+    if layout == "paged":
+        kw.update(paged=True, block_size=8, n_blocks=12, overcommit=True)
+    if decode == "speculative":
+        kw.update(speculative=True, spec_k=3)
+    return kw
+
+
+def _tiered(requests, latency_rids):
+    return [Request(r.rid, r.prompt, max_new=r.max_new,
+                    tier="latency" if r.rid in latency_rids
+                    else "throughput")
+            for r in requests]
+
+
+def _drive_frontier(eng, arrivals, max_steps=2000):
+    """Open-loop drive: ``arrivals`` is (step, request) pairs; each
+    request is submitted at its step index (0 = before the first tick),
+    the engine ticks until it drains, and completions come back through
+    poll().  Returns {rid: tokens}."""
+    out = {}
+    steps = 0
+    pending = sorted(arrivals, key=lambda kv: (kv[0], kv[1].rid))
+    while pending or eng.has_work:
+        while pending and pending[0][0] <= steps:
+            eng.submit(pending.pop(0)[1])
+        eng.step()
+        for req in eng.poll():
+            assert req.rid not in out, f"rid {req.rid} delivered twice"
+            out[req.rid] = req.out
+        steps += 1
+        assert steps < max_steps, "frontier drive did not converge"
+    return out
+
+
+# -- open-loop frontier semantics --------------------------------------------
+
+def test_frontier_submit_poll_token_exact(serve_setup, serve_harness):
+    """All-throughput open-loop run == the closed-loop batch run: the
+    frontier changes *when* requests enter, never what they decode."""
+    cfg, params = serve_setup
+    reqs = serve_harness.pressure_requests()
+    want, _ = serve_harness.run(params, cfg, reqs,
+                                **_engine_kw("contiguous", "greedy"))
+    eng = serve_lib.ServingEngine(params, cfg,
+                                  **_engine_kw("contiguous", "greedy"))
+    arrive = [(2 * i, r) for i, r in
+              enumerate(serve_harness.pressure_requests())]
+    got = _drive_frontier(eng, arrive)
+    assert got == want
+    serve_harness.assert_drained(eng)
+    rep = eng.sla.report()
+    assert rep["throughput"]["n"] == len(reqs)
+    assert rep["throughput"]["finished"] == len(reqs)
+    assert rep["throughput"]["ttft_p99"] > 0
+    # no latency-tier traffic: the tier reports empty, not absent (the
+    # bench JSON schema stays stable across traces)
+    assert rep["latency"]["n"] == 0
+    assert rep["latency"]["ttft_p99"] is None
+
+
+def test_instant_finish_delivered_through_poll(serve_setup):
+    """A submitted request with no decode budget still comes back out
+    of poll() exactly once, with its SLO clock closed."""
+    cfg, params = serve_setup
+    eng = serve_lib.ServingEngine(params, cfg,
+                                  **_engine_kw("contiguous", "greedy"))
+    eng.submit(Request(0, np.array([3, 4, 5], np.int32), max_new=0))
+    out = _drive_frontier(eng, [])
+    assert out == {0: []}
+    assert eng.sla.report()["throughput"]["finished"] == 1
+
+
+# -- tiered conformance cells ------------------------------------------------
+
+TIER_CELLS = [("contiguous", "greedy"), ("contiguous", "speculative"),
+              ("paged", "greedy"), ("paged", "speculative")]
+
+
+@pytest.mark.parametrize("layout,decode", TIER_CELLS,
+                         ids=["-".join(c) for c in TIER_CELLS])
+def test_tiered_admission_token_exact(serve_setup, serve_harness, layout,
+                                      decode):
+    """Latency-tier arrivals land mid-decode on saturated slots, the
+    controller displaces throughput-tier victims, and every request
+    still decodes the oracle's exact tokens."""
+    cfg, params = serve_setup
+    reqs = serve_harness.pressure_requests()
+    # uncontended untiered oracle: plain engine, big pool
+    want, oracle_eng = serve_harness.run(
+        params, cfg, serve_harness.pressure_requests(),
+        n_slots=N_SLOTS, max_seq=MAX_SEQ, chunk=CHUNK)
+    serve_harness.assert_drained(oracle_eng)
+
+    eng = serve_lib.ServingEngine(params, cfg, **_engine_kw(layout, decode))
+    tiered = _tiered(serve_harness.pressure_requests(),
+                     latency_rids={3, 5})
+    # throughput burst up front saturates the slots; the latency pair
+    # arrives mid-decode and must displace its way in
+    arrive = [(0 if r.tier != "latency" else 4, r) for r in tiered]
+    got = _drive_frontier(eng, arrive)
+
+    assert got == want, (layout, decode)
+    assert eng.displacements >= 1          # the controller really fired
+    assert eng.preempt_replay_mismatches == 0
+    serve_harness.assert_drained(eng)
+
+
+# -- tier isolation property -------------------------------------------------
+
+def _bare_engine(active_tiers, parked_tiers):
+    """A victim-policy harness: just the four attrs the picker reads."""
+    eng = object.__new__(serve_lib.ServingEngine)
+    eng.active, eng._parked = {}, {}
+    eng._park_order, eng._slot_seq = [], {}
+    slot = 0
+    for tier in active_tiers:
+        eng.active[slot] = Request(slot, np.array([1], np.int32),
+                                   tier=tier)
+        eng._slot_seq[slot] = slot
+        slot += 1
+    for tier in parked_tiers:
+        eng._parked[slot] = Request(slot, np.array([1], np.int32),
+                                    tier=tier)
+        eng._park_order.append(slot)
+        slot += 1
+    return eng
+
+
+def test_latency_never_displaces_latency_property():
+    """Over randomized slot states: the picked victim is never
+    latency-tier, and None only when every candidate is latency-tier.
+    Repeated displacement drains *all* throughput victims before the
+    picker gives up."""
+    rng = np.random.default_rng(11)
+    for _ in range(200):
+        tiers = lambda n: [("latency", "throughput")[rng.integers(2)]
+                           for _ in range(n)]
+        eng = _bare_engine(tiers(int(rng.integers(0, 4))),
+                           tiers(int(rng.integers(0, 4))))
+        victims = []
+        while True:
+            slot = eng._pick_displacement_victim()
+            if slot is None:
+                break
+            victim = eng._parked.pop(slot) if slot in eng._parked \
+                else eng.active.pop(slot)
+            if slot in eng._park_order:
+                eng._park_order.remove(slot)
+            victims.append(victim)
+        assert all(v.tier == "throughput" for v in victims)
+        # nothing but latency-tier requests survive the drain
+        left = list(eng.active.values()) + list(eng._parked.values())
+        assert all(r.tier == "latency" for r in left)
+
+
+def test_all_latency_slots_queue_instead_of_displacing(serve_setup,
+                                                       serve_harness):
+    """Behavioral check on a real engine: with every slot held by
+    latency-tier requests, a new latency arrival waits its turn — no
+    displacement, no preemption, and still token-exact."""
+    cfg, params = serve_setup
+    reqs = serve_harness.pressure_requests(4)
+    want, _ = serve_harness.run(params, cfg,
+                                serve_harness.pressure_requests(4),
+                                n_slots=N_SLOTS, max_seq=MAX_SEQ,
+                                chunk=CHUNK)
+    eng = serve_lib.ServingEngine(params, cfg,
+                                  **_engine_kw("contiguous", "greedy"))
+    tiered = _tiered(reqs, latency_rids={r.rid for r in reqs})
+    arrive = [(0 if r.rid < 3 else 2, r) for r in tiered]
+    got = _drive_frontier(eng, arrive)
+    assert got == want
+    assert eng.displacements == 0
+    assert eng.preemptions == 0
+    serve_harness.assert_drained(eng)
+
+
+# -- SLO accounting ----------------------------------------------------------
+
+def test_tier_accounting_ttft_and_gap_attribution():
+    acc = TierAccounting()
+    acc.arrive(1, "latency", now=10.0)
+    acc.arrive(2, "throughput", now=10.0)
+    # rid 1: first token at t=10.5 -> TTFT 0.5; then 2 tokens in one
+    # 1.0s chunk -> two 0.5s gaps
+    acc.observe(1, 1, now=10.5)
+    acc.observe(1, 3, now=11.5)
+    acc.finish(1)
+    # rid 2: 3 tokens all at the first sync — TTFT 2.0, the remaining
+    # two tokens split the same instant (0.0 gaps)
+    acc.observe(2, 3, now=12.0)
+    rep = acc.report()
+    assert rep["latency"]["ttft_p99"] == pytest.approx(0.5)
+    assert rep["latency"]["inter_token_p50"] == pytest.approx(0.5)
+    assert rep["latency"]["finished"] == 1
+    assert rep["throughput"]["ttft_p99"] == pytest.approx(2.0)
+    assert rep["throughput"]["inter_token_p99"] == pytest.approx(0.0)
+    assert rep["throughput"]["finished"] == 0
+
+
+def test_tier_accounting_rejects_unknown_tier():
+    with pytest.raises(ValueError, match="tier"):
+        TierAccounting().arrive(1, "platinum")
+
+
+def test_no_growth_observation_is_free():
+    acc = TierAccounting()
+    acc.arrive(1, "latency", now=0.0)
+    acc.observe(1, 0, now=5.0)          # no tokens yet: no TTFT stamp
+    acc.observe(1, 1, now=7.0)
+    acc.observe(1, 1, now=9.0)          # repeat n_out: no gap recorded
+    rep = acc.report()
+    assert rep["latency"]["ttft_p99"] == pytest.approx(7.0)
+    assert rep["latency"]["inter_token_p99"] is None
